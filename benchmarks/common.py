@@ -1,0 +1,25 @@
+"""Benchmark helpers: timing + CSV emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+ROWS: List[Tuple[str, float, str]] = []
+
+
+def timeit(fn: Callable, repeats: int = 3, warmup: int = 1) -> float:
+    """Median wall time in microseconds."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,80 @@
+"""Fig 10: processing time with/without the update (delta-maintenance)
+procedure, plus paper-faithful multinomial delta vs the Poisson-exact path
+(the beyond-paper optimization, DESIGN.md §7.1).  Warm-JIT timing."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import (Mean, MultinomialDeltaBootstrap, bootstrap,
+                        poisson_delta_extend, poisson_delta_init,
+                        poisson_delta_result)
+from repro.data import synthetic_numeric
+
+
+def _recompute(data, key, B):
+    r = bootstrap(data, Mean(), B=B, key=key)
+    jax.block_until_ready(r.thetas)
+    return r
+
+
+def _delta_update(pd, delta):
+    pd = poisson_delta_extend(pd, delta)
+    res = poisson_delta_result(pd)
+    jax.block_until_ready(res.thetas)
+    return pd, res
+
+
+def run() -> None:
+    key = jax.random.PRNGKey(6)
+    B = 32
+    for total in (100_000, 400_000, 1_600_000):
+        data = jnp.asarray(synthetic_numeric(total, 10.0, 2.0, seed=9))
+        half = total // 2
+
+        # WITHOUT optimization: recompute the whole bootstrap over s'
+        _recompute(data, key, B)                         # warm
+        t0 = time.perf_counter()
+        _recompute(data, key, B)
+        t_without = time.perf_counter() - t0
+
+        # WITH: states already hold s; timed section = add Δs only
+        pd = poisson_delta_init(Mean(), B, 1, key)
+        pd = poisson_delta_extend(pd, data[:half])
+        _delta_update(pd, data[half:])                   # warm (same shapes)
+        pd = poisson_delta_init(Mean(), B, 1, key)
+        pd = poisson_delta_extend(pd, data[:half])
+        jax.block_until_ready(pd.states.s1)
+        t0 = time.perf_counter()
+        _delta_update(pd, data[half:])
+        t_with = time.perf_counter() - t0
+
+        emit(f"fig10_without_opt_N{total}", t_without * 1e6, "")
+        emit(f"fig10_with_opt_N{total}", t_with * 1e6,
+             f"speedup={t_without / max(t_with, 1e-9):.2f}x")
+
+    # faithful §4.1 multinomial delta (sketch) vs Poisson-exact delta:
+    # timed section = ONE extension of an existing sample by Δs
+    data_np = synthetic_numeric(60_000, 10.0, 2.0, seed=10)
+    mdb = MultinomialDeltaBootstrap(Mean(), B=16, seed=11)
+    mdb.extend(data_np[:30_000])
+    t0 = time.perf_counter()
+    mdb.extend(data_np[30_000:])
+    _ = mdb.result()
+    t_multi = time.perf_counter() - t0
+
+    pd = poisson_delta_init(Mean(), 16, 1, key)
+    pd = poisson_delta_extend(pd, jnp.asarray(data_np[:30_000]))
+    _delta_update(pd, jnp.asarray(data_np[30_000:]))     # warm
+    pd = poisson_delta_init(Mean(), 16, 1, key)
+    pd = poisson_delta_extend(pd, jnp.asarray(data_np[:30_000]))
+    jax.block_until_ready(pd.states.s1)
+    t0 = time.perf_counter()
+    _delta_update(pd, jnp.asarray(data_np[30_000:]))
+    t_pois = time.perf_counter() - t0
+    emit("fig10_multinomial_sketch_delta", t_multi * 1e6,
+         f"disk_accesses={mdb.disk_accesses}")
+    emit("fig10_poisson_exact_delta", t_pois * 1e6,
+         f"speedup_vs_faithful={t_multi / max(t_pois, 1e-9):.2f}x")

@@ -1,0 +1,27 @@
+"""Fig 2: effect of B (left) and n (right) on c_v."""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.core import Mean, bootstrap, bootstrap_thetas, weights_for
+from repro.core.accuracy import coefficient_of_variation
+from repro.data import synthetic_numeric
+
+
+def run() -> None:
+    key = jax.random.PRNGKey(0)
+    x = jnp.asarray(synthetic_numeric(20_000, 10.0, 2.0, seed=0))
+
+    # (a) B vs c_v at fixed n = 2000 (nested prefixes of one weight draw)
+    n = 2000
+    w = weights_for("poisson", key, 256, n)
+    thetas = bootstrap_thetas(x[:n], Mean(), w)
+    for B in (2, 4, 8, 16, 32, 64, 128, 256):
+        cv = float(coefficient_of_variation(thetas[:B]))
+        emit(f"fig2a_cv_at_B{B}", 0.0, f"cv={cv:.5f}")
+
+    # (b) n vs c_v at fixed B = 32
+    for n_i in (125, 250, 500, 1000, 2000, 4000, 8000, 16000):
+        r = bootstrap(x[:n_i], Mean(), B=32, key=key)
+        us = timeit(lambda: bootstrap(x[:n_i], Mean(), B=32, key=key))
+        emit(f"fig2b_cv_at_n{n_i}", us, f"cv={r.cv:.5f}")

@@ -1,0 +1,27 @@
+"""Fig 3: work saved by the intra-iteration optimization vs sample size."""
+import jax
+
+from benchmarks.common import emit, timeit
+from repro.core import Mean, bootstrap, optimal_y, shared_base_bootstrap, \
+    work_saved
+from repro.data import synthetic_numeric
+import jax.numpy as jnp
+
+
+def run() -> None:
+    key = jax.random.PRNGKey(1)
+    # analytic curve (Eq. 4): work saved at optimal y per n
+    for n in (10, 29, 50, 100, 500, 1000, 5000):
+        y, w = optimal_y(n)
+        emit(f"fig3_worksaved_n{n}", 0.0,
+             f"y*={y:.3f};saved={w:.4f};p_shared={work_saved(n, y) / max(y, 1e-9):.4f}")
+
+    # measured: shared-base bootstrap vs standard (same B, n)
+    x = jnp.asarray(synthetic_numeric(4000, 10, 2, seed=1))
+    us_std = timeit(lambda: jax.block_until_ready(
+        bootstrap(x, Mean(), B=64, key=key, engine="multinomial").thetas))
+    us_int = timeit(lambda: jax.block_until_ready(
+        shared_base_bootstrap(x, Mean(), B=64, key=key).thetas))
+    emit("fig3_standard_bootstrap", us_std, "")
+    emit("fig3_shared_base_bootstrap", us_int,
+         f"speedup={us_std / max(us_int, 1e-9):.2f}x")

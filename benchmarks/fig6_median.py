@@ -1,0 +1,68 @@
+"""Fig 6: median — stock (full scan) vs naive re-drawn bootstrap vs
+optimized (delta-maintained) resampling.  Warm-JIT timing + row accounting
+(see fig5 header for methodology)."""
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import (Quantile, bootstrap, poisson_delta_extend,
+                        poisson_delta_init, poisson_delta_result)
+from repro.data import PreMapSampler, ShardedStore, synthetic_numeric
+import jax.numpy as jnp
+
+
+def _naive(data, key, q, sigma):
+    sampler = PreMapSampler(ShardedStore.from_array(data, 65_536), seed=5)
+    n, rows = 2048, 0
+    while True:
+        x = sampler.take(0, n)                  # re-read + redraw (naive)
+        rows += n
+        res = bootstrap(x, q, B=32, key=key)
+        if res.cv <= sigma or n * 2 > sampler.N:
+            return res, rows
+        n *= 2
+
+
+def _optimized(data, key, q, sigma):
+    sampler = PreMapSampler(ShardedStore.from_array(data, 65_536), seed=5)
+    pd = poisson_delta_init(q, 32, 1, key)
+    n_have, n, rows = 0, 2048, 0
+    while True:
+        pd = poisson_delta_extend(pd, sampler.take(n_have, n))
+        rows += n - n_have
+        n_have = n
+        res = poisson_delta_result(pd)
+        if res.cv <= sigma or n_have * 2 > sampler.N:
+            return res, rows
+        n = min(sampler.N, n_have * 2)
+
+
+def run() -> None:
+    key = jax.random.PRNGKey(3)
+    N, sigma = 2_000_000, 0.003
+    data = synthetic_numeric(N, 10.0, 2.0, seed=4)
+    q = Quantile(0.5, lo=0.0, hi=20.0)
+
+    t0 = time.perf_counter()
+    true = float(np.median(ShardedStore.from_array(data, 65_536).read_all()))
+    t_full = time.perf_counter() - t0
+    emit("fig6_median_stock", t_full * 1e6, f"value={true:.4f};rows={N}")
+
+    _naive(data, key, q, sigma)                       # warm
+    t0 = time.perf_counter()
+    res, rows_naive = _naive(data, key, q, sigma)
+    t_naive = time.perf_counter() - t0
+    emit("fig6_median_naive_bootstrap", t_naive * 1e6,
+         f"rows={rows_naive};row_speedup={N / rows_naive:.1f}x;"
+         f"rel_err={abs(float(np.ravel(res.estimate)[0]) - true) / true:.4f}")
+
+    _optimized(data, key, q, sigma)                   # warm
+    t0 = time.perf_counter()
+    res, rows_opt = _optimized(data, key, q, sigma)
+    t_opt = time.perf_counter() - t0
+    emit("fig6_median_optimized", t_opt * 1e6,
+         f"rows={rows_opt};row_speedup={N / rows_opt:.1f}x;"
+         f"wall_speedup_vs_naive={t_naive / max(t_opt, 1e-9):.2f}x;"
+         f"rel_err={abs(float(np.ravel(res.estimate)[0]) - true) / true:.4f}")

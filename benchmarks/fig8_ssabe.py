@@ -1,0 +1,21 @@
+"""Fig 8: SSABE empirical n̂/B̂ vs theoretical predictions."""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.core import Mean, ssabe
+from repro.data import synthetic_numeric
+
+
+def run() -> None:
+    key = jax.random.PRNGKey(5)
+    x = jnp.asarray(synthetic_numeric(20_000, 10.0, 2.0, seed=6))
+    for sigma in (0.10, 0.05, 0.02, 0.01):
+        res = ssabe(x[:2000], Mean(), sigma=sigma, tau=0.01, key=key,
+                    N=100_000_000)
+        us = timeit(lambda: ssabe(x[:2000], Mean(), sigma=sigma, tau=0.01,
+                                  key=key, N=100_000_000), repeats=1)
+        emit(f"fig8_ssabe_sigma{sigma}", us,
+             f"B_hat={res.B};B_theory={res.B_theory};"
+             f"n_hat={res.n};n_theory={res.n_theory};"
+             f"fit_a={res.fit_a:.4f};fit_c={res.fit_c:.5f}")

@@ -1,0 +1,35 @@
+"""Fig 9: pre-map vs post-map sampling processing time (+ rows read)."""
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.data import (PostMapSampler, PreMapSampler, ShardedStore,
+                        synthetic_numeric)
+
+
+def run() -> None:
+    N = 2_000_000
+    data = synthetic_numeric(N, 10.0, 2.0, seed=7)
+    for frac in (0.001, 0.01, 0.05):
+        n = int(N * frac)
+
+        store = ShardedStore.from_array(data, 65_536)
+        t0 = time.perf_counter()
+        pre = PreMapSampler(store, seed=8)
+        _ = pre.take(0, n)
+        t_pre = time.perf_counter() - t0
+        rows_pre = store.stats.rows_read
+
+        store = ShardedStore.from_array(data, 65_536)
+        t0 = time.perf_counter()
+        post = PostMapSampler(store, seed=8)
+        _ = post.take(0, n)
+        t_post = time.perf_counter() - t0
+        rows_post = store.stats.rows_read
+
+        emit(f"fig9_premap_frac{frac}", t_pre * 1e6, f"rows_read={rows_pre}")
+        emit(f"fig9_postmap_frac{frac}", t_post * 1e6,
+             f"rows_read={rows_post};"
+             f"premap_speedup={t_post / max(t_pre, 1e-9):.2f}x;"
+             f"kv_exact={post.kv_count == N}")

@@ -1,0 +1,51 @@
+"""Kernel-level microbench: fused weighted-moments path vs naive jnp.
+
+On this CPU container the Pallas kernels run in interpret mode (a
+correctness tool, not a perf tool), so the timing comparison here is the
+fused *algorithm* (one pass, three moments) against the naive version — the
+structural win the TPU kernel encodes.  The VMEM/MXU design constants are
+reported as derived metadata for the roofline discussion.
+"""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.kernels.weighted_stats import ops as ws_ops
+
+
+def _naive(w, x):
+    w_tot = jnp.sum(w, axis=1)
+    s1 = w @ x
+    s2 = w @ (x * x)
+    return w_tot, s1, s2
+
+
+def run() -> None:
+    key = jax.random.PRNGKey(7)
+    B, n, d = 64, 65_536, 8
+    w = jax.random.poisson(key, 1.0, (B, n)).astype(jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (n, d))
+
+    fused = jax.jit(lambda w, x: ws_ops.weighted_moments(w, x,
+                                                         backend="jnp"))
+    # "naive" = three separate jitted passes over W (models 3 HBM reads of
+    # the (B, n) weight matrix; the TPU kernel reads each W tile once)
+    n1 = jax.jit(lambda w: jnp.sum(w, axis=1))
+    n2 = jax.jit(lambda w, x: w @ x)
+    n3 = jax.jit(lambda w, x: w @ (x * x))
+    us_f = timeit(lambda: jax.block_until_ready(fused(w, x)))
+    us_n = timeit(lambda: (jax.block_until_ready(n1(w)),
+                           jax.block_until_ready(n2(w, x)),
+                           jax.block_until_ready(n3(w, x))))
+    emit("kernel_weighted_moments_fused", us_f, "")
+    emit("kernel_weighted_moments_3pass", us_n,
+         f"fused_speedup={us_n / max(us_f, 1e-9):.2f}x;"
+         f"w_bytes_read_ratio=3.0")
+
+    # kernel design constants (per EXAMPLE tile): VMEM working set
+    bb, bn, bd = 128, 512, 128
+    vmem = (bb * bn + bn * bd + 2 * bb * bd + bb) * 4
+    intensity = (2 * 2 * bb * bn * bd) / ((bb * bn + bn * bd) * 4)
+    emit("kernel_weighted_moments_design", 0.0,
+         f"tile_vmem_bytes={vmem};arith_intensity={intensity:.1f}"
+         f";mxu_aligned={bb % 128 == 0 and bd % 128 == 0}")

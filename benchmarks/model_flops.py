@@ -1,0 +1,29 @@
+"""Analytic MODEL_FLOPS per (arch × shape) — the 'useful work' yardstick.
+
+train:   6 · N_active · tokens      (fwd 2x + bwd 4x; assignment formula)
+prefill: 2 · N_active · tokens
+decode:  2 · N_active · batch        (one new token per sequence)
+
+Attention score/value FLOPs and the MoE router/dispatch are excluded on
+purpose — the MODEL_FLOPS / HLO_FLOPs ratio then exposes attention cost,
+remat recompute and routing overhead (EXPERIMENTS.md §Roofline discusses
+the decomposition per cell).
+"""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.models.config import SHAPES, ModelConfig, ShapeConfig
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    n_active = cfg.num_active_params()
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch
+
+
+def model_flops_for(arch: str, shape_name: str) -> float:
+    return model_flops(get_config(arch), SHAPES[shape_name])

@@ -1,0 +1,128 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Hardware model (TPU v5e-like, per chip):
+    peak  = 197 TFLOP/s bf16
+    hbm   = 819 GB/s
+    ici   = ~50 GB/s per chip of interconnect bandwidth
+
+Terms per (arch × shape), single-pod mesh (per the assignment the roofline
+table is single-pod; the pod2 artifacts prove multi-pod sharding):
+
+    compute_term    = HLO_FLOPs / (chips · peak)
+    memory_term     = HLO_bytes / (chips · hbm)
+    collective_term = collective_bytes / (chips · ici)
+
+HLO_FLOPs/bytes use the trip-multiplied dot accounting
+(launch/hlo_flops.py) because XLA's cost_analysis does not multiply scan
+bodies — both numbers are recorded.  collective_bytes is per-chip wire
+bytes (launch/hlo_analysis.py) × chips, matching the prescribed form.
+
+MFU bound = MODEL_FLOPS / (chips · peak · max(terms)) — the achievable
+model-flops utilization of the compiled program assuming perfect
+compute/comm overlap; serial MFU uses Σ terms (no overlap).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from benchmarks.model_flops import model_flops_for
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+
+ARTIFACT_DIR = os.environ.get("DRYRUN_DIR", "artifacts/dryrun")
+
+
+def parse_artifact_name(filename: str):
+    """{arch}.{shape}.{podN}[.{tag}].json — arch may itself contain dots
+    (llama-3.2-vision-90b), so parse from the END."""
+    base = os.path.basename(filename)
+    if base.endswith(".json"):
+        base = base[:-5]
+    parts = base.split(".")
+    if parts[-1] in ("pod1", "pod2"):
+        tag, pod = "", parts[-1]
+        shape = parts[-2]
+        arch = ".".join(parts[:-2])
+    else:
+        tag, pod = parts[-1], parts[-2]
+        shape = parts[-3]
+        arch = ".".join(parts[:-3])
+    return arch, shape, pod, tag
+
+
+def load_records(mesh: str = "16x16", tag: str = "",
+                 directory: Optional[str] = None) -> List[dict]:
+    directory = directory or ARTIFACT_DIR
+    out = []
+    for f in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        _, _, _, rec_tag = parse_artifact_name(f)
+        if rec_tag != tag:
+            continue
+        r = json.load(open(f))
+        if r.get("mesh") == mesh or r.get("status") == "skipped":
+            out.append(r)
+    return out
+
+
+def roofline_row(rec: dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    chips = rec["chips"]
+    compute = rec["dot_flops_per_chip"] / PEAK
+    memory = rec["dot_bytes_per_chip"] / HBM
+    coll = rec["collective_bytes_per_chip"]["total"] / ICI
+    terms = {"compute": compute, "memory": memory, "collective": coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_for(rec["arch"], rec["shape"])
+    hlo_flops_global = rec["dot_flops_per_chip"] * chips
+    ratio = mf / hlo_flops_global if hlo_flops_global else float("nan")
+    t_overlap = max(terms.values())
+    t_serial = sum(terms.values())
+    mfu = mf / (chips * PEAK * t_overlap) if t_overlap else 0.0
+    mfu_serial = mf / (chips * PEAK * t_serial) if t_serial else 0.0
+    return dict(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        chips=chips,
+        compute_s=compute, memory_s=memory, collective_s=coll,
+        dominant=dominant,
+        model_flops=mf, hlo_flops=hlo_flops_global,
+        useful_ratio=ratio,
+        mfu_overlap=mfu, mfu_serial=mfu_serial,
+        state_gib_per_chip=rec["state_bytes_per_chip"] / 2**30,
+    )
+
+
+def markdown_table(rows: List[dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | "
+           "bottleneck | MODEL/HLO flops | MFU bound |\n"
+           "|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+            f"{r['mfu_overlap']:.1%} |")
+    return hdr + "\n".join(lines)
+
+
+def run() -> None:
+    from benchmarks.common import emit
+    rows = [r for r in (roofline_row(rec) for rec in load_records())
+            if r is not None]
+    for r in rows:
+        emit(f"roofline_{r['arch']}_{r['shape']}",
+             max(r['compute_s'], r['memory_s'], r['collective_s']) * 1e6,
+             f"dominant={r['dominant']};mfu_bound={r['mfu_overlap']:.4f};"
+             f"useful_ratio={r['useful_ratio']:.3f}")
+
+
+if __name__ == "__main__":
+    rows = [r for r in (roofline_row(rec) for rec in load_records())
+            if r is not None]
+    print(markdown_table(rows))

@@ -1,0 +1,53 @@
+"""K-Means with EARL (paper §6.3): fit on an early-accurate sample and
+certify centroid stability with a bootstrap CV bound, vs full-data Lloyd.
+
+Run:  PYTHONPATH=src python examples/analytics_kmeans.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import KMeansStep, bootstrap
+from repro.data import PreMapSampler, ShardedStore, synthetic_clusters
+
+N, K, ITERS = 400_000, 5, 8
+x_np, true_centers = synthetic_clusters(N, k=K, dim=2, seed=5)
+sampler = PreMapSampler(ShardedStore.from_array(x_np, 65_536), seed=6)
+
+
+def lloyd(x, cents, iters):
+    for _ in range(iters):
+        step = KMeansStep(cents)
+        cents = step.finalize(step.update(step.init_state(x.shape[1]), x))
+    return cents
+
+
+def inertia(x, cents):
+    d2 = ((x[:, None, :] - np.asarray(cents)[None]) ** 2).sum(-1)
+    return float(d2.min(axis=1).mean())
+
+
+x_full = jnp.asarray(x_np)
+n = N // 50                                    # 2% uniform sample
+xs = sampler.take(0, n)
+init = xs[:K]
+
+t0 = time.perf_counter()
+cents_full = jax.block_until_ready(lloyd(x_full, init, ITERS))
+t_full = time.perf_counter() - t0
+
+t0 = time.perf_counter()
+cents_earl = jax.block_until_ready(lloyd(xs, init, ITERS))
+boot = bootstrap(xs, KMeansStep(cents_earl), B=24, key=jax.random.PRNGKey(0))
+t_earl = time.perf_counter() - t0
+
+i_full, i_earl = inertia(x_np, cents_full), inertia(x_np, cents_earl)
+print(f"full-data Lloyd : inertia={i_full:.4f}  wall={t_full:.2f}s")
+print(f"EARL 2% sample  : inertia={i_earl:.4f}  wall={t_earl:.2f}s  "
+      f"centroid_cv={boot.cv:.4f}")
+print(f"inertia gap     : {(i_earl - i_full) / i_full:+.3%} "
+      f"(paper validates <5%)")
+print(f"rows touched    : {n}/{N} ({n / N:.1%}); speedup "
+      f"{t_full / t_earl:.1f}x wall, {N / n:.0f}x data")

@@ -1,0 +1,4 @@
+"""Checkpointing substrate: async sharded save/restore with atomic commits."""
+from repro.checkpoint.manager import CheckpointManager
+
+__all__ = ["CheckpointManager"]

@@ -1,0 +1,137 @@
+"""Checkpoint manager: atomic, async, keep-k, restore-with-resharding.
+
+Layout (one directory per step, atomically renamed into place):
+
+    <root>/ckpt_00001230/
+        arrays.npz          flat {path -> array} of the state pytree
+        meta.json           step, extra state (data-pipeline cursor, rng)
+
+Restore takes a *template* pytree (e.g. from jax.eval_shape) and an
+optional target sharding tree — restoring onto a different mesh is just
+device_put with the new NamedShardings (the elastic-rescale path in
+ft/elastic.py).  On a real multi-host cluster each host would write its
+address-space shards (orbax-style); the format and the atomic-commit /
+keep-k / async logic here are the substrate that sits under that.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+SEP = "/"
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = jax.tree_util.keystr(path)
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def _unflatten_into(template: Any, flat: Dict[str, np.ndarray]) -> Any:
+    paths = jax.tree_util.tree_flatten_with_path(template)[0]
+    treedef = jax.tree_util.tree_structure(template)
+    leaves = []
+    for path, leaf in paths:
+        key = jax.tree_util.keystr(path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    def __init__(self, root: str, keep_last: int = 3,
+                 async_save: bool = True):
+        self.root = root
+        self.keep_last = keep_last
+        self.async_save = async_save
+        self._pool = ThreadPoolExecutor(max_workers=1)
+        self._pending: Optional[Future] = None
+        os.makedirs(root, exist_ok=True)
+
+    # -- save -------------------------------------------------------------
+    def _write(self, step: int, flat: Dict[str, np.ndarray],
+               extra: Dict[str, Any]) -> str:
+        tmp = os.path.join(self.root, f".tmp_ckpt_{step:08d}")
+        final = os.path.join(self.root, f"ckpt_{step:08d}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump({"step": step, "extra": extra}, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)           # atomic commit
+        self._gc()
+        return final
+
+    def save(self, step: int, state: Any,
+             extra: Optional[Dict[str, Any]] = None) -> None:
+        """Snapshot on the caller thread (device_get), write async."""
+        flat = _flatten(state)           # synchronous snapshot
+        extra = extra or {}
+        self.wait()
+        if self.async_save:
+            self._pending = self._pool.submit(self._write, step, flat, extra)
+        else:
+            self._write(step, flat, extra)
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.result()
+            self._pending = None
+
+    # -- restore ----------------------------------------------------------
+    def steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.root):
+            if name.startswith("ckpt_"):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, template: Any, step: Optional[int] = None,
+                shardings: Any = None) -> tuple[Any, Dict[str, Any]]:
+        """Restore into ``template``'s structure; optionally re-place onto
+        ``shardings`` (a pytree of NamedSharding — the elastic path)."""
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.root}")
+        d = os.path.join(self.root, f"ckpt_{step:08d}")
+        with np.load(os.path.join(d, "arrays.npz")) as z:
+            flat = {k: z[k] for k in z.files}
+        with open(os.path.join(d, "meta.json")) as f:
+            meta = json.load(f)
+        state = _unflatten_into(template, flat)
+        if shardings is not None:
+            state = jax.tree_util.tree_map(
+                lambda x, s: jax.device_put(x, s), state, shardings)
+        else:
+            state = jax.tree_util.tree_map(jax.numpy.asarray, state)
+        return state, meta["extra"]
+
+    # -- gc ---------------------------------------------------------------
+    def _gc(self) -> None:
+        steps = self.steps()
+        for s in steps[:-self.keep_last]:
+            shutil.rmtree(os.path.join(self.root, f"ckpt_{s:08d}"),
+                          ignore_errors=True)

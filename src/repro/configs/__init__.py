@@ -1,0 +1,126 @@
+"""Config registry: ``get_config(arch_id, smoke=False)`` + input specs.
+
+Full configs are exercised only via the dry-run (ShapeDtypeStruct, no
+allocation); ``smoke`` variants are runnable-on-CPU reductions of the same
+family (same pattern, tiny dims).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import (SHAPES, SMOKE_SHAPES, ModelConfig,
+                                 ShapeConfig, shape_is_supported)
+
+ARCH_IDS = (
+    "h2o-danube-3-4b",
+    "stablelm-3b",
+    "gemma3-27b",
+    "granite-3-2b",
+    "mixtral-8x22b",
+    "arctic-480b",
+    "xlstm-350m",
+    "llama-3.2-vision-90b",
+    "recurrentgemma-2b",
+    "whisper-small",
+)
+
+_MODULES = {a: "repro.configs." + a.replace("-", "_").replace(".", "_")
+            for a in ARCH_IDS}
+
+
+def smoke_of(cfg: ModelConfig) -> ModelConfig:
+    """Reduced same-family config: 2 pattern repeats + remainder shape kept."""
+    kv = (cfg.n_kv_heads if cfg.n_kv_heads in (1,) else
+          (4 if cfg.n_kv_heads == cfg.n_heads else 2))
+    rem = min(len(cfg.rem_pattern), 1)
+    return dataclasses.replace(
+        cfg,
+        n_layers=2 * cfg.pattern_len + rem,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=kv,
+        head_dim=16,
+        d_ff=128 if cfg.d_ff else 0,
+        vocab=509,                       # deliberately non-multiple (padding)
+        vocab_pad_multiple=128,
+        window=16 if cfg.window else 0,
+        num_experts=4 if cfg.num_experts else 0,
+        top_k=2 if cfg.num_experts else 0,
+        vision_tokens=8 if cfg.vision_tokens else 0,
+        enc_layers=2 if cfg.enc_layers else 0,
+        enc_seq=16 if cfg.enc_seq else 0,
+        rnn_width=64 if cfg.rnn_width else 0,
+        mlstm_chunk=16,
+        attn_block_q=16,
+        attn_block_k=16,
+        loss_chunk=16,
+        param_dtype="float32",
+        compute_dtype="float32",
+        adam_dtype="float32",
+    )
+
+
+def get_config(arch_id: str, smoke: bool = False) -> ModelConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    cfg: ModelConfig = importlib.import_module(_MODULES[arch_id]).CONFIG
+    cfg.validate()
+    return smoke_of(cfg) if smoke else cfg
+
+
+def get_shape(shape_id: str, smoke: bool = False) -> ShapeConfig:
+    table = SMOKE_SHAPES if smoke else SHAPES
+    return table[shape_id]
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; never allocates)
+# ---------------------------------------------------------------------------
+def _aux_spec(cfg: ModelConfig, batch: int) -> Optional[jax.ShapeDtypeStruct]:
+    cd = jnp.dtype(cfg.compute_dtype)
+    if cfg.family == "vlm":
+        return jax.ShapeDtypeStruct((batch, cfg.vision_tokens, cfg.d_model),
+                                    cd)
+    if cfg.is_encdec:
+        return jax.ShapeDtypeStruct((batch, cfg.enc_seq, cfg.d_model), cd)
+    return None
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStructs for every input of the (train|prefill|decode) step."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        specs: Dict[str, Any] = {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            "labels": jax.ShapeDtypeStruct((b, s), i32),
+        }
+        aux = _aux_spec(cfg, b)
+        if aux is not None:
+            specs["aux"] = aux
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        aux = _aux_spec(cfg, b)
+        if aux is not None:
+            specs["aux"] = aux
+        return specs
+    if shape.kind == "decode":
+        from repro.models import decoder
+        cache = jax.eval_shape(
+            lambda: decoder.init_serve_cache(cfg, b, s))
+        return {
+            "token": jax.ShapeDtypeStruct((b, 1), i32),
+            "pos": jax.ShapeDtypeStruct((), i32),
+            "cache": cache,
+        }
+    raise ValueError(shape.kind)
+
+
+__all__ = ["ARCH_IDS", "get_config", "get_shape", "input_specs", "smoke_of",
+           "SHAPES", "SMOKE_SHAPES", "shape_is_supported"]

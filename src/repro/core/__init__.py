@@ -1,0 +1,44 @@
+"""EARL core — the paper's primary contribution in JAX.
+
+Early Accurate Result Library (Laptev, Zeng, Zaniolo; PVLDB 2012):
+bootstrap-based online accuracy estimation over incrementally grown uniform
+samples, with SSABE parameter estimation and delta-maintained resampling.
+See DESIGN.md for the Hadoop→TPU adaptation map.
+"""
+from repro.core.accuracy import (AccuracyReport, coefficient_of_variation,
+                                 percentile_ci, relative_halfwidth,
+                                 standard_error,
+                                 theoretical_num_bootstraps,
+                                 theoretical_sample_size)
+from repro.core.bootstrap import (BootstrapResult, bootstrap,
+                                  bootstrap_chunked, bootstrap_thetas,
+                                  multinomial_counts, poisson_weights,
+                                  weights_for)
+from repro.core.delta import (MultinomialDeltaBootstrap, PoissonDelta,
+                              Sketch, optimal_y, p_shared,
+                              poisson_delta_extend, poisson_delta_init,
+                              poisson_delta_result, shared_base_bootstrap,
+                              work_saved)
+from repro.core.distributed import (DistributedEarl, build_bootstrap_step,
+                                    shard_values)
+from repro.core.reduce_api import (Count, KMeansState, KMeansStep, Mean,
+                                   MeanLoss, Median, MomentState, Quantile,
+                                   Statistic, Std, Sum, Var, kmeans_fit)
+from repro.core.session import EarlSession, EarlyResult
+from repro.core.ssabe import SSABEResult, ssabe
+
+__all__ = [
+    "AccuracyReport", "coefficient_of_variation", "percentile_ci",
+    "relative_halfwidth", "standard_error", "theoretical_num_bootstraps",
+    "theoretical_sample_size",
+    "BootstrapResult", "bootstrap", "bootstrap_chunked", "bootstrap_thetas",
+    "multinomial_counts", "poisson_weights", "weights_for",
+    "MultinomialDeltaBootstrap", "PoissonDelta", "Sketch", "optimal_y",
+    "p_shared", "poisson_delta_extend", "poisson_delta_init",
+    "poisson_delta_result", "shared_base_bootstrap", "work_saved",
+    "DistributedEarl", "build_bootstrap_step", "shard_values",
+    "Count", "KMeansState", "KMeansStep", "Mean", "MeanLoss", "Median",
+    "MomentState", "Quantile", "Statistic", "Std", "Sum", "Var",
+    "kmeans_fit",
+    "EarlSession", "EarlyResult", "SSABEResult", "ssabe",
+]

@@ -1,0 +1,102 @@
+"""Accuracy measures for early-result estimation (paper §3).
+
+The paper's headline error measure is the coefficient of variation
+``c_v = std / |mean|`` computed over the bootstrap result distribution.
+The machinery is measure-agnostic (paper: "Our approach is independent of
+the error measure"), so we also expose variance, standard error, relative
+CI half-width and percentile CIs over the same distribution.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+def _flatten_thetas(thetas: jax.Array) -> jax.Array:
+    """(B, ...) -> (B, K) flat view of the bootstrap result distribution."""
+    thetas = jnp.asarray(thetas)
+    if thetas.ndim == 1:
+        return thetas[:, None]
+    return thetas.reshape(thetas.shape[0], -1)
+
+
+def coefficient_of_variation(thetas: jax.Array) -> jax.Array:
+    """c_v of a bootstrap result distribution ``thetas`` with leading axis B.
+
+    Scalar statistics: classic std/|mean|.  Vector statistics (e.g. k-means
+    centroids): scale-invariant aggregate  sqrt(mean_k var_k) / rms_k(mean_k),
+    which reduces to the scalar definition for K=1.
+    """
+    t = _flatten_thetas(thetas)
+    mean = jnp.mean(t, axis=0)
+    var = jnp.var(t, axis=0, ddof=1) if t.shape[0] > 1 else jnp.zeros_like(mean)
+    num = jnp.sqrt(jnp.mean(var))
+    den = jnp.sqrt(jnp.mean(mean * mean))
+    return num / (den + _EPS)
+
+
+def standard_error(thetas: jax.Array) -> jax.Array:
+    t = _flatten_thetas(thetas)
+    if t.shape[0] <= 1:
+        return jnp.zeros(())
+    return jnp.sqrt(jnp.mean(jnp.var(t, axis=0, ddof=1)))
+
+
+def relative_halfwidth(thetas: jax.Array, z: float = 1.96) -> jax.Array:
+    """z·SE / |mean| — the relative CI half-width at confidence z."""
+    t = _flatten_thetas(thetas)
+    mean = jnp.sqrt(jnp.mean(jnp.mean(t, axis=0) ** 2))
+    return z * standard_error(thetas) / (mean + _EPS)
+
+
+def percentile_ci(thetas: jax.Array, alpha: float = 0.05
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Efron percentile bootstrap CI (per flattened component)."""
+    t = _flatten_thetas(thetas)
+    lo = jnp.percentile(t, 100.0 * (alpha / 2.0), axis=0)
+    hi = jnp.percentile(t, 100.0 * (1.0 - alpha / 2.0), axis=0)
+    return lo, hi
+
+
+@dataclasses.dataclass(frozen=True)
+class AccuracyReport:
+    """Everything the AES stage (paper §3.1) derives from one bootstrap run."""
+    cv: float
+    se: float
+    rel_halfwidth: float
+    ci_lo: jax.Array
+    ci_hi: jax.Array
+    boot_mean: jax.Array
+
+    @staticmethod
+    def from_thetas(thetas: jax.Array, alpha: float = 0.05) -> "AccuracyReport":
+        lo, hi = percentile_ci(thetas, alpha)
+        return AccuracyReport(
+            cv=float(coefficient_of_variation(thetas)),
+            se=float(standard_error(thetas)),
+            rel_halfwidth=float(relative_halfwidth(thetas)),
+            ci_lo=lo,
+            ci_hi=hi,
+            boot_mean=jnp.mean(_flatten_thetas(thetas), axis=0),
+        )
+
+
+def theoretical_num_bootstraps(eps0: float) -> int:
+    """Paper §3: theory suggests B = 0.5 * eps0^-2 [Efron '87]."""
+    return int(round(0.5 * eps0 ** (-2)))
+
+
+def theoretical_sample_size(sigma: float, pilot_std: float, pilot_mean: float
+                            ) -> int:
+    """CLT-based n for the *mean*: c_v(mean over n) = (s/|mu|)/sqrt(n) <= sigma.
+
+    Used as the 'theoretical prediction' line in benchmarks/fig8 — the paper
+    shows SSABE's empirical estimate beats this in both directions.
+    """
+    rel = pilot_std / (abs(pilot_mean) + _EPS)
+    return max(1, int(jnp.ceil((rel / sigma) ** 2)))

@@ -1,0 +1,173 @@
+"""Bootstrap engines (paper §3, DESIGN.md §2).
+
+A resample-with-replacement is represented by a *weight vector* over the
+sample, so ``f(resample)`` is a weighted statistic and the B-resample loop
+vectorizes over a dense (B, n) weight matrix — MXU work instead of gathers.
+
+Two engines:
+
+* ``multinomial`` — paper-faithful: the B rows are exact multinomial
+  counts Multinomial(n; 1/n,...,1/n), i.e. classic Efron bootstrap.
+* ``poisson``     — distributed default (beyond-paper, DESIGN.md §7.1):
+  iid Poisson(1) weights per (item, resample).  Same first two moments,
+  shard-independent, and makes inter-iteration delta maintenance exact.
+
+Both route moment statistics through kernels/weighted_stats when asked.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import accuracy
+from repro.core.reduce_api import Statistic, _as_2d
+
+
+@dataclasses.dataclass
+class BootstrapResult:
+    estimate: jax.Array        # f on the full sample (unweighted), corrected
+    thetas: jax.Array          # (B, ...) bootstrap result distribution
+    report: accuracy.AccuracyReport
+    B: int
+    n: int
+
+    @property
+    def cv(self) -> float:
+        return self.report.cv
+
+
+# ----------------------------------------------------------------------------
+# weight generation
+# ----------------------------------------------------------------------------
+def multinomial_counts(key: jax.Array, B: int, n: int,
+                       resample_size: Optional[int] = None) -> jax.Array:
+    """Exact multinomial bootstrap counts, shape (B, n) int32.
+
+    Drawn as n' categorical draws per resample, histogrammed via scatter-add.
+    """
+    m = n if resample_size is None else int(resample_size)
+    idx = jax.random.randint(key, (B, m), 0, n)            # (B, m) draws
+
+    def hist(row):
+        return jnp.zeros((n,), jnp.int32).at[row].add(1)
+
+    return jax.vmap(hist)(idx)
+
+
+def poisson_weights(key: jax.Array, B: int, n: int,
+                    dtype=jnp.float32) -> jax.Array:
+    """Poisson(1) bootstrap weights, shape (B, n)."""
+    return jax.random.poisson(key, 1.0, (B, n)).astype(dtype)
+
+
+def weights_for(engine: str, key: jax.Array, B: int, n: int) -> jax.Array:
+    if engine == "multinomial":
+        return multinomial_counts(key, B, n).astype(jnp.float32)
+    if engine == "poisson":
+        return poisson_weights(key, B, n)
+    raise ValueError(f"unknown bootstrap engine: {engine!r}")
+
+
+# ----------------------------------------------------------------------------
+# the resample loop
+# ----------------------------------------------------------------------------
+def bootstrap_thetas(values: jax.Array, stat: Statistic,
+                     weights: jax.Array, use_kernel: bool = False
+                     ) -> jax.Array:
+    """Apply ``stat`` under every weight row.  Returns (B, ...) results."""
+    x2 = _as_2d(values)
+    dim = x2.shape[1]
+
+    if use_kernel and stat.moment_powers is not None:
+        # fused Pallas path: one (B,n)@(n,d) pass for all moments at once.
+        from repro.kernels.weighted_stats import ops as ws_ops
+        w_tot, s1, s2 = ws_ops.weighted_moments(weights, x2)
+        states = jax.vmap(stat.from_moments)(w_tot, s1, s2)
+        return jax.vmap(stat.finalize)(states)
+
+    def one(w_row):
+        return stat.finalize(stat.update(stat.init_state(dim), values, w_row))
+
+    return jax.vmap(one)(weights)
+
+
+@partial(jax.jit, static_argnames=("stat", "B", "engine", "use_kernel"))
+def _bootstrap_jit(values, key, stat, B, engine, use_kernel):
+    n = values.shape[0]
+    w = weights_for(engine, key, B, n)
+    thetas = bootstrap_thetas(values, stat, w, use_kernel=use_kernel)
+    estimate = stat(values)
+    return thetas, estimate
+
+
+def bootstrap(values: jax.Array, stat: Statistic, B: int, key: jax.Array,
+              engine: str = "poisson", p: float = 1.0,
+              use_kernel: bool = False, alpha: float = 0.05
+              ) -> BootstrapResult:
+    """One full bootstrap pass: B resamples, result distribution, accuracy.
+
+    ``p`` is the fraction of the population the sample represents — passed to
+    ``stat.correct`` (paper §2.1) on both the estimate and the thetas.
+    """
+    if not isinstance(stat, Statistic):
+        raise TypeError("stat must be a reduce_api.Statistic")
+    thetas, estimate = _bootstrap_jit(values, key, stat, int(B), engine,
+                                      bool(use_kernel))
+    thetas = stat.correct(thetas, p)
+    estimate = stat.correct(estimate, p)
+    return BootstrapResult(
+        estimate=estimate,
+        thetas=thetas,
+        report=accuracy.AccuracyReport.from_thetas(thetas, alpha=alpha),
+        B=int(B),
+        n=int(values.shape[0]),
+    )
+
+
+# ----------------------------------------------------------------------------
+# streaming / chunked variant (large samples that don't fit a (B,n) matrix)
+# ----------------------------------------------------------------------------
+def bootstrap_chunked(values: jax.Array, stat: Statistic, B: int,
+                      key: jax.Array, chunk: int = 65536,
+                      engine: str = "poisson", p: float = 1.0
+                      ) -> BootstrapResult:
+    """Scan over chunks of the sample, merging per-resample states.
+
+    Only valid for mergeable statistics (all built-ins).  Poisson weights are
+    drawn per chunk with a folded key, so the full (B, n) matrix never
+    materializes — peak memory is (B, chunk).
+    """
+    if engine != "poisson":
+        raise ValueError("chunked bootstrap requires the poisson engine "
+                         "(multinomial couples all chunks; see DESIGN.md §7)")
+    x = _as_2d(values)
+    n, dim = x.shape
+    pad = (-n) % chunk
+    xp = jnp.pad(x, ((0, pad), (0, 0)))
+    valid = jnp.pad(jnp.ones((n,), jnp.float32), (0, pad))
+    nchunks = xp.shape[0] // chunk
+    xc = xp.reshape(nchunks, chunk, dim)
+    vc = valid.reshape(nchunks, chunk)
+
+    init = jax.vmap(lambda _: stat.init_state(dim))(jnp.arange(B))
+
+    def body(states, inp):
+        i, xi, vi = inp
+        w = poisson_weights(jax.random.fold_in(key, i), B, chunk) * vi[None, :]
+        new = jax.vmap(lambda s, wr: stat.update(s, xi, wr))(states, w)
+        return new, None
+
+    states, _ = jax.lax.scan(body, init,
+                             (jnp.arange(nchunks), xc, vc))
+    thetas = jax.vmap(stat.finalize)(states)
+    thetas = stat.correct(thetas, p)
+    estimate = stat.correct(stat(values), p)
+    return BootstrapResult(
+        estimate=estimate, thetas=thetas,
+        report=accuracy.AccuracyReport.from_thetas(thetas),
+        B=int(B), n=int(n),
+    )

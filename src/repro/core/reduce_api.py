@@ -1,0 +1,303 @@
+"""Incremental reduce API (paper §2.1, C5).
+
+EARL extends Hadoop's reducer with  initialize() / update() / finalize() /
+correct().  The TPU-native analogue is a ``Statistic`` over JAX pytree
+*states* with one extra method the paper's combiner implies: ``merge``, the
+associative combinator that makes a state ``psum``-able across mesh shards.
+
+All built-in statistics are *weighted*: a bootstrap resample is represented
+as a weight (count) vector over the sample (DESIGN.md §2), so ``update``
+takes ``(values, weights)``.  ``weights=None`` means all-ones.
+
+States are pytrees of arrays → they vmap over the B resample axis and psum
+over the mesh for free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+State = Any
+Result = Any
+
+_EPS = 1e-12
+
+
+def _as_2d(values: jax.Array) -> jax.Array:
+    values = jnp.asarray(values)
+    if values.ndim == 1:
+        return values[:, None]
+    return values.reshape(values.shape[0], -1)
+
+
+def _w(values: jax.Array, weights: Optional[jax.Array]) -> jax.Array:
+    n = jnp.shape(values)[0]
+    if weights is None:
+        return jnp.ones((n,), dtype=jnp.float32)
+    return jnp.asarray(weights, dtype=jnp.float32)
+
+
+class Statistic:
+    """Base class: the paper's reducer protocol on pytree states."""
+
+    #: statistics whose state is a fixed set of weighted moments can be
+    #: routed through the fused Pallas kernel (kernels/weighted_stats).
+    moment_powers: Optional[Tuple[int, ...]] = None
+
+    # Structural hash/eq so jit caches keyed on a (static) Statistic hit
+    # across instances: Mean() == Mean(); config'd stats compare by their
+    # scalar attributes; array-valued attributes (e.g. KMeansStep
+    # centroids, which are closed over as constants) compare by identity.
+    def _static_key(self):
+        items = []
+        for k in sorted(self.__dict__):
+            v = self.__dict__[k]
+            if isinstance(v, (int, float, str, bool, type(None))):
+                items.append((k, v))
+            else:
+                items.append((k, id(v)))
+        return (type(self), tuple(items))
+
+    def __hash__(self):
+        return hash(self._static_key())
+
+    def __eq__(self, other):
+        return (isinstance(other, Statistic)
+                and self._static_key() == other._static_key())
+
+    def init_state(self, dim: int) -> State:
+        raise NotImplementedError
+
+    def update(self, state: State, values: jax.Array,
+               weights: Optional[jax.Array] = None) -> State:
+        raise NotImplementedError
+
+    def merge(self, a: State, b: State) -> State:
+        """Associative combine — MUST satisfy merge(update(s0,x),update(s0,y))
+        == update(update(s0,x),y) for the delta-maintenance paths (§4)."""
+        return jax.tree_util.tree_map(jnp.add, a, b)
+
+    def finalize(self, state: State) -> Result:
+        raise NotImplementedError
+
+    def correct(self, result: Result, p: float) -> Result:
+        """Rescale a sample-based result to the population (paper §2.1):
+        p = fraction of data used.  Default: estimator is p-invariant."""
+        del p
+        return result
+
+    # convenience -----------------------------------------------------------
+    def __call__(self, values: jax.Array,
+                 weights: Optional[jax.Array] = None) -> Result:
+        dim = _as_2d(values).shape[1]
+        return self.finalize(self.update(self.init_state(dim), values, weights))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class MomentState:
+    w: jax.Array      # () total weight
+    s1: jax.Array     # (d,) sum w*x
+    s2: jax.Array     # (d,) sum w*x^2
+
+
+class _MomentStatistic(Statistic):
+    moment_powers = (0, 1, 2)
+
+    def init_state(self, dim: int) -> MomentState:
+        z = jnp.zeros((dim,), jnp.float32)
+        return MomentState(w=jnp.zeros((), jnp.float32), s1=z, s2=z)
+
+    def update(self, state: MomentState, values, weights=None) -> MomentState:
+        x = _as_2d(values).astype(jnp.float32)
+        w = _w(x, weights)
+        return MomentState(
+            w=state.w + jnp.sum(w),
+            s1=state.s1 + w @ x,
+            s2=state.s2 + w @ (x * x),
+        )
+
+    def from_moments(self, w, s1, s2) -> MomentState:
+        return MomentState(w=w, s1=s1, s2=s2)
+
+
+class Mean(_MomentStatistic):
+    def finalize(self, state: MomentState):
+        return state.s1 / (state.w + _EPS)
+
+
+class Sum(_MomentStatistic):
+    def finalize(self, state: MomentState):
+        return state.s1
+
+    def correct(self, result, p: float):
+        return result / p
+
+
+class Count(_MomentStatistic):
+    def finalize(self, state: MomentState):
+        return state.w
+
+    def correct(self, result, p: float):
+        return result / p
+
+
+class Var(_MomentStatistic):
+    def finalize(self, state: MomentState):
+        m = state.s1 / (state.w + _EPS)
+        return state.s2 / (state.w + _EPS) - m * m
+
+
+class Std(Var):
+    def finalize(self, state: MomentState):
+        return jnp.sqrt(jnp.maximum(super().finalize(state), 0.0))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class HistogramState:
+    counts: jax.Array          # (d, nbins)
+    lo: jax.Array              # (d,)
+    hi: jax.Array              # (d,)
+
+
+class Quantile(Statistic):
+    """Mergeable weighted quantile via a fixed-range histogram sketch.
+
+    The bin range must cover the data (set from a pilot scan with margin);
+    values are clipped into range.  Accuracy ~ (hi-lo)/nbins per component.
+    For in-memory bootstrap on the sample array the exact path
+    ``exact(values, weights)`` is available (used when n is small).
+    """
+
+    def __init__(self, q: float, nbins: int = 2048,
+                 lo: float = 0.0, hi: float = 1.0):
+        self.q = float(q)
+        self.nbins = int(nbins)
+        self.lo = float(lo)
+        self.hi = float(hi)
+
+    def with_range(self, lo: float, hi: float) -> "Quantile":
+        span = max(hi - lo, _EPS)
+        return Quantile(self.q, self.nbins, lo - 0.01 * span, hi + 0.01 * span)
+
+    def init_state(self, dim: int) -> HistogramState:
+        return HistogramState(
+            counts=jnp.zeros((dim, self.nbins), jnp.float32),
+            lo=jnp.full((dim,), self.lo, jnp.float32),
+            hi=jnp.full((dim,), self.hi, jnp.float32),
+        )
+
+    def update(self, state: HistogramState, values, weights=None):
+        x = _as_2d(values).astype(jnp.float32)      # (n, d)
+        w = _w(x, weights)                          # (n,)
+        span = state.hi - state.lo + _EPS
+        idx = jnp.clip(((x - state.lo) / span * self.nbins).astype(jnp.int32),
+                       0, self.nbins - 1)           # (n, d)
+        onehot = jax.nn.one_hot(idx, self.nbins, dtype=jnp.float32)  # (n,d,nb)
+        counts = state.counts + jnp.einsum("n,ndb->db", w, onehot)
+        return HistogramState(counts=counts, lo=state.lo, hi=state.hi)
+
+    def merge(self, a: HistogramState, b: HistogramState) -> HistogramState:
+        return HistogramState(counts=a.counts + b.counts, lo=a.lo, hi=a.hi)
+
+    def finalize(self, state: HistogramState):
+        cdf = jnp.cumsum(state.counts, axis=-1)
+        total = cdf[..., -1:]
+        cdf = cdf / (total + _EPS)
+        # first bin where cdf >= q, linear position within range
+        ge = cdf >= self.q
+        idx = jnp.argmax(ge, axis=-1).astype(jnp.float32)
+        centers = state.lo + (idx + 0.5) / self.nbins * (state.hi - state.lo)
+        out = centers
+        return out[0] if out.shape == (1,) else out
+
+    @staticmethod
+    def exact(values: jax.Array, weights: jax.Array, q: float) -> jax.Array:
+        """Exact weighted quantile of 1-D values (oracle for tests)."""
+        values = jnp.asarray(values).reshape(-1)
+        order = jnp.argsort(values)
+        v = values[order]
+        w = jnp.asarray(weights, jnp.float32).reshape(-1)[order]
+        cw = jnp.cumsum(w)
+        t = q * cw[-1]
+        i = jnp.searchsorted(cw, t)
+        return v[jnp.clip(i, 0, v.shape[0] - 1)]
+
+
+def Median(nbins: int = 2048, lo: float = 0.0, hi: float = 1.0) -> Quantile:
+    return Quantile(0.5, nbins=nbins, lo=lo, hi=hi)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class KMeansState:
+    sums: jax.Array     # (k, d) weighted point sums per cluster
+    counts: jax.Array   # (k,) weighted counts
+    inertia: jax.Array  # () weighted within-cluster SSE
+
+
+class KMeansStep(Statistic):
+    """One weighted Lloyd assignment pass against fixed ``centroids``.
+
+    finalize() -> new centroids; the EARL session / examples drive the outer
+    Lloyd loop (paper §6.3 runs K-Means over the sample).  The bootstrap
+    statistic of record is the (scalar) inertia, exposed via
+    ``finalize_inertia`` — centroid c_v is also available via finalize().
+    """
+
+    def __init__(self, centroids: jax.Array):
+        self.centroids = jnp.asarray(centroids, jnp.float32)  # (k, d)
+
+    def init_state(self, dim: int) -> KMeansState:
+        k, d = self.centroids.shape
+        return KMeansState(
+            sums=jnp.zeros((k, d), jnp.float32),
+            counts=jnp.zeros((k,), jnp.float32),
+            inertia=jnp.zeros((), jnp.float32),
+        )
+
+    def update(self, state: KMeansState, values, weights=None) -> KMeansState:
+        x = _as_2d(values).astype(jnp.float32)               # (n, d)
+        w = _w(x, weights)
+        d2 = (jnp.sum(x * x, -1, keepdims=True)
+              - 2.0 * x @ self.centroids.T
+              + jnp.sum(self.centroids * self.centroids, -1))  # (n, k)
+        assign = jax.nn.one_hot(jnp.argmin(d2, -1), self.centroids.shape[0],
+                                dtype=jnp.float32)             # (n, k)
+        wa = assign * w[:, None]
+        return KMeansState(
+            sums=state.sums + wa.T @ x,
+            counts=state.counts + jnp.sum(wa, 0),
+            inertia=state.inertia + jnp.sum(w * jnp.min(d2, -1)),
+        )
+
+    def finalize(self, state: KMeansState):
+        return state.sums / (state.counts[:, None] + _EPS)
+
+    def finalize_inertia(self, state: KMeansState):
+        return state.inertia / (jnp.sum(state.counts) + _EPS)
+
+
+def kmeans_fit(values: jax.Array, k: int, iters: int, key: jax.Array,
+               weights: Optional[jax.Array] = None
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Weighted Lloyd's on in-memory values; returns (centroids, inertia)."""
+    x = _as_2d(values).astype(jnp.float32)
+    init_idx = jax.random.choice(key, x.shape[0], (k,), replace=False)
+    cent0 = x[init_idx]
+
+    def body(cent, _):
+        step = KMeansStep(cent)
+        st = step.update(step.init_state(x.shape[1]), x, weights)
+        return step.finalize(st), step.finalize_inertia(st)
+
+    cent, inertias = jax.lax.scan(body, cent0, None, length=iters)
+    return cent, inertias[-1]
+
+
+class MeanLoss(Mean):
+    """Alias used by train/earl_eval: the statistic is the per-example loss."""

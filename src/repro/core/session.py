@@ -1,0 +1,128 @@
+"""EarlSession — the end-to-end early-accurate-result driver (paper Fig. 1).
+
+Pipeline: pilot sample → SSABE (B̂, n̂) → main job on n̂ with B̂ resamples →
+AES check c_v ≤ σ → if not, expand the sample (Δs, delta-maintained) and
+repeat → correct() the final result with p = n/N.
+
+Fallback (paper §3.1): if SSABE predicts B·n ≥ N, early estimation cannot
+beat the exact job — run the statistic over the full data set instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ssabe as ssabe_mod
+from repro.core.bootstrap import BootstrapResult
+from repro.core.delta import (PoissonDelta, poisson_delta_extend,
+                              poisson_delta_init, poisson_delta_result)
+from repro.core.reduce_api import Statistic, _as_2d
+
+
+@dataclasses.dataclass
+class EarlyResult:
+    result: Any                 # corrected estimate
+    cv: float                   # achieved error
+    ci_lo: Any
+    ci_hi: Any
+    n_used: int
+    N: int
+    fraction: float             # p = n/N
+    B: int
+    iterations: int
+    fell_back: bool             # True => exact full-data computation
+    history: List[dict]
+    wall_time_s: float
+    ssabe: Optional[ssabe_mod.SSABEResult]
+
+
+class EarlSession:
+    """Drives early approximation of ``stat`` over a Sampler.
+
+    ``sampler`` must provide:
+      - ``N``: total population size
+      - ``take(start, stop) -> array``: rows [start, stop) of a fixed uniform
+        random permutation of the population (so prefixes are uniform
+        without-replacement samples and expansion is a prefix-extend).
+    """
+
+    def __init__(self, sampler, stat: Statistic, sigma: float = 0.05,
+                 tau: float = 0.01, p_pilot: float = 0.01,
+                 growth: float = 2.0, max_fraction: float = 1.0,
+                 min_pilot: int = 64, max_pilot: int = 8192, l: int = 5):
+        self.sampler = sampler
+        self.stat = stat
+        self.sigma = float(sigma)
+        self.tau = float(tau)
+        self.p_pilot = float(p_pilot)
+        self.growth = float(growth)
+        self.max_fraction = float(max_fraction)
+        self.min_pilot = int(min_pilot)
+        # the pilot only needs to be large enough for a stable c_v(n) fit
+        # (paper §3.2: "the initial n is picked to be small ... estimation
+        # can be performed on a single machine"); capping it keeps the
+        # local-mode phase O(1) as N grows.
+        self.max_pilot = int(max_pilot)
+        self.l = int(l)
+
+    # ------------------------------------------------------------------ #
+    def _full_job(self, t0: float, history) -> EarlyResult:
+        N = self.sampler.N
+        values = self.sampler.take(0, N)
+        res = self.stat(values)
+        return EarlyResult(
+            result=res, cv=0.0, ci_lo=res, ci_hi=res, n_used=N, N=N,
+            fraction=1.0, B=1, iterations=len(history), fell_back=True,
+            history=history, wall_time_s=time.perf_counter() - t0,
+            ssabe=None)
+
+    def run(self, key: jax.Array) -> EarlyResult:
+        t0 = time.perf_counter()
+        N = self.sampler.N
+        history: List[dict] = []
+
+        # ---- pilot + SSABE (local mode) --------------------------------
+        n_pilot = min(N, self.max_pilot,
+                      max(self.min_pilot, int(self.p_pilot * N)))
+        pilot = self.sampler.take(0, n_pilot)
+        est = ssabe_mod.ssabe(pilot, self.stat, self.sigma, self.tau,
+                              jax.random.fold_in(key, 1), l=self.l, N=N)
+        B, n_target = est.B, max(est.n, n_pilot)
+
+        # ---- fallback check (paper §3.1) -------------------------------
+        if B * n_target >= N or n_target >= self.max_fraction * N:
+            return self._full_job(t0, history)
+
+        # ---- main loop with delta-maintained resamples ------------------
+        dim = _as_2d(pilot).shape[1]
+        pd = poisson_delta_init(self.stat, B, dim,
+                                jax.random.fold_in(key, 2))
+        n_have = 0
+        iterations = 0
+        while True:
+            iterations += 1
+            n_goal = min(int(n_target), N)
+            delta = self.sampler.take(n_have, n_goal)
+            pd = poisson_delta_extend(pd, delta)
+            n_have = n_goal
+            p = n_have / N
+            estimate = self.stat(self.sampler.take(0, n_have))
+            res: BootstrapResult = poisson_delta_result(pd, estimate, p=p)
+            history.append(dict(iteration=iterations, n=n_have, B=B,
+                                cv=res.cv,
+                                t=time.perf_counter() - t0))
+            if res.cv <= self.sigma or n_have >= self.max_fraction * N:
+                return EarlyResult(
+                    result=res.estimate, cv=res.cv,
+                    ci_lo=res.report.ci_lo, ci_hi=res.report.ci_hi,
+                    n_used=n_have, N=N, fraction=p, B=B,
+                    iterations=iterations, fell_back=False,
+                    history=history,
+                    wall_time_s=time.perf_counter() - t0, ssabe=est)
+            if n_have >= N:
+                return self._full_job(t0, history)
+            n_target = min(N, int(n_have * self.growth))

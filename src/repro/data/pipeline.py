@@ -1,0 +1,95 @@
+"""Batch pipelines feeding the training / eval loops.
+
+``TokenBatchPipeline``  — deterministic, restartable LM batches: the epoch
+order is a seeded permutation and the cursor is a single integer, so a
+checkpoint restore resumes the exact stream (fault tolerance substrate).
+
+``EvalSamplePipeline``  — the earl_eval data path: per-example rows from a
+PermutationSampler, device-ready and mesh-shardable, grown prefix-wise so
+the EARL loop's Δs is the literal array suffix.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.sampler import PermutationSampler
+from repro.data.store import ShardedStore
+
+
+@dataclasses.dataclass
+class PipelineState:
+    """Checkpointable cursor."""
+    epoch: int = 0
+    step: int = 0
+
+
+class TokenBatchPipeline:
+    """(tokens, labels) batches of shape (batch, seq) from a doc store."""
+
+    def __init__(self, docs: np.ndarray, batch: int, seq_len: int,
+                 seed: int = 0, pad_id: int = 0):
+        assert docs.ndim == 2
+        self.docs = docs
+        self.batch = batch
+        self.seq_len = seq_len
+        self.seed = seed
+        self.pad_id = pad_id
+        self.state = PipelineState()
+        self._reperm()
+
+    def _reperm(self) -> None:
+        rng = np.random.default_rng(self.seed + self.state.epoch)
+        self.perm = rng.permutation(len(self.docs))
+
+    def steps_per_epoch(self) -> int:
+        return len(self.docs) // self.batch
+
+    def next_batch(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        if self.state.step >= self.steps_per_epoch():
+            self.state = PipelineState(self.state.epoch + 1, 0)
+            self._reperm()
+        i = self.state.step * self.batch
+        idx = self.perm[i:i + self.batch]
+        self.state.step += 1
+        docs = self.docs[idx]
+        L = self.seq_len + 1
+        if docs.shape[1] < L:
+            docs = np.pad(docs, ((0, 0), (0, L - docs.shape[1])),
+                          constant_values=self.pad_id)
+        tokens = jnp.asarray(docs[:, :self.seq_len])
+        labels = jnp.asarray(docs[:, 1:self.seq_len + 1])
+        return tokens, labels
+
+    # -- checkpoint hooks ------------------------------------------------
+    def state_dict(self) -> dict:
+        return dataclasses.asdict(self.state)
+
+    def load_state_dict(self, d: dict) -> None:
+        self.state = PipelineState(**d)
+        self._reperm()
+
+
+class EvalSamplePipeline:
+    """Growing per-example eval sample for earl_eval.
+
+    Items are documents; ``take(a, b)`` yields token arrays for permutation
+    rows [a, b).  The EARL statistic is the per-document mean loss, so each
+    row is one iid sample item (paper's ⟨k,v⟩ independence assumption)."""
+
+    def __init__(self, docs: np.ndarray, seq_len: int, seed: int = 0,
+                 split_size: int = 4096):
+        store = ShardedStore.from_array(docs, split_size, interleave=True,
+                                        seed=seed)
+        self.sampler = PermutationSampler(store, seed=seed, mode="pre_map")
+        self.seq_len = seq_len
+        self.N = store.N
+
+    def take(self, start: int, stop: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        docs = np.asarray(self.sampler.take(start, stop))
+        tokens = jnp.asarray(docs[:, :self.seq_len])
+        labels = jnp.asarray(docs[:, 1:self.seq_len + 1])
+        return tokens, labels

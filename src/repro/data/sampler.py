@@ -1,0 +1,101 @@
+"""Samplers over the sharded store (paper §3.3).
+
+* ``PreMapSampler``  — samples row *indices* first and reads only those
+  rows (the paper's pre-map sampling: sample line offsets inside splits,
+  backtrack to line start, never load the rest).  Low load cost; the
+  ⟨k,v⟩-count estimate is the sampled fraction (correct() uses p=n/N).
+
+* ``PostMapSampler`` — reads the full store once, hash-buckets rows, then
+  draws the sample (paper's post-map: exact key accounting, full load
+  cost).
+
+* ``PermutationSampler`` — the EarlSession-facing wrapper: a fixed pseudo-
+  random permutation of [0, N); ``take(a, b)`` returns permutation rows
+  [a, b), so growing samples are prefix-extends (uniform without
+  replacement — DESIGN.md §7.2) and delta maintenance gets pure Δs rows.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.store import ShardedStore
+
+
+class PermutationSampler:
+    """Uniform without-replacement prefixes via a fixed permutation.
+
+    ``mode="pre_map"`` reads row-granular (cheap); ``mode="post_map"``
+    materializes the full store on first touch (exact counts, expensive) —
+    both expose identical take() semantics so EarlSession is agnostic.
+    """
+
+    def __init__(self, store: ShardedStore, seed: int = 0,
+                 mode: str = "pre_map"):
+        if mode not in ("pre_map", "post_map"):
+            raise ValueError(mode)
+        self.store = store
+        self.mode = mode
+        self.N = store.N
+        rng = np.random.default_rng(seed)
+        self.perm = rng.permutation(self.N)
+        self._cache: Optional[np.ndarray] = None
+
+    def take(self, start: int, stop: int) -> jnp.ndarray:
+        stop = min(stop, self.N)
+        rows = self.perm[start:stop]
+        if self.mode == "post_map":
+            if self._cache is None:
+                self._cache = self.store.read_all()
+            return jnp.asarray(self._cache[rows])
+        # pre-map: group the requested rows by split, read row-granular
+        split, local = self.store.locate(rows)
+        order = np.argsort(split, kind="stable")
+        out = np.empty((len(rows),) + self.store.splits[0].shape[1:],
+                       dtype=self.store.splits[0].dtype)
+        i = 0
+        while i < len(order):
+            j = i
+            s = split[order[i]]
+            while j < len(order) and split[order[j]] == s:
+                j += 1
+            sel = order[i:j]
+            out[sel] = self.store.read_rows(int(s), local[sel])
+            i = j
+        return jnp.asarray(out)
+
+
+class PreMapSampler(PermutationSampler):
+    def __init__(self, store: ShardedStore, seed: int = 0):
+        super().__init__(store, seed=seed, mode="pre_map")
+
+
+class PostMapSampler(PermutationSampler):
+    """Paper's post-map: read-then-select with hash bucketing.
+
+    The hash layer reproduces Algorithm 1: every row is assigned a random
+    key bucket on load; draws pop buckets without replacement.  Counting
+    is exact: ``kv_count`` is known after load (pre-map only estimates it).
+    """
+
+    def __init__(self, store: ShardedStore, seed: int = 0,
+                 num_buckets: int = 1024):
+        super().__init__(store, seed=seed, mode="post_map")
+        self.num_buckets = num_buckets
+        self._loaded = False
+        self.kv_count: Optional[int] = None
+
+    def _load(self) -> None:
+        self._cache = self.store.read_all()
+        self.kv_count = len(self._cache)
+        rng = np.random.default_rng(0xB0B)
+        self.bucket_of = rng.integers(0, self.num_buckets,
+                                      size=self.kv_count)
+        self._loaded = True
+
+    def take(self, start: int, stop: int) -> jnp.ndarray:
+        if not self._loaded:
+            self._load()
+        return super().take(start, stop)

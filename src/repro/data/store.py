@@ -1,0 +1,77 @@
+"""ShardedStore — the HDFS-splits analogue (paper §3.3).
+
+A dataset is a set of fixed-size *splits* (shards).  Reads are split-
+granular and counted, so the benchmarks can report load cost exactly the
+way the paper does (pre-map sampling reads only the splits/rows it needs;
+post-map reads everything).
+
+The paper warns (§7, block sampling) that naive split-level sampling is
+non-uniform when the layout is clustered; ingest therefore offers an
+``interleave`` option that scatters rows across splits by a hash
+permutation, making every split an unbiased slice (tests/test_sampler.py
+checks this with a chi-square bound).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ReadStats:
+    splits_opened: int = 0
+    rows_read: int = 0
+
+    def reset(self) -> None:
+        self.splits_opened = 0
+        self.rows_read = 0
+
+
+class ShardedStore:
+    """Row-oriented store partitioned into splits of ``split_size`` rows."""
+
+    def __init__(self, splits: List[np.ndarray]):
+        self.splits = splits
+        self.split_sizes = [len(s) for s in splits]
+        self.offsets = np.cumsum([0] + self.split_sizes)
+        self.N = int(self.offsets[-1])
+        self.stats = ReadStats()
+
+    # -- construction --------------------------------------------------
+    @staticmethod
+    def from_array(data: np.ndarray, split_size: int,
+                   interleave: bool = True,
+                   seed: int = 0) -> "ShardedStore":
+        data = np.asarray(data)
+        if interleave:
+            # hash-permute rows at ingest so clustered layouts (paper §7's
+            # block-sampling hazard) cannot bias split-level samples.
+            rng = np.random.default_rng(seed)
+            data = data[rng.permutation(len(data))]
+        splits = [data[i:i + split_size]
+                  for i in range(0, len(data), split_size)]
+        return ShardedStore(splits)
+
+    # -- counted reads ---------------------------------------------------
+    def read_split(self, i: int) -> np.ndarray:
+        self.stats.splits_opened += 1
+        self.stats.rows_read += self.split_sizes[i]
+        return self.splits[i]
+
+    def read_rows(self, split: int, rows: np.ndarray) -> np.ndarray:
+        """Pre-map style row-granular read (the LineRecordReader analogue)."""
+        self.stats.splits_opened += 1
+        self.stats.rows_read += len(rows)
+        return self.splits[split][rows]
+
+    def read_all(self) -> np.ndarray:
+        return np.concatenate([self.read_split(i)
+                               for i in range(len(self.splits))], axis=0)
+
+    def locate(self, global_rows: np.ndarray):
+        """global row ids -> (split ids, local rows)."""
+        split = np.searchsorted(self.offsets, global_rows, side="right") - 1
+        local = global_rows - self.offsets[split]
+        return split, local

@@ -1,0 +1,17 @@
+"""Fault-tolerance substrate (paper §3.4 + classical mechanisms).
+
+EARL's §3.4 insight: a failed data shard turns an exact job into a sampled
+one — instead of restarting, re-weight the survivors (correct(·, p)) and
+report the result WITH a bootstrap error bound; recover only if the bound
+misses the target.  Combined here with the classical substrate: checkpoint
+restart (checkpoint/), elastic re-meshing, and deadline-based straggler
+mitigation (a straggler is just a temporarily-failed shard).
+"""
+from repro.ft.recovery import (ShardLossReport, estimate_with_failures,
+                               failure_mask)
+from repro.ft.elastic import elastic_restore, mesh_for_devices
+from repro.ft.straggler import DeadlineReducer, StragglerReport
+
+__all__ = ["ShardLossReport", "estimate_with_failures", "failure_mask",
+           "elastic_restore", "mesh_for_devices", "DeadlineReducer",
+           "StragglerReport"]

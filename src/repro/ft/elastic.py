@@ -1,0 +1,37 @@
+"""Elastic scaling: rebuild the mesh at a new size and reshard a restored
+checkpoint onto it.
+
+Because checkpoints store full (unsharded) arrays keyed by tree path, a
+restore onto any mesh is a device_put with that mesh's NamedShardings; the
+sharding resolver (launch/sharding.py) recomputes divisibility-aware specs
+for the new axis sizes, so e.g. dropping from 256 to 192 chips reshards
+every dim that stops being divisible instead of failing.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+def mesh_for_devices(n_devices: int, model_parallel: int = 16,
+                     devices=None) -> Mesh:
+    """Largest (data, model) mesh that fits n_devices (elastic rescale)."""
+    model = model_parallel
+    while model > 1 and (n_devices % model or n_devices // model < 1):
+        model //= 2
+    data = n_devices // model
+    devices = (jax.devices() if devices is None else devices)[:data * model]
+    import numpy as np
+    arr = np.array(devices).reshape(data, model)
+    return Mesh(arr, ("data", "model"))
+
+
+def elastic_restore(manager: CheckpointManager, template: Any,
+                    shardings: Any, step: Optional[int] = None
+                    ) -> Tuple[Any, dict]:
+    """Restore a checkpoint onto a (possibly different-size) mesh."""
+    return manager.restore(template, step=step, shardings=shardings)

@@ -1,0 +1,67 @@
+"""Approximation-based node-failure recovery (paper §3.4).
+
+"Given a user specified approximation bound, even when most of the nodes
+have been lost, a reasonable result can still be provided" — the surviving
+shards are a uniform sample of the data (uniform because the store
+hash-interleaves at ingest), so the AES machinery bounds the error of the
+survivors-only result, and correct(·, p) rescales count-like statistics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.accuracy import AccuracyReport
+from repro.core.bootstrap import BootstrapResult
+from repro.core.distributed import DistributedEarl
+from repro.core.reduce_api import Statistic, _as_2d
+
+
+@dataclasses.dataclass
+class ShardLossReport:
+    result: Any
+    cv: float
+    ci_lo: Any
+    ci_hi: Any
+    shards_total: int
+    shards_lost: int
+    p_surviving: float
+    meets_bound: bool             # cv <= sigma -> no recovery needed
+    recommendation: str
+
+
+def failure_mask(n_rows: int, n_shards: int,
+                 lost: Sequence[int]) -> jnp.ndarray:
+    """Row mask with the given shards zeroed (rows split contiguously)."""
+    per = n_rows // n_shards
+    mask = np.ones((n_rows,), np.float32)
+    for s in lost:
+        mask[s * per:(s + 1) * per] = 0.0
+    return jnp.asarray(mask)
+
+
+def estimate_with_failures(earl: DistributedEarl, values: jax.Array,
+                           lost_shards: Sequence[int], n_shards: int,
+                           sigma: float, key: jax.Array
+                           ) -> ShardLossReport:
+    """Bound the error of the survivors-only statistic (no task restart)."""
+    x = _as_2d(values)
+    mask = failure_mask(x.shape[0], n_shards, lost_shards)
+    p = float(mask.mean())
+    res: BootstrapResult = earl.estimate_with_loss_mask(
+        x, mask, key, p=p)
+    ok = res.cv <= sigma
+    return ShardLossReport(
+        result=res.estimate, cv=res.cv,
+        ci_lo=res.report.ci_lo, ci_hi=res.report.ci_hi,
+        shards_total=n_shards, shards_lost=len(lost_shards),
+        p_surviving=p, meets_bound=ok,
+        recommendation=("serve approximate result (within bound); "
+                        "defer node recovery" if ok else
+                        "error bound exceeded: trigger checkpoint restart "
+                        "of lost shards"),
+    )

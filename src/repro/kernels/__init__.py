@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for EARL's compute hot spots.
+
+The paper's §4 optimizes the resampling loop — on TPU that loop is a dense
+(B, n) weight matrix contracted against the sample (DESIGN.md §2), so the
+hot spots are:
+
+  weighted_stats/   fused (w_tot, Σw·x, Σw·x²) for all B resamples in one
+                    MXU pass over VMEM tiles.
+  poisson_counts/   in-kernel PRNG → Poisson(1) bootstrap weights (no HBM
+                    round-trip for the (B, n) weight matrix).
+  flash_attention/  blockwise causal/sliding-window attention used by the
+                    serving/eval path of the model zoo (keeps the early-
+                    accurate eval statistic's forward pass roofline-bound).
+
+Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper w/ padding + platform dispatch), ref.py (pure-jnp oracle).
+Kernels are validated on CPU with interpret=True against ref.py.
+"""

@@ -1,0 +1,125 @@
+"""Blockwise (flash) attention Pallas kernel with causal + sliding-window
+masking and GQA-aware index maps.
+
+TPU adaptation notes (DESIGN.md §2): the FlashAttention recurrence is
+implemented as a *sequential grid axis* (the KV-block axis is the last grid
+dimension, which Pallas TPU iterates in order) with the running softmax
+state (m, l, acc) held in VMEM scratch — the TPU analogue of the GPU
+shared-memory tile loop.  Tiles are MXU-aligned: head_dim and block sizes
+are multiples of 128 where the inputs allow.
+
+Layout: q is (B·Hq, Sq, D), kv is (B·Hkv, Skv, D); the k/v BlockSpec index
+map folds the GQA group arithmetic so KV tiles are fetched once per group
+instead of materializing repeated heads in HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+               scale: float, causal: bool, window: int | None,
+               block_q: int, block_k: int, seq_q: int, seq_k: int,
+               kv_offset: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full(m_scr.shape, _NEG_INF, jnp.float32)
+        l_scr[...] = jnp.zeros(l_scr.shape, jnp.float32)
+        acc_scr[...] = jnp.zeros(acc_scr.shape, jnp.float32)
+
+    q = q_ref[0].astype(jnp.float32)          # (bq, D)
+    k = k_ref[0].astype(jnp.float32)          # (bk, D)
+    v = v_ref[0].astype(jnp.float32)          # (bk, D)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    # absolute positions; kv_offset shifts query rows for cached decode
+    rows = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) \
+        + kv_offset
+    cols = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = cols < seq_k                               # kv padding
+    mask &= (rows < seq_q + kv_offset)                # q padding
+    if causal:
+        mask &= cols <= rows
+    if window is not None:
+        mask &= cols > rows - window
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_scr[...]                               # (bq, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)                   # (bq, 1)
+
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "scale", "block_q",
+                              "block_k", "q_heads", "kv_heads", "seq_q",
+                              "seq_k", "kv_offset", "interpret"))
+def flash_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool, window: int | None, scale: float,
+                           block_q: int, block_k: int,
+                           q_heads: int, kv_heads: int,
+                           seq_q: int, seq_k: int, kv_offset: int = 0,
+                           interpret: bool = True) -> jax.Array:
+    """q: (B·Hq, Sq_pad, D); k, v: (B·Hkv, Skv_pad, D) — pre-padded.
+
+    seq_q/seq_k are the unpadded logical lengths (mask beyond them).
+    """
+    bhq, sq, d = q.shape
+    bhk, sk, _ = k.shape
+    group = q_heads // kv_heads
+    grid = (bhq, sq // block_q, sk // block_k)
+
+    def q_map(b, i, j):
+        return (b, i, 0)
+
+    def kv_map(b, i, j):
+        batch = b // q_heads
+        kvh = (b % q_heads) // group
+        return (batch * kv_heads + kvh, j, 0)
+
+    kern = functools.partial(
+        _fa_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, seq_q=seq_q, seq_k=seq_k,
+        kv_offset=kv_offset)
+
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), q_map),
+            pl.BlockSpec((1, block_k, d), kv_map),
+            pl.BlockSpec((1, block_k, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), q_map),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,189 @@
+"""Public attention op: padding, backend dispatch, pure-JAX blockwise paths.
+
+Backends
+  pallas            compiled Pallas kernel (TPU target)
+  pallas_interpret  same kernel, interpret mode (CPU validation)
+  blockwise         pure-JAX flash recurrence (lax.scan over q and kv
+                    blocks) — used for dry-run lowering and CPU smoke runs;
+                    peak temp is (B, H, bq, bk) instead of (B, H, S, S)
+  windowed          exact-shape sliding-window path: each q block gathers
+                    only the ceil(W/bk)+1 KV blocks it can see, so HLO
+                    FLOPs match the true SWA cost (no masked-block waste)
+  direct            materialized softmax oracle (small shapes only)
+
+Auto selection: TPU → pallas; window set and small → windowed; else
+blockwise.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+from repro.kernels.flash_attention.ref import mha_reference
+
+_NEG_INF = -1e30
+
+
+def _pad_axis(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+# ---------------------------------------------------------------------------
+# pure-JAX blockwise flash (generic causal/full)
+# ---------------------------------------------------------------------------
+def _blockwise(q, k, v, *, causal, window, scale, block_q, block_k,
+               kv_offset):
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    bq = min(block_q, max(sq, 1))
+    bk = min(block_k, max(skv, 1))
+
+    qp = _pad_axis(q, bq, 2)
+    kp = _pad_axis(k, bk, 2)
+    vp = _pad_axis(v, bk, 2)
+    nq, nk = qp.shape[2] // bq, kp.shape[2] // bk
+
+    # (b, hkv, group, nq, bq, d) query blocks grouped per kv head
+    qb = qp.reshape(b, hkv, group, nq, bq, d).astype(jnp.float32)
+    kb = kp.reshape(b, hkv, nk, bk, d).astype(jnp.float32)
+    vb = vp.reshape(b, hkv, nk, bk, d).astype(jnp.float32)
+
+    def per_q_block(qi):
+        qblk = jax.lax.dynamic_index_in_dim(qb, qi, axis=3, keepdims=False)
+        # qblk: (b, hkv, group, bq, d)
+        rows = qi * bq + jnp.arange(bq)[:, None] + kv_offset
+
+        def inner(carry, kj):
+            m, l, acc = carry
+            kblk = jax.lax.dynamic_index_in_dim(kb, kj, 2, keepdims=False)
+            vblk = jax.lax.dynamic_index_in_dim(vb, kj, 2, keepdims=False)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qblk, kblk) * scale
+            cols = kj * bk + jnp.arange(bk)[None, :]
+            mask = (cols < skv) & (rows < sq + kv_offset)
+            if causal:
+                mask = mask & (cols <= rows)
+            if window is not None:
+                mask = mask & (cols > rows - window)
+            s = jnp.where(mask[None, None, None], s, _NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where(mask[None, None, None], p, 0.0)
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p, vblk)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((b, hkv, group, bq), _NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, group, bq), jnp.float32)
+        a0 = jnp.zeros((b, hkv, group, bq, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(inner, (m0, l0, a0), jnp.arange(nk))
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    out = jax.lax.map(per_q_block, jnp.arange(nq))     # (nq, b, hkv, g, bq, d)
+    out = jnp.moveaxis(out, 0, 3)                      # (b, hkv, g, nq, bq, d)
+    out = out.reshape(b, hq, nq * bq, d)[:, :, :sq]
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# exact-shape sliding-window path
+# ---------------------------------------------------------------------------
+def _windowed(q, k, v, *, window, scale, block_q, kv_offset):
+    """Causal SWA: q block i sees only KV rows (i·bq − W, (i+1)·bq]."""
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    bq = min(block_q, max(sq, 1))
+    nrel = -(-window // bq) + 1          # ceil(W/bq)+1 KV blocks per q block
+
+    qp = _pad_axis(q, bq, 2)
+    kp = _pad_axis(k, bq, 2)
+    vp = _pad_axis(v, bq, 2)
+    nq = qp.shape[2] // bq
+    nk = kp.shape[2] // bq
+
+    qb = qp.reshape(b, hkv, group, nq, bq, d).astype(jnp.float32)
+    kb = kp.reshape(b, hkv, nk, bq, d).astype(jnp.float32)
+    vb = vp.reshape(b, hkv, nk, bq, d).astype(jnp.float32)
+
+    def per_q_block(qi):
+        qblk = jax.lax.dynamic_index_in_dim(qb, qi, 3, keepdims=False)
+        rel = qi - jnp.arange(nrel)[::-1]            # (nrel,) block ids
+        relc = jnp.clip(rel, 0, nk - 1)
+        kctx = jnp.take(kb, relc, axis=2)            # (b, hkv, nrel, bq, d)
+        vctx = jnp.take(vb, relc, axis=2)
+        kctx = kctx.reshape(b, hkv, nrel * bq, d)
+        vctx = vctx.reshape(b, hkv, nrel * bq, d)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qblk, kctx) * scale
+        rows = qi * bq + jnp.arange(bq)[:, None] + kv_offset
+        cols = (jnp.repeat(rel, bq) * bq
+                + jnp.tile(jnp.arange(bq), nrel))[None, :]
+        mask = (jnp.repeat(rel >= 0, bq)[None, :]
+                & (cols <= rows) & (cols > rows - window)
+                & (cols < skv) & (rows < sq + kv_offset))
+        s = jnp.where(mask[None, None, None], s, _NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        return jnp.einsum("bhgqk,bhkd->bhgqd", p, vctx)
+
+    out = jax.lax.map(per_q_block, jnp.arange(nq))
+    out = jnp.moveaxis(out, 0, 3).reshape(b, hq, nq * bq, d)[:, :, :sq]
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# public entry
+# ---------------------------------------------------------------------------
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    scale: Optional[float] = None, kv_offset: int = 0,
+                    block_q: int = 512, block_k: int = 512,
+                    backend: Optional[str] = None) -> jax.Array:
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D); GQA by head grouping."""
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    if scale is None:
+        scale = d ** -0.5
+
+    if backend is None:
+        if jax.default_backend() == "tpu":
+            backend = "pallas"
+        elif window is not None and window <= 4 * block_q:
+            backend = "windowed"
+        else:
+            backend = "blockwise"
+
+    if backend == "direct":
+        return mha_reference(q, k, v, causal=causal, window=window,
+                             scale=scale, kv_offset=kv_offset)
+    if backend == "windowed":
+        assert causal and window is not None
+        return _windowed(q, k, v, window=window, scale=scale,
+                         block_q=block_q, kv_offset=kv_offset)
+    if backend == "blockwise":
+        return _blockwise(q, k, v, causal=causal, window=window, scale=scale,
+                          block_q=block_q, block_k=block_k,
+                          kv_offset=kv_offset)
+
+    interpret = backend != "pallas"
+    bq = min(block_q, max(8, sq))
+    bk = min(block_k, max(128, skv))
+    qp = _pad_axis(q, bq, 2).reshape(b * hq, -1, d)
+    kp = _pad_axis(k, bk, 2).reshape(b * hkv, -1, d)
+    vp = _pad_axis(v, bk, 2).reshape(b * hkv, -1, d)
+    out = flash_attention_kernel(
+        qp, kp, vp, causal=causal, window=window, scale=float(scale),
+        block_q=bq, block_k=bk, q_heads=hq, kv_heads=hkv,
+        seq_q=sq, seq_k=skv, kv_offset=kv_offset, interpret=interpret)
+    return out.reshape(b, hq, -1, d)[:, :, :sq]

@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for flash_attention: direct masked softmax attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_mask(seq_q: int, seq_k: int, causal: bool,
+                   window: int | None, kv_offset: int = 0) -> jax.Array:
+    """(Sq, Sk) boolean mask; True = attend.  Query row r sits at absolute
+    position r + kv_offset (cached decode)."""
+    rows = jnp.arange(seq_q)[:, None] + kv_offset
+    cols = jnp.arange(seq_k)[None, :]
+    mask = jnp.ones((seq_q, seq_k), bool)
+    if causal:
+        mask &= cols <= rows
+    if window is not None:
+        mask &= cols > rows - window
+    return mask
+
+
+def mha_reference(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int | None = None,
+                  scale: float | None = None, kv_offset: int = 0
+                  ) -> jax.Array:
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D).  GQA via head repeat."""
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    if scale is None:
+        scale = d ** -0.5
+    group = hq // hkv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    mask = attention_mask(sq, k.shape[2], causal, window, kv_offset)
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,34 @@
+"""jit'd public wrapper for poisson_counts."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.poisson_counts.kernel import poisson_counts_kernel
+from repro.kernels.poisson_counts.ref import poisson_weights_ref
+
+
+def poisson_counts(seed, B: int, n: int, backend: str | None = None,
+                   block_b: int = 128, block_n: int = 512) -> jax.Array:
+    """(B, n) Poisson(1) bootstrap weights.
+
+    backend: None = auto (pallas+TPU hardware PRNG on TPU, jnp elsewhere),
+    "pallas", "pallas_interpret", "jnp".
+    """
+    if backend is None:
+        backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+    if backend == "jnp":
+        key = jax.random.PRNGKey(jnp.asarray(seed, jnp.int32))
+        return poisson_weights_ref(key, B, n)
+
+    interpret = backend != "pallas"
+    bb = min(block_b, max(8, B))
+    bn = min(block_n, max(128, n))
+    Bp = B + (-B) % bb
+    np_ = n + (-n) % bn
+    out = poisson_counts_kernel(jnp.asarray(seed, jnp.int32), Bp, np_,
+                                block_b=bb, block_n=bn,
+                                interpret=interpret,
+                                use_tpu_prng=not interpret)
+    return out[:B, :n]

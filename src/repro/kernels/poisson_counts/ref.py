@@ -1,0 +1,42 @@
+"""Oracles for poisson_counts.
+
+Two kinds of reference:
+  * ``poisson_from_bits_ref`` — bit-exact oracle for the CDF-inversion
+    ladder given the same uniform bits (tests feed both the kernel path
+    and this oracle the identical bit tiles).
+  * ``poisson_weights_ref``   — distribution oracle (jax.random.poisson);
+    kernel output is compared statistically (mean≈1, var≈1, P(K=k)).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def poisson_from_bits_ref(bits: jax.Array) -> jax.Array:
+    """Identical ladder to kernel.py, in plain jnp."""
+    u = (bits >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+    acc = 0.0
+    counts = jnp.zeros(bits.shape, jnp.float32)
+    for k in range(10):
+        acc += math.exp(-1.0) / math.factorial(k)
+        counts += (u > jnp.float32(acc)).astype(jnp.float32)
+    return counts
+
+
+def poisson_weights_ref(key: jax.Array, B: int, n: int) -> jax.Array:
+    return jax.random.poisson(key, 1.0, (B, n)).astype(jnp.float32)
+
+
+def poisson_pmf(k: int) -> float:
+    return math.exp(-1.0) / math.factorial(k)
+
+
+def expected_moments() -> tuple[float, float]:
+    """Poisson(1): mean 1, var 1 (truncation at 9 shifts both by <2e-7)."""
+    mean = sum(k * poisson_pmf(k) for k in range(10))
+    ex2 = sum(k * k * poisson_pmf(k) for k in range(10))
+    return mean, ex2 - mean * mean

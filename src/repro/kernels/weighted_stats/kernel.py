@@ -1,0 +1,86 @@
+"""Fused weighted-moments Pallas kernel.
+
+Computes, for every bootstrap resample b (a row of the weight matrix W):
+
+    w_tot[b] = Σ_i W[b,i]
+    s1[b,:]  = Σ_i W[b,i] · X[i,:]
+    s2[b,:]  = Σ_i W[b,i] · X[i,:]²
+
+in a single pass: the (bB, bn) weight tile is read once from VMEM and feeds
+two MXU contractions (against X and X²) plus a VPU row-sum — 3 outputs for
+one HBM read of W, which is what makes the B-resample loop compute-bound
+instead of bandwidth-bound (DESIGN.md §2).
+
+Grid: (B/bB, d/bd, n/bn); the contraction axis n is the LAST grid axis so
+output tiles are revisited sequentially and accumulated in place.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ws_kernel(w_ref, x_ref, wtot_ref, s1_ref, s2_ref):
+    j = pl.program_id(1)        # d-tile index
+    k = pl.program_id(2)        # n-tile index (contraction)
+
+    w = w_ref[...].astype(jnp.float32)       # (bB, bn)
+    x = x_ref[...].astype(jnp.float32)       # (bn, bd)
+
+    @pl.when(k == 0)
+    def _init_moments():
+        s1_ref[...] = jnp.zeros(s1_ref.shape, s1_ref.dtype)
+        s2_ref[...] = jnp.zeros(s2_ref.shape, s2_ref.dtype)
+
+    s1_ref[...] += jax.lax.dot(w, x, preferred_element_type=jnp.float32)
+    s2_ref[...] += jax.lax.dot(w, x * x, preferred_element_type=jnp.float32)
+
+    @pl.when(jnp.logical_and(j == 0, k == 0))
+    def _init_wtot():
+        wtot_ref[...] = jnp.zeros(wtot_ref.shape, wtot_ref.dtype)
+
+    @pl.when(j == 0)
+    def _acc_wtot():
+        wtot_ref[...] += jnp.sum(w, axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_b", "block_n", "block_d",
+                                    "interpret"))
+def weighted_moments_kernel(weights: jax.Array, values: jax.Array,
+                            block_b: int = 128, block_n: int = 512,
+                            block_d: int = 128, interpret: bool = True):
+    """Raw kernel entry: shapes must already be padded to block multiples.
+
+    weights: (B, n) f32;  values: (n, d) f32.
+    Returns (w_tot (B, 1), s1 (B, d), s2 (B, d)) — all f32.
+    """
+    B, n = weights.shape
+    n2, d = values.shape
+    assert n == n2, (weights.shape, values.shape)
+    assert B % block_b == 0 and n % block_n == 0 and d % block_d == 0, (
+        (B, n, d), (block_b, block_n, block_d))
+
+    grid = (B // block_b, d // block_d, n // block_n)
+    return pl.pallas_call(
+        _ws_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_n), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_n, block_d), lambda i, j, k: (k, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, 1), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((block_b, block_d), lambda i, j, k: (i, j)),
+            pl.BlockSpec((block_b, block_d), lambda i, j, k: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, d), jnp.float32),
+            jax.ShapeDtypeStruct((B, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(weights, values)

@@ -1,0 +1,65 @@
+"""jit'd public wrapper for weighted_stats: padding + platform dispatch.
+
+On TPU the Pallas kernel runs compiled; everywhere else it runs in
+interpret mode (tests) or falls back to the jnp oracle (fast CPU path for
+the benchmarks — interpret mode is a correctness tool, not a perf tool).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.weighted_stats.kernel import weighted_moments_kernel
+from repro.kernels.weighted_stats.ref import weighted_moments_ref
+
+
+def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _pick_blocks(B: int, n: int, d: int) -> Tuple[int, int, int]:
+    """Hardware-aligned tiles that also stay small for tiny test shapes.
+
+    VMEM budget (f32): bB·bn (W) + bn·bd (X, X²) + 2·bB·bd (acc) — with the
+    defaults 128·512 + 512·128 + 2·128·128 floats ≈ 0.7 MB, far under the
+    ~16 MB/core VMEM of v5e, leaving room for double buffering.
+    """
+    bb = min(128, max(8, B))
+    bn = min(512, max(128, n))
+    bd = min(128, max(128, d))
+    return bb, bn, bd
+
+
+def weighted_moments(weights: jax.Array, values: jax.Array,
+                     backend: str | None = None):
+    """weights (B, n) × values (n, d) -> (w_tot (B,), s1 (B,d), s2 (B,d)).
+
+    backend: None = auto (pallas on TPU, jnp elsewhere), "pallas",
+    "pallas_interpret", "jnp".
+    """
+    if values.ndim == 1:
+        values = values[:, None]
+    B, n = weights.shape
+    d = values.shape[1]
+
+    if backend is None:
+        backend = ("pallas" if jax.default_backend() == "tpu" else "jnp")
+
+    if backend == "jnp":
+        w_tot, s1, s2 = weighted_moments_ref(weights, values)
+        return w_tot[:, 0], s1, s2
+
+    interpret = backend != "pallas"
+    bb, bn, bd = _pick_blocks(B, n, d)
+    wp = _pad_to(_pad_to(weights.astype(jnp.float32), bb, 0), bn, 1)
+    xp = _pad_to(_pad_to(values.astype(jnp.float32), bn, 0), bd, 1)
+    w_tot, s1, s2 = weighted_moments_kernel(
+        wp, xp, block_b=bb, block_n=bn, block_d=bd, interpret=interpret)
+    return w_tot[:B, 0], s1[:B, :d], s2[:B, :d]

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the weighted_stats kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def weighted_moments_ref(weights: jax.Array, values: jax.Array):
+    """weights (B, n), values (n, d) -> (w_tot (B,1), s1 (B,d), s2 (B,d))."""
+    w = weights.astype(jnp.float32)
+    x = values.astype(jnp.float32)
+    w_tot = jnp.sum(w, axis=1, keepdims=True)
+    s1 = w @ x
+    s2 = w @ (x * x)
+    return w_tot, s1, s2

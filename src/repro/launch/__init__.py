@@ -1,0 +1,1 @@
+"""Launcher: production meshes, sharding resolution, dry-run, train driver."""

@@ -1,0 +1,234 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell with
+ShapeDtypeStruct inputs (no allocation) and record the roofline terms.
+
+The two lines above MUST stay the first statements in this module — jax
+locks the device count on first init, and every other repro import pulls
+jax in.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-3-2b \
+        --shape train_4k [--multi-pod] [--out artifacts/dryrun]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ARCH_IDS, SHAPES, get_config, input_specs,
+                           shape_is_supported)
+from repro.launch.hlo_analysis import collective_bytes, while_trip_counts
+from repro.launch.hlo_flops import dot_flops
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import (SERVE_RULES, TRAIN_RULES, replicated_like,
+                                   resolve_tree)
+from repro.models import decoder
+from repro.models.act_shard import activation_sharding, mapping_from_mesh
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.models.partitioning import (batch_axes, cache_axes, param_axes)
+from repro.optim.adamw import AdamWConfig
+from repro.train.steps import (init_train_state, make_decode_step,
+                               make_prefill_step, make_train_step,
+                               train_state_axes)
+
+KEY0 = jax.random.PRNGKey(0)
+
+
+def _cfg_overrides(cfg: ModelConfig, overrides: Optional[Dict[str, Any]]
+                   ) -> ModelConfig:
+    if overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               overrides: Optional[Dict[str, Any]] = None,
+               rules_train=TRAIN_RULES, rules_serve=SERVE_RULES,
+               rule_overrides: Optional[Dict[str, Any]] = None
+               ) -> Dict[str, Any]:
+    """Lower + compile one cell; return the §Dry-run/§Roofline record."""
+    cfg = _cfg_overrides(get_config(arch), overrides)
+    if rule_overrides:
+        def _norm(v):
+            return tuple(v) if isinstance(v, list) else v
+        rules_train = dict(rules_train,
+                           **{k: _norm(v) for k, v in rule_overrides.items()})
+        rules_serve = dict(rules_serve,
+                           **{k: _norm(v) for k, v in rule_overrides.items()})
+    shape: ShapeConfig = SHAPES[shape_name]
+    record: Dict[str, Any] = dict(arch=arch, shape=shape_name,
+                                  mesh="2x16x16" if multi_pod else "16x16")
+
+    reason = shape_is_supported(cfg, shape)
+    if reason is not None:
+        record.update(status="skipped", reason=reason)
+        return record
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    specs = input_specs(cfg, shape)
+    t0 = time.time()
+
+    rules_act = rules_train if shape.kind == "train" else rules_serve
+    with mesh, activation_sharding(mapping_from_mesh(mesh, rules_act),
+                                   mesh=mesh):
+        if shape.kind == "train":
+            opt_cfg = AdamWConfig(state_dtype=cfg.adam_dtype)
+            state_shapes = jax.eval_shape(
+                lambda: init_train_state(KEY0, cfg, opt_cfg))
+            st_axes = train_state_axes(state_shapes)
+            st_sh = resolve_tree(state_shapes, st_axes, mesh, rules_train)
+            b_sh = resolve_tree(specs, batch_axes(specs), mesh, rules_train)
+            out_sh = (st_sh, None)
+            step = make_train_step(cfg, opt_cfg)
+            lowered = jax.jit(step, in_shardings=(st_sh, b_sh),
+                              out_shardings=out_sh).lower(state_shapes,
+                                                          specs)
+            n_state_bytes = sum(
+                s.size * s.dtype.itemsize
+                for s in jax.tree_util.tree_leaves(state_shapes))
+        else:
+            params_shapes = jax.eval_shape(
+                lambda: decoder.init_params(KEY0, cfg))
+            p_axes = param_axes(params_shapes)
+            p_sh = resolve_tree(params_shapes, p_axes, mesh, rules_serve)
+            n_state_bytes = sum(
+                s.size * s.dtype.itemsize
+                for s in jax.tree_util.tree_leaves(params_shapes))
+            if shape.kind == "prefill":
+                b_sh = resolve_tree(specs, batch_axes(specs), mesh,
+                                    rules_serve)
+                step = make_prefill_step(cfg)
+                lowered = jax.jit(step, in_shardings=(p_sh, b_sh),
+                                  out_shardings=None
+                                  ).lower(params_shapes, specs)
+            else:
+                cache_shapes = specs["cache"]
+                c_sh = resolve_tree(cache_shapes, cache_axes(cache_shapes),
+                                    mesh, rules_serve)
+                tok_sh = resolve_tree(
+                    {"token": specs["token"]},
+                    batch_axes({"token": specs["token"]}),
+                    mesh, rules_serve)["token"]
+                pos_sh = replicated_like(specs["pos"], mesh)
+                step = make_decode_step(cfg)
+                lowered = jax.jit(
+                    step, in_shardings=(p_sh, c_sh, tok_sh, pos_sh),
+                    out_shardings=None
+                ).lower(params_shapes, cache_shapes, specs["token"],
+                        specs["pos"])
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    # ---- analyses --------------------------------------------------------
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_rec = dict(
+            argument_bytes=getattr(mem, "argument_size_in_bytes", None),
+            output_bytes=getattr(mem, "output_size_in_bytes", None),
+            temp_bytes=getattr(mem, "temp_size_in_bytes", None),
+            generated_code_bytes=getattr(mem, "generated_code_size_in_bytes",
+                                         None),
+        )
+    except Exception as e:                      # CPU backend may lack it
+        mem_rec = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    trips = while_trip_counts(hlo)
+    dots = dot_flops(hlo)
+
+    record.update(
+        status="ok",
+        chips=int(mesh.size),
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        flops=cost.get("flops"),
+        bytes_accessed=cost.get("bytes accessed"),
+        cost_analysis={k: v for k, v in cost.items()
+                       if isinstance(v, (int, float))},
+        memory=mem_rec,
+        collective_bytes_per_chip=coll,
+        dot_flops_per_chip=dots["flops"],
+        dot_bytes_per_chip=dots["dot_bytes"],
+        num_dots=dots["num_dots"],
+        num_while_loops=len(trips),
+        max_trip_count=max((t for _, t in trips), default=0),
+        state_bytes_global=n_state_bytes,
+        state_bytes_per_chip=n_state_bytes / mesh.size,
+        model_params=cfg.num_params(),
+        model_active_params=cfg.num_active_params(),
+    )
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS))
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch, shape) for both meshes")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--overrides", default=None,
+                    help="JSON dict of ModelConfig overrides (perf exps)")
+    ap.add_argument("--rule-overrides", default=None,
+                    help="JSON dict of sharding-rule overrides (perf exps)")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    overrides = json.loads(args.overrides) if args.overrides else None
+    rule_overrides = (json.loads(args.rule_overrides)
+                      if args.rule_overrides else None)
+
+    if args.all:
+        cells = [(a, s, mp) for a in ARCH_IDS for s in SHAPES
+                 for mp in (False, True)]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape, args.multi_pod)]
+
+    for arch, shape, mp in cells:
+        tagpart = f".{args.tag}" if args.tag else ""
+        name = f"{arch}.{shape}.{'pod2' if mp else 'pod1'}{tagpart}.json"
+        path = os.path.join(args.out, name)
+        if os.path.exists(path) and args.all:
+            print(f"[skip existing] {name}")
+            continue
+        print(f"[dryrun] {arch} × {shape} × "
+              f"{'2x16x16' if mp else '16x16'} ...", flush=True)
+        try:
+            rec = lower_cell(arch, shape, mp, overrides, rule_overrides=rule_overrides)
+        except Exception as e:
+            rec = dict(arch=arch, shape=shape,
+                       mesh="2x16x16" if mp else "16x16",
+                       status="error", error=str(e),
+                       traceback=traceback.format_exc())
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=2, default=str)
+        status = rec["status"]
+        extra = ""
+        if status == "ok":
+            extra = (f" flops={rec['flops']:.3e}"
+                     f" coll/chip={rec['collective_bytes_per_chip']['total']:.3e}B"
+                     f" compile={rec['compile_s']}s")
+            mem = rec.get("memory", {})
+            if mem.get("temp_bytes") is not None:
+                print("  memory_analysis:", mem)
+            print("  cost_analysis flops:", rec["flops"])
+        print(f"[{status}] {name}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

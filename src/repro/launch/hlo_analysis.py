@@ -1,0 +1,152 @@
+"""HLO text analysis: collective-traffic accounting with while-loop trip
+multiplication.
+
+``compiled.as_text()`` is the SPMD-partitioned module — shapes are
+per-partition (local), so a collective op's printed shapes directly give
+per-chip wire bytes.  Scan bodies (layers, loss chunks, attention blocks)
+lower to ``while`` ops whose bodies contain the per-iteration collectives;
+a flat text scan would undercount them by the trip count, so we build the
+computation graph, extract each while's trip count from the integer bound
+in its condition computation, and multiply recursively.
+
+Wire-byte conventions (ring algorithms, group size n; factors on the
+printed local shapes):
+    all-reduce        2 × result      (reduce-scatter + all-gather phases)
+    all-gather        1 × result      (result is the gathered local tensor)
+    reduce-scatter    1 × operand     (operand is the pre-scatter tensor)
+    all-to-all        1 × result
+    collective-permute 1 × result
+
+The totals are PER-CHIP bytes; benchmarks/roofline.py multiplies by chip
+count to match the prescribed  collective_bytes / (chips · link_bw)  form.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_WHILE_RE = re.compile(
+    r"\bwhile\(.*?\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CALL_RE = re.compile(r"\b(?:call|fusion)\(.*?to_apply=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    lines: List[str]
+    is_entry: bool = False
+
+
+def split_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in hlo.splitlines():
+        m = _COMP_HDR_RE.match(line.strip()) if "{" in line else None
+        if m and not line.startswith(" "):
+            cur = Computation(m.group(1), [],
+                              is_entry=line.lstrip().startswith("ENTRY"))
+            comps[cur.name] = cur
+        elif cur is not None:
+            cur.lines.append(line)
+    return comps
+
+
+def _direct_collectives(comp: Computation) -> Dict[str, float]:
+    """Per-op-kind per-chip wire bytes for one computation (no recursion)."""
+    out: Dict[str, float] = defaultdict(float)
+    for line in comp.lines:
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        result_type, kind = m.group(1), m.group(2)
+        if kind == "reduce-scatter":
+            # operand is printed inside the parens
+            rest = line[m.end():]
+            bytes_ = _shape_bytes(rest.split(")")[0])
+        else:
+            bytes_ = _shape_bytes(result_type)
+        factor = 2.0 if kind == "all-reduce" else 1.0
+        out[kind] += factor * bytes_
+    return out
+
+
+def _trip_count(cond: Computation) -> int:
+    consts = [int(c) for line in cond.lines for c in _CONST_RE.findall(line)]
+    return max(consts) if consts else 1
+
+
+def collective_bytes(hlo: str) -> Dict[str, float]:
+    """Per-chip wire bytes by collective kind, while-loops multiplied out.
+
+    Returns dict kind -> bytes, plus "total"."""
+    comps = split_computations(hlo)
+
+    memo: Dict[str, Dict[str, float]] = {}
+
+    def visit(name: str, stack=()) -> Dict[str, float]:
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in stack:
+            return {}
+        comp = comps[name]
+        total = defaultdict(float, _direct_collectives(comp))
+        body_text = "\n".join(comp.lines)
+        for m in _WHILE_RE.finditer(body_text):
+            cond_name, body_name = m.group(1), m.group(2)
+            trip = _trip_count(comps[cond_name]) if cond_name in comps else 1
+            sub = visit(body_name, stack + (name,))
+            for k, v in sub.items():
+                total[k] += trip * v
+        for m in _CALL_RE.finditer(body_text):
+            sub = visit(m.group(1), stack + (name,))
+            for k, v in sub.items():
+                total[k] += v
+        memo[name] = dict(total)
+        return memo[name]
+
+    entry = next((c.name for c in comps.values() if c.is_entry), None)
+    result = visit(entry) if entry else {}
+    result = dict(result)
+    result["total"] = sum(v for k, v in result.items())
+    return result
+
+
+def while_trip_counts(hlo: str) -> List[Tuple[str, int]]:
+    """(body name, trip count) for every while op — scan-depth diagnostics."""
+    comps = split_computations(hlo)
+    out = []
+    for comp in comps.values():
+        for m in _WHILE_RE.finditer("\n".join(comp.lines)):
+            cond, body = m.group(1), m.group(2)
+            out.append((body, _trip_count(comps[cond])
+                        if cond in comps else 1))
+    return out

@@ -1,0 +1,166 @@
+"""Trip-multiplied FLOP/byte accounting from partitioned HLO text.
+
+XLA's ``compiled.cost_analysis()`` does not multiply ``while`` bodies by
+their trip counts, so for scan-structured models (layers, loss chunks,
+attention blocks) it undercounts by orders of magnitude.  This module
+parses every ``dot`` op (operand shapes resolved through each
+computation's def lines), computes FLOPs = 2 · |out| · K from the dot
+dimension numbers, and multiplies by the enclosing while trip counts
+recursively — the HLO-level analogue of the analytic MODEL_FLOPS.
+
+All shapes in the partitioned module are per-chip, so totals are per-chip.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+from repro.launch.hlo_analysis import (_CALL_RE, _COLL_RE, _CONST_RE,
+                                       _DTYPE_BYTES, _WHILE_RE, _shape_bytes,
+                                       split_computations)
+
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*"
+    r"((?:\([^)]*\))|(?:\w+\[[\d,]*\]\S*))\s+([\w\-]+)\(")
+_SHAPE1_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERANDS_RE = re.compile(r"dot\(([^)]*)\)")
+_NAME_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _dims_of(type_str: str) -> Tuple[str, List[int]]:
+    m = _SHAPE1_RE.search(type_str)
+    if not m:
+        return ("", [])
+    return m.group(1), [int(d) for d in m.group(2).split(",") if d]
+
+
+def _comp_defs(lines: List[str]) -> Dict[str, str]:
+    defs: Dict[str, str] = {}
+    for line in lines:
+        m = _DEF_RE.match(line)
+        if m:
+            defs[m.group(1)] = m.group(2)
+    return defs
+
+
+def _dot_stats(line: str, defs: Dict[str, str]) -> Tuple[float, float]:
+    """(flops, bytes) for one dot line."""
+    m = _DEF_RE.match(line)
+    if not m or m.group(3) != "dot":
+        return 0.0, 0.0
+    out_dtype, out_dims = _dims_of(m.group(2))
+    ops = _OPERANDS_RE.search(line)
+    cons = _LHS_CONTRACT_RE.search(line)
+    if not ops or not cons:
+        return 0.0, 0.0
+    names = _NAME_RE.findall(ops.group(1))
+    if len(names) < 2:
+        return 0.0, 0.0
+    lhs_type = defs.get(names[0], "")
+    rhs_type = defs.get(names[1], "")
+    _, lhs_dims = _dims_of(lhs_type)
+    k = 1
+    for c in (int(c) for c in cons.group(1).split(",") if c):
+        if c < len(lhs_dims):
+            k *= lhs_dims[c]
+    out_elems = 1
+    for d in out_dims:
+        out_elems *= d
+    flops = 2.0 * out_elems * k
+    byts = sum(_shape_bytes(t) for t in (m.group(2), lhs_type, rhs_type))
+    return flops, byts
+
+
+def _trip_of(cond_name: str, comps) -> int:
+    if cond_name not in comps:
+        return 1
+    consts = [int(c) for ln in comps[cond_name].lines
+              for c in _CONST_RE.findall(ln)]
+    return max(consts) if consts else 1
+
+
+def dot_flops(hlo: str) -> Dict[str, float]:
+    """Per-chip dot FLOPs and dot operand/result bytes, trip-multiplied."""
+    comps = split_computations(hlo)
+    memo: Dict[str, Tuple[float, float, int]] = {}
+
+    def visit(name: str, stack=()) -> Tuple[float, float, int]:
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in stack:
+            return (0.0, 0.0, 0)
+        comp = comps[name]
+        defs = _comp_defs(comp.lines)
+        flops = byts = 0.0
+        ndots = 0
+        for line in comp.lines:
+            f, b = _dot_stats(line, defs)
+            if f > 0:
+                flops += f
+                byts += b
+                ndots += 1
+        text = "\n".join(comp.lines)
+        for m in _WHILE_RE.finditer(text):
+            trip = _trip_of(m.group(1), comps)
+            f, b, n = visit(m.group(2), stack + (name,))
+            flops += trip * f
+            byts += trip * b
+            ndots += n
+        for m in _CALL_RE.finditer(text):
+            f, b, n = visit(m.group(1), stack + (name,))
+            flops += f
+            byts += b
+            ndots += n
+        memo[name] = (flops, byts, ndots)
+        return memo[name]
+
+    entry = next((c.name for c in comps.values() if c.is_entry), None)
+    f, b, n = visit(entry) if entry else (0.0, 0.0, 0)
+    return {"flops": f, "dot_bytes": b, "num_dots": n}
+
+
+def collective_breakdown(hlo: str) -> List[dict]:
+    """Top collective contributors: (computation, kind, bytes, multiplier)."""
+    comps = split_computations(hlo)
+    mult: Dict[str, float] = {}
+
+    def mark(name: str, m: float, stack=()):
+        if name not in comps or name in stack:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        text = "\n".join(comps[name].lines)
+        for w in _WHILE_RE.finditer(text):
+            trip = _trip_of(w.group(1), comps)
+            mark(w.group(2), m * trip, stack + (name,))
+        for cm in _CALL_RE.finditer(text):
+            mark(cm.group(1), m, stack + (name,))
+
+    entry = next((c.name for c in comps.values() if c.is_entry), None)
+    if entry:
+        mark(entry, 1.0)
+
+    meta_re = re.compile(r'op_name="([^"]*)"')
+    rows = []
+    for name, comp in comps.items():
+        m = mult.get(name, 0.0)
+        if m <= 0:
+            continue
+        for line in comp.lines:
+            cm = _COLL_RE.search(line)
+            if not cm:
+                continue
+            kind = cm.group(2)
+            if kind == "reduce-scatter":
+                byts = _shape_bytes(line[cm.end():].split(")")[0])
+            else:
+                byts = _shape_bytes(cm.group(1))
+            factor = 2.0 if kind == "all-reduce" else 1.0
+            mm = meta_re.search(line)
+            rows.append(dict(computation=name, kind=kind,
+                             bytes_once=factor * byts, mult=m,
+                             bytes_total=factor * byts * m,
+                             op_name=mm.group(1) if mm else "",
+                             shape=cm.group(1)))
+    rows.sort(key=lambda r: -r["bytes_total"])
+    return rows

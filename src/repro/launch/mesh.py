@@ -1,0 +1,24 @@
+"""Production meshes.
+
+Single pod: 16×16 = 256 chips, axes ("data", "model").
+Multi-pod:  2×16×16 = 512 chips, axes ("pod", "data", "model") — the "pod"
+axis crosses DCN; batch shards over it, gradient all-reduce rides it
+(optionally bf16-compressed, optim/compression.py).
+
+Functions, not module-level constants: importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before any jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes_of(mesh) -> tuple:
+    """The batch/sample-sharding axes of a production mesh."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)

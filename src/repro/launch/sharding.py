@@ -1,0 +1,110 @@
+"""Logical-axis → mesh PartitionSpec resolution with divisibility fallback.
+
+Rules map logical axis names to an ordered tuple of candidate mesh axes;
+the resolver takes the longest prefix whose product divides the dim and
+isn't already used in the same spec.  Non-divisible dims fall back to
+replication instead of failing — this is what lets one rule table cover
+all 40 (arch × shape) cells (8 KV heads or 8 experts on a 16-way model
+axis replicate gracefully; a batch of 1 frees the data axis for the
+KV-cache sequence — the flash-decoding layout).
+
+Two profiles:
+  TRAIN — ZeRO-3-style: params FSDP-shard "embed" over the in-pod data
+  axis AND tensor-shard heads/mlp/vocab/experts over "model"; batch over
+  ("pod","data").  Cross-pod traffic is gradient-only (DP across pods).
+  SERVE — identical tensor sharding; "embed" additionally FSDP-shards so
+  90B-class checkpoints fit; KV cache seq claims ("pod","data") whenever
+  the batch dim can't.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Rules = Dict[str, Optional[Tuple[str, ...]]]
+
+TRAIN_RULES: Rules = {
+    "batch": ("pod", "data"),
+    "embed": ("data",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "expert": ("model",),
+    "rnn": ("model",),
+    "rnn2": None,
+    "head_dim": None,
+    "head_dim2": None,
+    "seq": None,
+    "cache_seq": None,
+    "aux_seq": None,
+    "layers": None,
+}
+
+SERVE_RULES: Rules = dict(
+    TRAIN_RULES,
+    cache_seq=("pod", "data"),      # flash-decode: claims what batch didn't
+)
+
+#: §Perf iteration H4b (EXPERIMENTS.md): pure ZeRO-3 for DENSE training —
+#: batch data-parallel over the whole mesh, weights sharded 256-way on
+#: "embed"; per-layer weight all-gathers replace the TP activation
+#: all-reduces (2.6× less wire traffic for gemma3-27b train_4k).  MoE archs
+#: keep TRAIN_RULES + moe_impl="shard_map" (H2) instead.
+ZERO3_TRAIN_RULES: Rules = dict(
+    TRAIN_RULES,
+    batch=("pod", "data", "model"),
+    heads=None, kv_heads=None, mlp=None, rnn=None,
+    embed=("data", "model"),
+)
+
+#: §Perf iteration H3 (arctic decode): when "heads" cannot split over the
+#: model axis (56 % 16 != 0), letting head_dim claim the data axis turns
+#: the per-layer wo all-gather into a tiny activation psum (4.2× less
+#: decode wire traffic).
+SERVE_RULES_HEADDIM: Rules = dict(SERVE_RULES, head_dim=("data",))
+
+
+def resolve_spec(shape: Tuple[int, ...], axes: Tuple[Optional[str], ...],
+                 mesh: Mesh, rules: Rules) -> P:
+    parts = []
+    used = set()
+    for dim, ax in zip(shape, axes):
+        targets = rules.get(ax) if ax is not None else None
+        if targets is None:
+            parts.append(None)
+            continue
+        if isinstance(targets, str):
+            targets = (targets,)
+        sel = []
+        prod = 1
+        for m in targets:
+            if m in used or m not in mesh.shape:
+                continue
+            if dim % (prod * mesh.shape[m]) == 0:
+                sel.append(m)
+                prod *= mesh.shape[m]
+        if not sel:
+            parts.append(None)
+        else:
+            parts.append(sel[0] if len(sel) == 1 else tuple(sel))
+            used.update(sel)
+    return P(*parts)
+
+
+def resolve_tree(shapes_tree: Any, axes_tree: Any, mesh: Mesh,
+                 rules: Rules) -> Any:
+    """Pytree of ShapeDtypeStructs × pytree of logical-axis tuples ->
+    NamedShardings.  (tree_map flattens up to shapes_tree's leaves, so the
+    axis tuples in axes_tree arrive whole.)"""
+    return jax.tree_util.tree_map(
+        lambda s, a: NamedSharding(
+            mesh, resolve_spec(tuple(s.shape), tuple(a), mesh, rules)),
+        shapes_tree, axes_tree)
+
+
+def replicated_like(tree: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map(
+        lambda _: NamedSharding(mesh, P()), tree)

@@ -1,0 +1,18 @@
+"""Model zoo: composable decoder/enc-dec LMs for the assigned architectures."""
+from repro.models.config import (SHAPES, SMOKE_SHAPES, ModelConfig,
+                                 ShapeConfig, shape_is_supported)
+from repro.models.decoder import (decode_step, embed, forward_hidden,
+                                  init_params, init_serve_cache,
+                                  logits_from_hidden, loss_fn,
+                                  per_example_loss, prefill)
+from repro.models.partitioning import (batch_axes, cache_axes, logical_axes,
+                                       param_axes)
+
+__all__ = [
+    "SHAPES", "SMOKE_SHAPES", "ModelConfig", "ShapeConfig",
+    "shape_is_supported",
+    "decode_step", "embed", "forward_hidden", "init_params",
+    "init_serve_cache", "logits_from_hidden", "loss_fn", "per_example_loss",
+    "prefill",
+    "batch_axes", "cache_axes", "logical_axes", "param_axes",
+]

@@ -1,0 +1,94 @@
+"""Activation sharding hints (with_sharding_constraint) behind a context.
+
+Without hints, GSPMD is free to satisfy an FSDP-sharded ("embed" over
+data) weight by computing contracting-dim partial sums and ALL-REDUCING
+full activations every layer — orders of magnitude more traffic than
+all-gathering the (much smaller) weights.  Pinning the activation batch
+axis at block boundaries forces the weight-gather strategy.
+
+The mapping (logical axis -> ((mesh_axis, size), ...)) is installed by the
+launcher (dryrun/train) for the duration of tracing; with no context the
+hints are no-ops, so smoke tests and CPU examples are untouched.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+Mapping = Dict[str, Tuple[Tuple[str, int], ...]]
+
+_MAP: contextvars.ContextVar[Optional[Mapping]] = contextvars.ContextVar(
+    "activation_sharding_map", default=None)
+_MESH: contextvars.ContextVar = contextvars.ContextVar(
+    "activation_sharding_mesh", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mapping: Mapping, mesh=None):
+    token = _MAP.set(dict(mapping))
+    token_m = _MESH.set(mesh)
+    try:
+        yield
+    finally:
+        _MAP.reset(token)
+        _MESH.reset(token_m)
+
+
+def current_mapping() -> Optional[Mapping]:
+    return _MAP.get()
+
+
+def current_mesh():
+    return _MESH.get()
+
+
+def mapping_from_mesh(mesh, rules) -> Mapping:
+    """Build the hint mapping from a mesh + rule table (launch/sharding)."""
+    out: Mapping = {}
+    for logical, targets in rules.items():
+        if targets is None:
+            continue
+        if isinstance(targets, str):
+            targets = (targets,)
+        pairs = tuple((t, mesh.shape[t]) for t in targets
+                      if t in mesh.shape)
+        if pairs:
+            out[logical] = pairs
+    return out
+
+
+def hint(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
+    """Constrain activation ``x``'s dims to the context's mesh axes.
+
+    Divisibility-checked like launch/sharding.resolve_spec; no-op without
+    an installed context."""
+    m = _MAP.get()
+    if not m:
+        return x
+    parts = []
+    used = set()
+    for dim, ax in zip(x.shape, axes):
+        pairs = m.get(ax) if ax is not None else None
+        if not pairs:
+            parts.append(None)
+            continue
+        sel = []
+        prod = 1
+        for name, size in pairs:
+            if name in used:
+                continue
+            if dim % (prod * size) == 0:
+                sel.append(name)
+                prod *= size
+        if not sel:
+            parts.append(None)
+        else:
+            parts.append(sel[0] if len(sel) == 1 else tuple(sel))
+            used.update(sel)
+    if all(p is None for p in parts):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*parts))

@@ -1,0 +1,136 @@
+"""Block-level dispatch: init / apply / cache-init for every block kind."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+_ATTN_SELF = ("full", "swa", "local", "global", "xattn", "enc", "dec")
+
+
+def _kind_window(cfg: ModelConfig, kind: str) -> int:
+    return cfg.window if kind in ("swa", "local") else 0
+
+
+def _kind_causal(kind: str) -> bool:
+    return kind != "enc"
+
+
+def init_block(key: jax.Array, cfg: ModelConfig, kind: str) -> Params:
+    ks = L._split(key, 4)
+    d = cfg.d_model
+    pd = L._pdtype(cfg)
+    zero = jnp.zeros((d,), pd)
+    if kind in _ATTN_SELF:
+        p: Params = {"attn_norm": zero, "attn": L.init_attention(ks[0], cfg)}
+        if kind in ("xattn", "dec"):
+            p["x_norm"] = zero
+            p["xattn"] = L.init_cross_attention(ks[1], cfg)
+        if cfg.d_ff:
+            p["mlp_norm"] = zero
+            p["mlp"] = (L.init_moe(ks[2], cfg) if cfg.num_experts
+                        else L.init_mlp(ks[2], cfg))
+        return p
+    if kind == "rglru":
+        p = {"norm": zero, "cell": L.init_rglru(ks[0], cfg)}
+        if cfg.d_ff:
+            p["mlp_norm"] = zero
+            p["mlp"] = L.init_mlp(ks[1], cfg)
+        return p
+    if kind in ("mlstm", "slstm"):
+        init = L.init_mlstm if kind == "mlstm" else L.init_slstm
+        p = {"norm": zero, "cell": init(ks[0], cfg)}
+        if cfg.d_ff:
+            p["mlp_norm"] = zero
+            p["mlp"] = L.init_mlp(ks[1], cfg)
+        return p
+    raise ValueError(kind)
+
+
+def init_block_cache(cfg: ModelConfig, kind: str, batch: int,
+                     cache_len: int) -> Optional[Dict[str, Any]]:
+    if kind in _ATTN_SELF:
+        c: Dict[str, Any] = {
+            "attn": L.init_attn_cache(cfg, batch, cache_len,
+                                      _kind_window(cfg, kind))}
+        if kind in ("xattn", "dec"):
+            aux_len = cfg.vision_tokens if kind == "xattn" else cfg.enc_seq
+            cd = jnp.dtype(cfg.compute_dtype)
+            c["xattn"] = {
+                "k": jnp.zeros((batch, cfg.n_kv_heads, aux_len,
+                                cfg.head_dim_), cd),
+                "v": jnp.zeros((batch, cfg.n_kv_heads, aux_len,
+                                cfg.head_dim_), cd),
+            }
+        return c
+    if kind == "rglru":
+        return {"cell": L.init_rglru_cache(cfg, batch)}
+    if kind == "mlstm":
+        return {"cell": L.init_mlstm_cache(cfg, batch)}
+    if kind == "slstm":
+        return {"cell": L.init_slstm_cache(cfg, batch)}
+    raise ValueError(kind)
+
+
+def apply_block(cfg: ModelConfig, kind: str, p: Params, x: jax.Array, *,
+                positions: jax.Array, cache: Optional[Dict[str, Any]],
+                aux: Optional[jax.Array], mode: str,
+                cache_len: Optional[int] = None
+                ) -> Tuple[jax.Array, Optional[Dict[str, Any]]]:
+    """mode: train | prefill | decode.  Returns (x, new_cache)."""
+    new_cache: Dict[str, Any] = {}
+    if kind in _ATTN_SELF:
+        h = L.rms_norm(x, p["attn_norm"], cfg.norm_eps)
+        attn_out, kv = L.self_attention(
+            cfg, p["attn"], h, window=_kind_window(cfg, kind),
+            positions=positions, causal=_kind_causal(kind),
+            cache=None if cache is None else cache["attn"], mode=mode,
+            cache_len=cache_len,
+        )
+        x = x + attn_out
+        if kv is not None:
+            new_cache["attn"] = kv
+        if kind in ("xattn", "dec"):
+            h = L.rms_norm(x, p["x_norm"], cfg.norm_eps)
+            xo, xc = L.cross_attention(
+                cfg, p["xattn"], h, aux,
+                cache=None if cache is None else cache["xattn"], mode=mode)
+            x = x + xo
+            if xc is not None:
+                new_cache["xattn"] = xc
+        if cfg.d_ff:
+            h = L.rms_norm(x, p["mlp_norm"], cfg.norm_eps)
+            if cfg.num_experts:
+                moe = (L.moe_ffn_shard_map if cfg.moe_impl == "shard_map"
+                       else L.moe_ffn)
+                ff = moe(cfg, p["mlp"], h)
+            else:
+                ff = L.mlp(cfg, p["mlp"], h)
+            x = x + ff
+        return x, (new_cache or None)
+
+    # recurrent kinds
+    h = L.rms_norm(x, p["norm"], cfg.norm_eps)
+    cell_cache = None if cache is None else cache["cell"]
+    if kind == "rglru":
+        out, cc = L.rglru_block(cfg, p["cell"], h, cache=cell_cache,
+                                mode=mode)
+    elif kind == "mlstm":
+        out, cc = L.mlstm_block(cfg, p["cell"], h, cache=cell_cache,
+                                mode=mode)
+    else:
+        out, cc = L.slstm_block(cfg, p["cell"], h, cache=cell_cache,
+                                mode=mode)
+    x = x + out
+    if cc is not None:
+        new_cache["cell"] = cc
+    if cfg.d_ff:
+        h = L.rms_norm(x, p["mlp_norm"], cfg.norm_eps)
+        x = x + L.mlp(cfg, p["mlp"], h)
+    return x, (new_cache or None)

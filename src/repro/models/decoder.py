@@ -1,0 +1,299 @@
+"""The language model: embeddings + scanned block groups + chunked CE loss,
+with prefill/decode serving paths (KV / recurrent-state caches).
+
+Depth is organized as ``n_groups`` repetitions of the cyclic layer pattern;
+the group is the ``lax.scan`` body (params stacked on a leading axis), so
+HLO size and compile time are ~independent of depth.  Remainder layers
+(n_layers % pattern) are applied unstacked after the scan.
+
+Encoder-decoder models (whisper) add an encoder stack whose output is the
+``aux`` stream the decoder's cross-attention reads.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.act_shard import hint
+from repro.models.blocks import apply_block, init_block, init_block_cache
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _init_group(key: jax.Array, cfg: ModelConfig, pattern) -> Params:
+    ks = L._split(key, max(len(pattern), 1))
+    return {str(i): init_block(ks[i], cfg, kind)
+            for i, kind in enumerate(pattern)}
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> Params:
+    ks = L._split(key, 6)
+    pd = L._pdtype(cfg)
+    d, vp = cfg.d_model, cfg.padded_vocab
+
+    emb = jax.random.normal(ks[0], (vp, d)) * (d ** -0.5)
+    # zero the padding rows so padded ids are inert
+    row_ok = (jnp.arange(vp) < cfg.vocab)[:, None]
+    params: Params = {"embedding": (emb * row_ok).astype(pd),
+                      "final_norm": jnp.zeros((d,), pd)}
+    if not cfg.tie_embeddings:
+        params["out_proj"] = L.dense_init(ks[1], (d, vp), d, pd)
+
+    if cfg.n_groups > 0:
+        gkeys = jax.random.split(ks[2], cfg.n_groups)
+        params["groups"] = jax.vmap(
+            lambda k: _init_group(k, cfg, cfg.layer_pattern))(gkeys)
+    if cfg.rem_pattern:
+        params["rem"] = _init_group(ks[3], cfg, cfg.rem_pattern)
+
+    if cfg.is_encdec:
+        ekeys = jax.random.split(ks[4], cfg.enc_layers)
+        params["encoder"] = {
+            "groups": jax.vmap(
+                lambda k: _init_group(k, cfg, ("enc",)))(ekeys),
+            "final_norm": jnp.zeros((d,), pd),
+        }
+    return params
+
+
+def init_serve_cache(cfg: ModelConfig, batch: int, cache_len: int) -> Params:
+    """Cache pytree matching the prefill output / decode input."""
+    def group_cache(pattern):
+        return {str(i): init_block_cache(cfg, kind, batch, cache_len)
+                for i, kind in enumerate(pattern)}
+
+    cache: Params = {}
+    if cfg.n_groups > 0:
+        gc = group_cache(cfg.layer_pattern)
+        cache["groups"] = jax.tree_util.tree_map(
+            lambda x: jnp.tile(x, (cfg.n_groups,) + (1,) * x.ndim), gc)
+    if cfg.rem_pattern:
+        cache["rem"] = group_cache(cfg.rem_pattern)
+    if cfg.is_encdec:
+        cache["enc_out"] = jnp.zeros((batch, cfg.enc_seq, cfg.d_model),
+                                     jnp.dtype(cfg.compute_dtype))
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+def _group_fn(cfg, pattern, gp, x, *, positions, gcache, aux, mode,
+              cache_len=None):
+    ncs = {}
+    for i, kind in enumerate(pattern):
+        x = hint(x, ("batch", None, None))
+        x, nc = apply_block(
+            cfg, kind, gp[str(i)], x, positions=positions,
+            cache=None if gcache is None else gcache[str(i)],
+            aux=aux, mode=mode, cache_len=cache_len)
+        ncs[str(i)] = nc
+    return x, ncs
+
+
+def _run_stack(cfg: ModelConfig, params: Params, x: jax.Array, *,
+               positions, caches, aux, mode: str,
+               cache_len: Optional[int] = None
+               ) -> Tuple[jax.Array, Optional[Params]]:
+    pattern = cfg.layer_pattern
+    new_caches: Params = {}
+
+    if cfg.n_groups > 0:
+        if cfg.scan_layers:
+            if mode == "train":
+                def body(h, gp):
+                    h, _ = _group_fn(cfg, pattern, gp, h,
+                                     positions=positions, gcache=None,
+                                     aux=aux, mode=mode)
+                    return h, None
+                if cfg.remat:
+                    body = jax.checkpoint(body)
+                x, _ = jax.lax.scan(body, x, params["groups"])
+            elif mode == "prefill":
+                def body(h, gp):
+                    return _group_fn(cfg, pattern, gp, h,
+                                     positions=positions, gcache=None,
+                                     aux=aux, mode=mode,
+                                     cache_len=cache_len)
+                x, gc = jax.lax.scan(body, x, params["groups"])
+                new_caches["groups"] = gc
+            else:
+                def body(h, inp):
+                    gp, gc = inp
+                    return _group_fn(cfg, pattern, gp, h,
+                                     positions=positions, gcache=gc,
+                                     aux=aux, mode=mode)
+                x, gc = jax.lax.scan(body, x,
+                                     (params["groups"], caches["groups"]))
+                new_caches["groups"] = gc
+        else:
+            gcs = []
+            for g in range(cfg.n_groups):
+                gp = jax.tree_util.tree_map(lambda t: t[g], params["groups"])
+                gc_in = (None if mode != "decode" else
+                         jax.tree_util.tree_map(lambda t: t[g],
+                                                caches["groups"]))
+                x, gc = _group_fn(cfg, pattern, gp, x, positions=positions,
+                                  gcache=gc_in, aux=aux, mode=mode)
+                gcs.append(gc)
+            if mode != "train":
+                new_caches["groups"] = jax.tree_util.tree_map(
+                    lambda *ts: jnp.stack(ts), *gcs)
+
+    if cfg.rem_pattern:
+        x, rc = _group_fn(
+            cfg, cfg.rem_pattern, params["rem"], x, positions=positions,
+            gcache=None if mode != "decode" else caches["rem"],
+            aux=aux, mode=mode, cache_len=cache_len)
+        if mode != "train":
+            new_caches["rem"] = rc
+
+    return x, (new_caches if mode != "train" else None)
+
+
+def encode(cfg: ModelConfig, params: Params, audio_embeds: jax.Array
+           ) -> jax.Array:
+    """Whisper-style encoder over stub frontend embeddings (B, Ta, d)."""
+    enc = params["encoder"]
+    x = audio_embeds.astype(jnp.dtype(cfg.compute_dtype))
+    positions = jnp.arange(x.shape[1])
+
+    def body(h, gp):
+        h, _ = _group_fn(cfg, ("enc",), gp, h, positions=positions,
+                         gcache=None, aux=None, mode="train")
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, enc["groups"])
+    return L.rms_norm(x, enc["final_norm"], cfg.norm_eps)
+
+
+def embed(cfg: ModelConfig, params: Params, tokens: jax.Array) -> jax.Array:
+    x = params["embedding"].astype(jnp.dtype(cfg.compute_dtype))[tokens]
+    return hint(x, ("batch", None, None))
+
+
+def logits_from_hidden(cfg: ModelConfig, params: Params, h: jax.Array
+                       ) -> jax.Array:
+    """(…, d) -> (…, padded_vocab) fp32, padding columns at -inf."""
+    w = (params["embedding"] if cfg.tie_embeddings
+         else params["out_proj"].T)
+    cd = jnp.dtype(cfg.compute_dtype)
+    logits = L.einsum32("...d,vd->...v", h.astype(cd), w.astype(cd))
+    pad_mask = jnp.where(jnp.arange(cfg.padded_vocab) < cfg.vocab, 0.0,
+                         -1e30)
+    return logits + pad_mask
+
+
+def forward_hidden(cfg: ModelConfig, params: Params, tokens: jax.Array, *,
+                   aux: Optional[jax.Array] = None,
+                   mode: str = "train",
+                   caches: Optional[Params] = None,
+                   positions: Optional[jax.Array] = None,
+                   cache_len: Optional[int] = None
+                   ) -> Tuple[jax.Array, Optional[Params]]:
+    if cfg.is_encdec and mode != "decode":
+        aux = encode(cfg, params, aux)
+    elif cfg.is_encdec and mode == "decode":
+        aux = caches["enc_out"]
+    x = embed(cfg, params, tokens)
+    if positions is None:
+        positions = jnp.arange(tokens.shape[1])
+    x, new_caches = _run_stack(cfg, params, x, positions=positions,
+                               caches=caches, aux=aux, mode=mode,
+                               cache_len=cache_len)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if mode == "prefill" and cfg.is_encdec:
+        new_caches["enc_out"] = aux
+    return x, new_caches
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+def _chunked_ce(cfg: ModelConfig, params: Params, h: jax.Array,
+                labels: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-token CE with the vocab-logit working set capped at
+    (B, loss_chunk, padded_vocab).  Returns (ce (B,S), valid (B,S))."""
+    b, s, d = h.shape
+    c = cfg.loss_chunk if cfg.loss_chunk else s
+    c = min(c, s)
+    pad = (-s) % c
+    hp = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+    lp = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    nc = (s + pad) // c
+    hc = hp.reshape(b, nc, c, d).swapaxes(0, 1)        # (nc, B, c, d)
+    lc = lp.reshape(b, nc, c).swapaxes(0, 1)
+
+    def one(args):
+        hi, li = args
+        logits = logits_from_hidden(cfg, params, hi)   # (B, c, Vp) fp32
+        logits = hint(logits, ("batch", None, "vocab"))
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        safe = jnp.maximum(li, 0)
+        gold = jnp.take_along_axis(logits, safe[..., None], -1)[..., 0]
+        valid = (li >= 0).astype(jnp.float32)
+        return (logz - gold) * valid, valid
+
+    ce, valid = jax.lax.map(one, (hc, lc))
+    ce = ce.swapaxes(0, 1).reshape(b, s + pad)[:, :s]
+    valid = valid.swapaxes(0, 1).reshape(b, s + pad)[:, :s]
+    return ce, valid
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array]
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    h, _ = forward_hidden(cfg, params, batch["tokens"],
+                          aux=batch.get("aux"), mode="train")
+    ce, valid = _chunked_ce(cfg, params, h, batch["labels"])
+    total = jnp.sum(ce)
+    count = jnp.maximum(jnp.sum(valid), 1.0)
+    loss = total / count
+    return loss, {"loss": loss, "tokens": count}
+
+
+def per_example_loss(cfg: ModelConfig, params: Params,
+                     batch: Dict[str, jax.Array]) -> jax.Array:
+    """(B,) mean loss per example — the earl_eval statistic."""
+    h, _ = forward_hidden(cfg, params, batch["tokens"],
+                          aux=batch.get("aux"), mode="train")
+    ce, valid = _chunked_ce(cfg, params, h, batch["labels"])
+    return jnp.sum(ce, -1) / jnp.maximum(jnp.sum(valid, -1), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
+            aux: Optional[jax.Array] = None,
+            cache_len: Optional[int] = None
+            ) -> Tuple[jax.Array, Params]:
+    """Returns (last-token logits (B, Vp), cache).  ``cache_len`` reserves
+    extra KV-cache capacity for subsequent decode steps."""
+    h, caches = forward_hidden(cfg, params, tokens, aux=aux, mode="prefill",
+                               cache_len=cache_len)
+    logits = logits_from_hidden(cfg, params, h[:, -1])
+    return logits, caches
+
+
+def decode_step(cfg: ModelConfig, params: Params, caches: Params,
+                token: jax.Array, pos: jax.Array
+                ) -> Tuple[jax.Array, Params]:
+    """token: (B, 1) int32; pos: scalar int32 absolute position.
+
+    Returns (logits (B, Vp), updated caches)."""
+    positions = jnp.reshape(pos, (1,))
+    h, new_caches = forward_hidden(cfg, params, token, mode="decode",
+                                   caches=caches, positions=positions)
+    if cfg.is_encdec:
+        new_caches["enc_out"] = caches["enc_out"]
+    logits = logits_from_hidden(cfg, params, h[:, 0])
+    return logits, new_caches

@@ -1,0 +1,113 @@
+"""Logical partitioning axes for params / caches / batches (t5x-style).
+
+Every leaf is identified by its dict key (names are unique across block
+kinds by construction) and mapped to a tuple of *logical* axis names for
+its trailing dims; leading scan-stack dims get the "layers" axis.  The
+launch/sharding.py resolver turns logical axes into mesh PartitionSpecs
+with divisibility-aware fallback.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+
+LogicalAxes = Tuple[Optional[str], ...]
+
+PARAM_AXES: Dict[str, LogicalAxes] = {
+    "embedding": ("vocab", "embed"),
+    "out_proj": ("embed", "vocab"),
+    "final_norm": ("embed",),
+    "attn_norm": ("embed",),
+    "mlp_norm": ("embed",),
+    "x_norm": ("embed",),
+    "norm": ("embed",),
+    # attention
+    "wq": ("embed", "heads", "head_dim"),
+    "wk": ("embed", "kv_heads", "head_dim"),
+    "wv": ("embed", "kv_heads", "head_dim"),
+    "wo": ("heads", "head_dim", "embed"),
+    "gate": (),
+    # mlp
+    "w_gate": ("embed", "mlp"),
+    "w_up": ("embed", "mlp"),
+    "w_down": ("mlp", "embed"),
+    # moe
+    "router": ("embed", "expert"),
+    "we_gate": ("expert", "embed", "mlp"),
+    "we_up": ("expert", "embed", "mlp"),
+    "we_down": ("expert", "mlp", "embed"),
+    # rg-lru
+    "w_x": ("embed", "rnn"),
+    "w_y": ("embed", "rnn"),
+    "conv": (None, "rnn"),
+    "w_a": ("rnn", "rnn2"),
+    "w_i": ("rnn", "rnn2"),
+    "lam": ("rnn",),
+    "w_out": ("rnn", "embed"),
+    # xlstm
+    "wi": ("embed", "heads"),
+    "wf": ("embed", "heads"),
+    "wx": ("embed", None, "heads", "head_dim"),
+    "r": ("heads", "head_dim", None, "head_dim2"),
+}
+
+CACHE_AXES: Dict[str, LogicalAxes] = {
+    "k": ("batch", "kv_heads", "cache_seq", "head_dim"),
+    "v": ("batch", "kv_heads", "cache_seq", "head_dim"),
+    "slot_pos": ("cache_seq",),
+    "mC": ("batch", "heads", "head_dim", "head_dim2"),
+    "mn": ("batch", "heads", "head_dim"),
+    "mm": ("batch", "heads"),
+    "sc": ("batch", "heads", "head_dim"),
+    "sn": ("batch", "heads", "head_dim"),
+    "sh": ("batch", "heads", "head_dim"),
+    "sm": ("batch", "heads", "head_dim"),
+    "lru": ("batch", "rnn"),
+    "conv_state": ("batch", None, "rnn"),
+    "enc_out": ("batch", "aux_seq", "embed"),
+}
+
+BATCH_AXES: Dict[str, LogicalAxes] = {
+    "tokens": ("batch", "seq"),
+    "labels": ("batch", "seq"),
+    "aux": ("batch", "aux_seq", "embed"),
+    "token": ("batch", "seq"),
+    "pos": (),
+}
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            return str(entry.key)
+    raise KeyError(f"no dict key in path {path}")
+
+
+def logical_axes(tree: Any, table: Dict[str, LogicalAxes]) -> Any:
+    """Map a pytree of arrays (or ShapeDtypeStructs) to logical-axis tuples,
+    padding leading scan-stack dims with "layers"."""
+
+    def one(path, leaf):
+        name = _leaf_name(path)
+        if name not in table:
+            raise KeyError(f"no logical axes registered for leaf {name!r} "
+                           f"at {jax.tree_util.keystr(path)}")
+        axes = table[name]
+        extra = len(leaf.shape) - len(axes)
+        assert extra >= 0, (name, leaf.shape, axes)
+        return ("layers",) * extra + tuple(axes)
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def param_axes(params: Any) -> Any:
+    return logical_axes(params, PARAM_AXES)
+
+
+def cache_axes(cache: Any) -> Any:
+    return logical_axes(cache, CACHE_AXES)
+
+
+def batch_axes(batch: Any) -> Any:
+    return logical_axes(batch, BATCH_AXES)

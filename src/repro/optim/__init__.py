@@ -1,0 +1,14 @@
+"""Optimizer substrate: fully-sharded AdamW, bf16 gradient compression with
+error feedback, and EARL-adaptive gradient accumulation."""
+from repro.optim.adamw import (AdamWConfig, OptState, adamw_init,
+                               adamw_update, opt_state_axes)
+from repro.optim.compression import (compress_decompress,
+                                     error_feedback_compress)
+from repro.optim.adaptive_accum import (AccumDecision,
+                                        earl_accumulate_gradients)
+
+__all__ = [
+    "AdamWConfig", "OptState", "adamw_init", "adamw_update",
+    "opt_state_axes", "compress_decompress", "error_feedback_compress",
+    "AccumDecision", "earl_accumulate_gradients",
+]

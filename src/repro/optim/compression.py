@@ -1,0 +1,47 @@
+"""Gradient compression for the cross-pod (DCN) all-reduce.
+
+At 2+ pods the "pod" axis all-reduce crosses data-center network links an
+order of magnitude slower than ICI; compressing gradients to bf16 with
+error feedback (residual carried into the next step) halves that traffic
+with no convergence penalty in practice.  The compression is applied
+inside train_step before the psum that GSPMD maps onto the pod axis.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+def compress_decompress(grads: Params, dtype=jnp.bfloat16) -> Params:
+    """Quantize-dequantize (models the lossy wire format)."""
+    return jax.tree_util.tree_map(
+        lambda g: g.astype(dtype).astype(g.dtype), grads)
+
+
+def error_feedback_compress(grads: Params, residual: Params,
+                            dtype=jnp.bfloat16) -> Tuple[Params, Params]:
+    """1-bit-style error feedback at bf16 granularity.
+
+    sent = Q(g + r);  r' = (g + r) - sent.  Returns (sent, new_residual).
+    """
+    def one(g, r):
+        total = g.astype(jnp.float32) + r.astype(jnp.float32)
+        sent = total.astype(dtype)
+        new_r = total - sent.astype(jnp.float32)
+        return sent.astype(g.dtype), new_r.astype(r.dtype)
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = treedef.flatten_up_to(residual)
+    pairs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    sent = treedef.unflatten([p[0] for p in pairs])
+    new_res = treedef.unflatten([p[1] for p in pairs])
+    return sent, new_res
+
+
+def init_residual(params: Params) -> Params:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)

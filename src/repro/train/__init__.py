@@ -1,0 +1,9 @@
+"""Training/serving loops with EARL integrated as a first-class feature."""
+from repro.train.steps import (TrainState, make_decode_step, make_eval_step,
+                               make_prefill_step, make_train_step,
+                               train_state_axes)
+from repro.train.earl_eval import EarlEval, LossValuesSampler
+
+__all__ = ["TrainState", "make_decode_step", "make_eval_step",
+           "make_prefill_step", "make_train_step", "train_state_axes",
+           "EarlEval", "LossValuesSampler"]

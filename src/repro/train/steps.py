@@ -1,0 +1,92 @@
+"""Step builders: the jitted train / eval / prefill / decode programs.
+
+These are what launch/dryrun.py lowers against the production mesh and what
+the examples execute on CPU with smoke configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decoder
+from repro.models.config import ModelConfig
+from repro.models.partitioning import param_axes
+from repro.optim.adamw import (AdamWConfig, OptState, adamw_init,
+                               adamw_update, opt_state_axes)
+
+Params = Any
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Params
+    opt: OptState
+
+
+def init_train_state(key: jax.Array, cfg: ModelConfig,
+                     opt_cfg: AdamWConfig) -> TrainState:
+    params = decoder.init_params(key, cfg)
+    return TrainState(params=params, opt=adamw_init(params, opt_cfg))
+
+
+def train_state_axes(state_shapes: Any) -> Any:
+    """Logical axes for a TrainState (m/v mirror params)."""
+    p_axes = param_axes(state_shapes.params)
+    return TrainState(params=p_axes, opt=opt_state_axes(p_axes))
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig
+                    ) -> Callable[[TrainState, Dict[str, jax.Array]],
+                                  Tuple[TrainState, Dict[str, jax.Array]]]:
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]):
+        def lfn(p):
+            loss, metrics = decoder.loss_fn(cfg, p, batch)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(
+            lfn, has_aux=True)(state.params)
+        new_params, new_opt, opt_metrics = adamw_update(
+            state.params, grads, state.opt, opt_cfg)
+        metrics = dict(metrics, **opt_metrics)
+        return TrainState(new_params, new_opt), metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig):
+    """(params, batch) -> per-example loss (B,) — the earl_eval statistic."""
+    def eval_step(params: Params, batch: Dict[str, jax.Array]) -> jax.Array:
+        return decoder.per_example_loss(cfg, params, batch)
+    return eval_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params: Params, batch: Dict[str, jax.Array]):
+        return decoder.prefill(cfg, params, batch["tokens"],
+                               aux=batch.get("aux"))
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params: Params, cache: Params, token: jax.Array,
+                    pos: jax.Array):
+        return decoder.decode_step(cfg, params, cache, token, pos)
+    return decode_step
+
+
+def make_grad_step(cfg: ModelConfig):
+    """(params, batch) -> (grads, grad_norm, loss) — EARL-adaptive accum."""
+    from repro.optim.adamw import global_norm
+
+    def grad_step(params: Params, batch: Dict[str, jax.Array]):
+        def lfn(p):
+            loss, _ = decoder.loss_fn(cfg, p, batch)
+            return loss
+        loss, grads = jax.value_and_grad(lfn)(params)
+        return grads, global_norm(grads), loss
+
+    return grad_step

@@ -1,0 +1,99 @@
+"""Bootstrap engines: multinomial vs poisson, chunked, kernel path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Mean, Std, Sum, Var, bootstrap, bootstrap_chunked,
+                        multinomial_counts, poisson_weights)
+
+
+class TestWeights:
+    def test_multinomial_rows_sum_to_n(self, key):
+        c = multinomial_counts(key, B=16, n=257)
+        assert c.shape == (16, 257)
+        np.testing.assert_array_equal(np.asarray(c.sum(axis=1)),
+                                      np.full(16, 257))
+
+    def test_multinomial_resample_size(self, key):
+        c = multinomial_counts(key, B=4, n=100, resample_size=50)
+        np.testing.assert_array_equal(np.asarray(c.sum(axis=1)),
+                                      np.full(4, 50))
+
+    def test_poisson_moments(self, key):
+        w = poisson_weights(key, B=64, n=4096)
+        assert abs(float(w.mean()) - 1.0) < 0.01
+        assert abs(float(w.var()) - 1.0) < 0.02
+
+
+class TestEngines:
+    @pytest.mark.parametrize("engine", ["multinomial", "poisson"])
+    def test_se_matches_clt(self, key, engine):
+        """Bootstrap SE of the mean ~ s/sqrt(n)."""
+        n = 4000
+        x = jax.random.normal(key, (n,)) * 3.0 + 50.0
+        res = bootstrap(x, Mean(), B=256, key=key, engine=engine)
+        clt = float(jnp.std(x) / jnp.sqrt(n))
+        assert abs(res.report.se - clt) / clt < 0.25, engine
+
+    def test_engines_agree(self, key):
+        x = jax.random.normal(key, (2000,)) * 2 + 10
+        r1 = bootstrap(x, Mean(), B=200, key=key, engine="multinomial")
+        r2 = bootstrap(x, Mean(), B=200, key=key, engine="poisson")
+        assert abs(r1.cv - r2.cv) / r1.cv < 0.5
+
+    def test_vector_statistic(self, key):
+        x = jax.random.normal(key, (1000, 5)) + jnp.arange(5.0)
+        res = bootstrap(x, Mean(), B=64, key=key)
+        assert res.thetas.shape == (64, 5)
+        assert np.isfinite(res.cv)
+
+    def test_ci_covers_truth(self, key):
+        hits = 0
+        for i in range(20):
+            k = jax.random.fold_in(key, i)
+            x = jax.random.normal(k, (500,)) + 7.0
+            res = bootstrap(x, Mean(), B=200, key=k, alpha=0.05)
+            lo, hi = float(res.report.ci_lo[0]), float(res.report.ci_hi[0])
+            hits += (lo <= 7.0 <= hi)
+        assert hits >= 15, f"95% CI covered truth only {hits}/20 times"
+
+
+class TestChunked:
+    def test_matches_unchunked_distribution(self, key):
+        x = jax.random.normal(key, (3000,)) * 2 + 5
+        r_plain = bootstrap(x, Mean(), B=128, key=key, engine="poisson")
+        r_chunk = bootstrap_chunked(x, Mean(), B=128, key=key, chunk=512)
+        assert abs(r_plain.cv - r_chunk.cv) / r_plain.cv < 0.5
+        np.testing.assert_allclose(np.ravel(r_plain.estimate),
+                                   np.ravel(r_chunk.estimate), rtol=1e-5)
+
+    def test_ragged_chunking(self, key):
+        x = jax.random.normal(key, (1001,)) + 3.0
+        r = bootstrap_chunked(x, Mean(), B=32, key=key, chunk=256)
+        assert r.n == 1001
+        assert np.isfinite(r.cv)
+
+    def test_multinomial_rejected(self, key):
+        with pytest.raises(ValueError):
+            bootstrap_chunked(jnp.ones(10), Mean(), B=4, key=key,
+                              engine="multinomial")
+
+
+class TestKernelPath:
+    def test_kernel_backend_matches_jnp(self, key):
+        x = jax.random.normal(key, (1000, 3)) + 2.0
+        r_jnp = bootstrap(x, Mean(), B=32, key=key, use_kernel=False)
+        r_krn = bootstrap(x, Mean(), B=32, key=key, use_kernel=True)
+        np.testing.assert_allclose(np.asarray(r_jnp.thetas),
+                                   np.asarray(r_krn.thetas),
+                                   rtol=2e-4, atol=2e-5)
+
+    @pytest.mark.parametrize("stat_cls", [Mean, Var, Std])
+    def test_kernel_path_stats(self, key, stat_cls):
+        x = jax.random.normal(key, (512,)) * 1.5 + 4
+        r_jnp = bootstrap(x, stat_cls(), B=16, key=key, use_kernel=False)
+        r_krn = bootstrap(x, stat_cls(), B=16, key=key, use_kernel=True)
+        np.testing.assert_allclose(np.asarray(r_jnp.thetas),
+                                   np.asarray(r_krn.thetas),
+                                   rtol=2e-3, atol=1e-4)

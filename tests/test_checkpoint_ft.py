@@ -1,0 +1,136 @@
+"""Checkpointing + fault tolerance: roundtrips, keep-k, shard-loss
+recovery with error bounds, straggler deadline, elastic mesh."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import CheckpointManager
+from repro.core import DistributedEarl, Mean, Sum
+from repro.data import synthetic_numeric
+from repro.ft import (DeadlineReducer, estimate_with_failures, failure_mask,
+                      mesh_for_devices)
+
+
+def _one_device_mesh():
+    import numpy as np
+    return Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+
+
+class TestCheckpoint:
+    def _state(self, key):
+        return {"params": {"w": jax.random.normal(key, (32, 8)),
+                           "b": jnp.zeros(8)},
+                "step": jnp.int32(7)}
+
+    def test_roundtrip(self, key, tmp_path):
+        state = self._state(key)
+        mgr = CheckpointManager(str(tmp_path), async_save=False)
+        mgr.save(7, state, extra={"pipeline": {"epoch": 1, "step": 40}})
+        template = jax.eval_shape(lambda: state)
+        restored, extra = mgr.restore(template)
+        np.testing.assert_array_equal(np.asarray(state["params"]["w"]),
+                                      np.asarray(restored["params"]["w"]))
+        assert extra == {"pipeline": {"epoch": 1, "step": 40}}
+
+    def test_keep_last_k(self, key, tmp_path):
+        state = self._state(key)
+        mgr = CheckpointManager(str(tmp_path), keep_last=2,
+                                async_save=False)
+        for s in (1, 2, 3, 4):
+            mgr.save(s, state)
+        assert mgr.steps() == [3, 4]
+
+    def test_async_save_waits(self, key, tmp_path):
+        state = self._state(key)
+        mgr = CheckpointManager(str(tmp_path), async_save=True)
+        mgr.save(1, state)
+        mgr.wait()
+        assert mgr.latest_step() == 1
+
+    def test_atomicity_no_tmp_dirs(self, key, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), async_save=False)
+        mgr.save(3, self._state(key))
+        assert not [d for d in os.listdir(tmp_path) if d.startswith(".tmp")]
+
+    def test_restore_with_shardings(self, key, tmp_path):
+        state = self._state(key)
+        mgr = CheckpointManager(str(tmp_path), async_save=False)
+        mgr.save(1, state)
+        mesh = _one_device_mesh()
+        sh = jax.tree_util.tree_map(
+            lambda _: NamedSharding(mesh, P()), state)
+        restored, _ = mgr.restore(jax.eval_shape(lambda: state),
+                                  shardings=sh)
+        assert restored["params"]["w"].sharding == NamedSharding(mesh, P())
+
+    def test_shape_mismatch_rejected(self, key, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), async_save=False)
+        mgr.save(1, self._state(key))
+        bad = {"params": {"w": jnp.zeros((4, 4)), "b": jnp.zeros(8)},
+               "step": jnp.int32(0)}
+        with pytest.raises(ValueError):
+            mgr.restore(jax.eval_shape(lambda: bad))
+
+
+class TestShardLossRecovery:
+    def _earl(self):
+        return DistributedEarl(_one_device_mesh(), Mean(), B=64,
+                               data_axes=("data",))
+
+    def test_survivors_estimate_unbiased(self, key):
+        data = synthetic_numeric(32_768, 10, 2, seed=1)
+        rep = estimate_with_failures(self._earl(), jnp.asarray(data),
+                                     lost_shards=[0, 3, 7], n_shards=16,
+                                     sigma=0.05, key=key)
+        assert rep.shards_lost == 3
+        assert rep.p_surviving == pytest.approx(13 / 16, abs=0.01)
+        assert abs(float(np.ravel(rep.result)[0]) - 10.0) < 0.2
+        assert rep.meets_bound            # mean is easy: bound met
+        assert "defer node recovery" in rep.recommendation
+
+    def test_sum_rescaled_by_survivors(self, key):
+        data = synthetic_numeric(16_384, 10, 2, seed=2)
+        earl = DistributedEarl(_one_device_mesh(), Sum(), B=64,
+                               data_axes=("data",))
+        rep = estimate_with_failures(earl, jnp.asarray(data),
+                                     lost_shards=[1], n_shards=8,
+                                     sigma=0.05, key=key)
+        true = float(data.sum())
+        assert abs(float(np.ravel(rep.result)[0]) - true) / true < 0.05, \
+            "§3.4 + correct(1/p): survivors-only SUM must be rescaled"
+
+    def test_catastrophic_loss_triggers_recovery(self, key):
+        data = synthetic_numeric(4096, 10, 200, seed=3)   # high variance
+        rep = estimate_with_failures(self._earl(), jnp.asarray(data),
+                                     lost_shards=list(range(15)),
+                                     n_shards=16, sigma=0.001, key=key)
+        assert not rep.meets_bound
+        assert "restart" in rep.recommendation
+
+    def test_failure_mask(self):
+        m = np.asarray(failure_mask(100, 10, [0, 9]))
+        assert m[:10].sum() == 0 and m[90:].sum() == 0
+        assert m.sum() == 80
+
+
+class TestStraggler:
+    def test_deadline_reduce(self, key):
+        data = synthetic_numeric(16_384, 10, 2, seed=4)
+        earl = DistributedEarl(_one_device_mesh(), Mean(), B=64,
+                               data_axes=("data",))
+        red = DeadlineReducer(earl, n_shards=8, sigma=0.05)
+        times = [0.1] * 7 + [9.9]                  # one straggler
+        rep = red.reduce(jnp.asarray(data), times, deadline_s=1.0, key=key)
+        assert rep.late == 1 and rep.on_time == 7
+        assert rep.report.meets_bound
+
+
+class TestElastic:
+    def test_mesh_for_devices_shrinks_model_axis(self):
+        m = mesh_for_devices(1, model_parallel=16)
+        assert m.shape["model"] == 1 and m.shape["data"] == 1

@@ -1,0 +1,118 @@
+"""Delta-maintained resampling (paper §4): exactness + baselines."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Mean, MultinomialDeltaBootstrap, Sum, bootstrap,
+                        optimal_y, p_shared, poisson_delta_extend,
+                        poisson_delta_init, poisson_delta_result,
+                        shared_base_bootstrap, work_saved)
+
+
+class TestPoissonDelta:
+    def test_extension_equals_one_shot_distribution(self, key):
+        """Poisson delta maintenance is EXACT: extending in k pieces gives a
+        valid poisson bootstrap over the union (same cv scale)."""
+        x = jax.random.normal(key, (3000,)) * 2 + 9
+        pd = poisson_delta_init(Mean(), 128, 1, key)
+        for piece in (x[:1000], x[1000:1800], x[1800:]):
+            pd = poisson_delta_extend(pd, piece)
+        r_delta = poisson_delta_result(pd, Mean()(x))
+        r_fresh = bootstrap(x, Mean(), B=128, key=jax.random.fold_in(key, 9),
+                            engine="poisson")
+        assert r_delta.n == 3000
+        assert abs(r_delta.cv - r_fresh.cv) / r_fresh.cv < 0.5
+
+    def test_cv_shrinks_as_sample_grows(self, key):
+        x = jax.random.normal(key, (8000,)) + 5
+        pd = poisson_delta_init(Mean(), 64, 1, key)
+        cvs = []
+        prev = 0
+        for stop in (500, 2000, 8000):
+            pd = poisson_delta_extend(pd, x[prev:stop])
+            prev = stop
+            cvs.append(poisson_delta_result(pd, Mean()(x[:stop])).cv)
+        assert cvs[2] < cvs[0]
+
+    def test_merge_commutes_with_update(self, key):
+        """The Statistic invariant that makes §4.1 maintenance valid."""
+        stat = Mean()
+        x = jax.random.normal(key, (100, 2))
+        w = jnp.abs(jax.random.normal(jax.random.fold_in(key, 1), (100,)))
+        s_all = stat.update(stat.init_state(2), x, w)
+        s_a = stat.update(stat.init_state(2), x[:60], w[:60])
+        s_b = stat.update(stat.init_state(2), x[60:], w[60:])
+        merged = stat.merge(s_a, s_b)
+        np.testing.assert_allclose(np.ravel(stat.finalize(merged)),
+                                   np.ravel(stat.finalize(s_all)), rtol=1e-5)
+
+
+class TestMultinomialDeltaBaseline:
+    def test_resample_sizes_track_sample(self):
+        mdb = MultinomialDeltaBootstrap(Mean(), B=8, seed=1)
+        mdb.extend(np.random.default_rng(0).normal(10, 2, (500, 1)))
+        mdb.extend(np.random.default_rng(1).normal(10, 2, (300, 1)))
+        assert mdb.n == 800
+        for b in mdb.resamples:
+            assert len(b) == 800
+            assert b.min() >= 0 and b.max() < 800
+
+    def test_estimates_sane(self):
+        mdb = MultinomialDeltaBootstrap(Mean(), B=32, seed=2)
+        mdb.extend(np.random.default_rng(2).normal(10, 2, (1000, 1)))
+        mdb.extend(np.random.default_rng(3).normal(10, 2, (1000, 1)))
+        res = mdb.result()
+        assert abs(float(np.ravel(res.estimate)[0]) - 10.0) < 0.5
+        assert res.cv < 0.05
+
+    def test_sketch_reduces_disk_accesses(self):
+        kw = dict(seed=3, use_gaussian=True)
+        rng = np.random.default_rng(4)
+        data = [rng.normal(10, 2, (800, 1)) for _ in range(3)]
+        with_sketch = MultinomialDeltaBootstrap(Mean(), B=16,
+                                                use_sketch=True, **kw)
+        without = MultinomialDeltaBootstrap(Mean(), B=16,
+                                            use_sketch=False, **kw)
+        for d in data:
+            with_sketch.extend(d)
+            without.extend(d)
+        assert with_sketch.disk_accesses < without.disk_accesses, \
+            "the §4.1 sketch must cut simulated disk I/O"
+
+    def test_gaussian_approx_close_to_binomial(self):
+        """Eq. 3 approximates Eq. 2 (old-part sizes distributionally)."""
+        a = MultinomialDeltaBootstrap(Mean(), B=1, seed=5, use_gaussian=True)
+        b = MultinomialDeltaBootstrap(Mean(), B=1, seed=5, use_gaussian=False)
+        sizes_a = [a._old_part_size(10_000, 12_000) for _ in range(300)]
+        sizes_b = [b._old_part_size(10_000, 12_000) for _ in range(300)]
+        assert abs(np.mean(sizes_a) - np.mean(sizes_b)) < 50
+
+
+class TestIntraIteration:
+    def test_eq4_values(self):
+        # P(X=y) = n!/((n-yn)! n^{yn}); for n=1, y=1: 1!/0!/1 = 1
+        assert p_shared(1, 1.0) == pytest.approx(1.0)
+        # monotone decreasing in y for fixed n
+        assert p_shared(50, 0.1) > p_shared(50, 0.5) > p_shared(50, 0.9)
+
+    def test_paper_example_n29_y03(self):
+        """§4.2: n=29, y=0.3 -> ~35% of resamples share 30% of data."""
+        assert 0.15 < p_shared(29, 0.3) < 0.45
+
+    def test_optimal_y_positive_savings(self):
+        for n in (10, 50, 200, 1000):
+            y, w = optimal_y(n)
+            assert 0 < y < 1
+            assert w > 0
+            assert w == pytest.approx(work_saved(n, y))
+
+    def test_shared_base_bootstrap_unbiased(self, key):
+        x = jax.random.normal(key, (2000,)) * 2 + 8
+        r_std = bootstrap(x, Mean(), B=256, key=key, engine="multinomial")
+        r_int = shared_base_bootstrap(x, Mean(), B=256, key=key)
+        np.testing.assert_allclose(np.ravel(r_int.estimate),
+                                   np.ravel(r_std.estimate), rtol=1e-5)
+        mean_std = float(np.mean(np.asarray(r_std.thetas)))
+        mean_int = float(np.mean(np.asarray(r_int.thetas)))
+        assert abs(mean_std - mean_int) / abs(mean_std) < 0.01

@@ -1,0 +1,136 @@
+"""Per-kernel shape/dtype sweeps vs pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_attention.ref import mha_reference
+from repro.kernels.poisson_counts import ops as pc_ops
+from repro.kernels.poisson_counts.kernel import _poisson_from_bits
+from repro.kernels.poisson_counts.ref import (expected_moments,
+                                              poisson_from_bits_ref,
+                                              poisson_pmf)
+from repro.kernels.weighted_stats import ops as ws_ops
+from repro.kernels.weighted_stats.ref import weighted_moments_ref
+
+
+class TestWeightedStats:
+    @pytest.mark.parametrize("B,n,d", [
+        (1, 8, 1), (7, 130, 5), (32, 1000, 1), (64, 2048, 256),
+        (128, 512, 128), (3, 4096, 17),
+    ])
+    def test_sweep_shapes(self, key, B, n, d):
+        w = jax.random.poisson(key, 1.0, (B, n)).astype(jnp.float32)
+        x = jax.random.normal(jax.random.fold_in(key, 1), (n, d))
+        wt_k, s1_k, s2_k = ws_ops.weighted_moments(
+            w, x, backend="pallas_interpret")
+        wt_r, s1_r, s2_r = weighted_moments_ref(w, x)
+        np.testing.assert_allclose(wt_k, wt_r[:, 0], rtol=1e-5)
+        np.testing.assert_allclose(s1_k, s1_r, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(s2_k, s2_r, rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, key, dtype):
+        w = jax.random.poisson(key, 1.0, (16, 256)).astype(dtype)
+        x = (jax.random.normal(jax.random.fold_in(key, 1), (256, 8))
+             .astype(dtype))
+        wt_k, s1_k, s2_k = ws_ops.weighted_moments(
+            w, x, backend="pallas_interpret")
+        wt_r, s1_r, s2_r = weighted_moments_ref(w, x)
+        tol = 1e-4 if dtype == jnp.float32 else 5e-2
+        np.testing.assert_allclose(s1_k, s1_r, rtol=tol, atol=tol)
+
+    def test_1d_values(self, key):
+        w = jnp.ones((4, 100))
+        x = jax.random.normal(key, (100,))
+        wt, s1, s2 = ws_ops.weighted_moments(w, x,
+                                             backend="pallas_interpret")
+        assert s1.shape == (4, 1)
+        np.testing.assert_allclose(s1[:, 0], jnp.sum(x), rtol=1e-4)
+
+
+class TestPoissonCounts:
+    def test_deterministic(self):
+        a = pc_ops.poisson_counts(42, 64, 512, backend="pallas_interpret")
+        b = pc_ops.poisson_counts(42, 64, 512, backend="pallas_interpret")
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_seed_sensitivity(self):
+        a = pc_ops.poisson_counts(1, 64, 512, backend="pallas_interpret")
+        b = pc_ops.poisson_counts(2, 64, 512, backend="pallas_interpret")
+        assert not np.array_equal(np.asarray(a), np.asarray(b))
+
+    def test_moments(self):
+        c = pc_ops.poisson_counts(7, 256, 4096, backend="pallas_interpret")
+        mean_e, var_e = expected_moments()
+        assert abs(float(c.mean()) - mean_e) < 0.01
+        assert abs(float(c.var()) - var_e) < 0.02
+
+    def test_pmf(self):
+        c = np.asarray(pc_ops.poisson_counts(11, 512, 2048,
+                                             backend="pallas_interpret"))
+        for k in range(4):
+            frac = float((c == k).mean())
+            assert abs(frac - poisson_pmf(k)) < 0.01, f"P(K={k})"
+
+    def test_ladder_bit_exact_vs_ref(self, key):
+        bits = jax.random.bits(key, (64, 128), dtype=jnp.uint32)
+        np.testing.assert_array_equal(
+            np.asarray(_poisson_from_bits(bits)),
+            np.asarray(poisson_from_bits_ref(bits)))
+
+    @pytest.mark.parametrize("B,n", [(5, 100), (129, 1000)])
+    def test_unaligned_shapes(self, B, n):
+        c = pc_ops.poisson_counts(3, B, n, backend="pallas_interpret")
+        assert c.shape == (B, n)
+
+
+class TestFlashAttention:
+    def _mk(self, key, b, hq, hkv, sq, skv, d, dtype=jnp.float32):
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (b, hq, sq, d), dtype)
+        k = jax.random.normal(ks[1], (b, hkv, skv, d), dtype)
+        v = jax.random.normal(ks[2], (b, hkv, skv, d), dtype)
+        return q, k, v
+
+    @pytest.mark.parametrize("cfg,kwargs", [
+        ((2, 4, 2, 64, 64, 32), dict(causal=True)),
+        ((1, 4, 4, 128, 128, 32), dict(causal=True, window=32)),
+        ((2, 8, 2, 96, 96, 16), dict(causal=False)),
+        ((1, 2, 1, 64, 192, 32), dict(causal=True, kv_offset=128)),
+        ((1, 8, 1, 80, 80, 64), dict(causal=True)),
+    ])
+    @pytest.mark.parametrize("backend", ["blockwise", "pallas_interpret"])
+    def test_sweep_vs_oracle(self, key, cfg, kwargs, backend):
+        q, k, v = self._mk(key, *cfg)
+        ref = mha_reference(q, k, v, **kwargs)
+        out = fa_ops.flash_attention(q, k, v, backend=backend,
+                                     block_q=32, block_k=32, **kwargs)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-5, rtol=1e-4)
+
+    def test_windowed_backend(self, key):
+        q, k, v = self._mk(key, 2, 4, 2, 128, 128, 32)
+        ref = mha_reference(q, k, v, causal=True, window=48)
+        out = fa_ops.flash_attention(q, k, v, backend="windowed",
+                                     causal=True, window=48, block_q=32)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-5, rtol=1e-4)
+
+    def test_bf16(self, key):
+        q, k, v = self._mk(key, 1, 2, 2, 64, 64, 32, jnp.bfloat16)
+        ref = mha_reference(q, k, v, causal=True)
+        out = fa_ops.flash_attention(q, k, v, backend="pallas_interpret",
+                                     causal=True, block_q=32, block_k=32)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32),
+            atol=3e-2, rtol=3e-2)
+
+    def test_unaligned_seq(self, key):
+        q, k, v = self._mk(key, 1, 2, 1, 67, 67, 16)
+        ref = mha_reference(q, k, v, causal=True)
+        out = fa_ops.flash_attention(q, k, v, backend="blockwise",
+                                     causal=True, block_q=32, block_k=32)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-5, rtol=1e-4)

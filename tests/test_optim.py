@@ -1,0 +1,96 @@
+"""Optimizer substrate: AdamW, compression, EARL-adaptive accumulation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.adaptive_accum import (earl_accumulate_gradients,
+                                        gradient_cv)
+from repro.optim.compression import (compress_decompress,
+                                     error_feedback_compress, init_residual)
+
+
+class TestAdamW:
+    def test_converges_on_quadratic(self, key):
+        target = jnp.asarray([1.0, -2.0, 3.0])
+        params = {"w": jnp.zeros(3)}
+        cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=1)
+        state = adamw_init(params, cfg)
+        for _ in range(200):
+            grads = {"w": 2 * (params["w"] - target)}
+            params, state, m = adamw_update(params, grads, state, cfg)
+        np.testing.assert_allclose(np.asarray(params["w"]),
+                                   np.asarray(target), atol=1e-2)
+
+    def test_grad_clipping(self, key):
+        params = {"w": jnp.zeros(4)}
+        cfg = AdamWConfig(grad_clip=1.0)
+        state = adamw_init(params, cfg)
+        _, _, metrics = adamw_update(params, {"w": jnp.full(4, 1e6)},
+                                     state, cfg)
+        assert float(metrics["grad_norm"]) > 1.0   # reported pre-clip
+
+    def test_bf16_states(self, key):
+        params = {"w": jnp.zeros(4)}
+        cfg = AdamWConfig(state_dtype="bfloat16")
+        state = adamw_init(params, cfg)
+        assert state.m["w"].dtype == jnp.bfloat16
+        p2, s2, _ = adamw_update(params, {"w": jnp.ones(4)}, state, cfg)
+        assert s2.v["w"].dtype == jnp.bfloat16
+
+
+class TestCompression:
+    def test_bf16_roundtrip_error_small(self, key):
+        g = {"a": jax.random.normal(key, (1000,))}
+        gq = compress_decompress(g)
+        rel = float(jnp.linalg.norm(gq["a"] - g["a"]) /
+                    jnp.linalg.norm(g["a"]))
+        assert rel < 0.01
+
+    def test_error_feedback_preserves_sum(self, key):
+        """Over many steps, Σ sent ≈ Σ g (residual stays bounded)."""
+        g = {"a": jax.random.normal(key, (500,)) * 1e-3}
+        res = init_residual(g)
+        total_sent = jnp.zeros(500)
+        for i in range(50):
+            sent, res = error_feedback_compress(g, res)
+            total_sent = total_sent + sent["a"].astype(jnp.float32)
+        drift = float(jnp.linalg.norm(total_sent - 50 * g["a"]) /
+                      jnp.linalg.norm(50 * g["a"]))
+        assert drift < 0.01, "error feedback must not lose gradient mass"
+
+
+class TestAdaptiveAccum:
+    def test_stops_early_on_low_variance(self):
+        def grad_fn(params, mb):
+            g = {"w": jnp.full(8, float(mb))}
+            return g, jnp.linalg.norm(g["w"])
+        mbs = [1.0 + 1e-4 * i for i in range(16)]     # ~identical grads
+        grads, dec = earl_accumulate_gradients(grad_fn, {}, mbs, sigma=0.02)
+        assert dec.stop
+        assert dec.microbatches_used < 16
+
+    def test_runs_full_on_high_variance(self, rng):
+        vals = rng.normal(1.0, 2.0, 16)
+        def grad_fn(params, mb):
+            g = {"w": jnp.full(8, float(mb))}
+            return g, jnp.linalg.norm(g["w"])
+        grads, dec = earl_accumulate_gradients(grad_fn, {}, list(vals),
+                                               sigma=1e-6)
+        assert dec.microbatches_used == 16
+
+    def test_mean_gradient_correct(self):
+        def grad_fn(params, mb):
+            g = {"w": jnp.full(2, float(mb))}
+            return g, jnp.linalg.norm(g["w"])
+        mbs = [1.0, 2.0, 3.0, 4.0]
+        grads, dec = earl_accumulate_gradients(grad_fn, {}, mbs, sigma=0.0)
+        np.testing.assert_allclose(
+            np.asarray(grads["w"]),
+            np.full(2, np.mean(mbs[:dec.microbatches_used])), rtol=1e-6)
+
+    def test_gradient_cv_decreasing_in_n(self, rng):
+        small = gradient_cv(rng.normal(5, 1, 4))
+        large = gradient_cv(rng.normal(5, 1, 64))
+        assert large < small

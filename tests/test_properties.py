@@ -1,0 +1,109 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Mean, Quantile, Sum, Var, coefficient_of_variation,
+                        p_shared, work_saved)
+from repro.core.reduce_api import _as_2d
+
+_settings = settings(max_examples=30, deadline=None)
+
+floats = st.floats(min_value=-100, max_value=100, allow_nan=False,
+                   width=32)
+arrays = st.lists(floats, min_size=4, max_size=60)
+weights_st = st.lists(st.floats(min_value=0, max_value=5, allow_nan=False,
+                                width=32), min_size=4, max_size=60)
+
+
+@_settings
+@given(arrays, st.integers(min_value=1, max_value=59))
+def test_statistic_merge_associative(vals, split):
+    """merge(update(s0, A), update(s0, B)) == update over A++B."""
+    x = np.asarray(vals, np.float32)[:, None]
+    split = min(split, len(x) - 1)
+    for stat in (Mean(), Sum(), Var()):
+        s_all = stat.update(stat.init_state(1), x)
+        s_ab = stat.merge(stat.update(stat.init_state(1), x[:split]),
+                          stat.update(stat.init_state(1), x[split:]))
+        np.testing.assert_allclose(np.ravel(stat.finalize(s_ab)),
+                                   np.ravel(stat.finalize(s_all)),
+                                   rtol=1e-3, atol=1e-3)
+
+
+@_settings
+@given(arrays)
+def test_sum_correct_scaling(vals):
+    """correct(result, p) = result / p exactly for SUM (paper §2.1)."""
+    x = np.asarray(vals, np.float32)
+    stat = Sum()
+    res = stat(jnp.asarray(x))
+    for p in (0.1, 0.5, 1.0):
+        np.testing.assert_allclose(np.ravel(stat.correct(res, p)),
+                                   np.ravel(res) / p, rtol=1e-6)
+
+
+@_settings
+@given(arrays, st.floats(min_value=0.01, max_value=100))
+def test_cv_scale_invariant(vals, scale):
+    """c_v(a·X) == c_v(X) for a > 0 (relative error measure)."""
+    t = np.abs(np.asarray(vals, np.float32)) + 1.0
+    cv1 = float(coefficient_of_variation(jnp.asarray(t)))
+    cv2 = float(coefficient_of_variation(jnp.asarray(t * scale)))
+    assert abs(cv1 - cv2) < 1e-3 * max(cv1, 1.0)
+
+
+@_settings
+@given(st.integers(min_value=2, max_value=500),
+       st.floats(min_value=0.01, max_value=0.99))
+def test_p_shared_is_probability(n, y):
+    p = p_shared(n, y)
+    assert 0.0 <= p <= 1.0
+    assert 0.0 <= work_saved(n, y) <= 1.0
+
+
+@_settings
+@given(st.lists(st.floats(min_value=0, max_value=1, allow_nan=False,
+                          width=32), min_size=10, max_size=80),
+       st.floats(min_value=0.05, max_value=0.95))
+def test_quantile_histogram_close_to_exact(vals, q):
+    """The histogram sketch implements the inverted-CDF quantile (first
+    bin where CDF >= q) — compare against numpy's matching method, not its
+    default linear interpolation (they differ on atomic distributions)."""
+    x = np.asarray(vals, np.float32)
+    stat = Quantile(q, nbins=4096, lo=-0.01, hi=1.01)
+    est = float(np.ravel(stat(jnp.asarray(x)))[0])
+    exact = float(np.quantile(x, q, method="inverted_cdf"))
+    assert abs(est - exact) <= 2 * (1.02 / 4096)
+
+
+@_settings
+@given(weights_st)
+def test_weighted_update_equals_repeat(ws):
+    """Integer-weighted update == updating with repeated rows — the
+    identity that makes counts-based resampling valid (DESIGN.md §2)."""
+    w = np.floor(np.asarray(ws, np.float32))
+    x = np.arange(len(w), dtype=np.float32)[:, None] / 7.0
+    if w.sum() < 1:
+        return
+    stat = Mean()
+    s_w = stat.update(stat.init_state(1), x, w)
+    reps = np.repeat(x[:, 0], w.astype(int))[:, None]
+    s_r = stat.update(stat.init_state(1), reps)
+    np.testing.assert_allclose(np.ravel(stat.finalize(s_w)),
+                               np.ravel(stat.finalize(s_r)), rtol=1e-4)
+
+
+@_settings
+@given(st.integers(min_value=1, max_value=2**31 - 1),
+       st.integers(min_value=1, max_value=16),
+       st.integers(min_value=1, max_value=300))
+def test_poisson_kernel_always_valid(seed, B, n):
+    """Kernel output is integral, nonnegative, bounded by the ladder."""
+    from repro.kernels.poisson_counts import ops as pc_ops
+    c = np.asarray(pc_ops.poisson_counts(seed, B, n,
+                                         backend="pallas_interpret"))
+    assert c.shape == (B, n)
+    assert (c >= 0).all() and (c <= 10).all()
+    np.testing.assert_array_equal(c, np.round(c))

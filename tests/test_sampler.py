@@ -1,0 +1,80 @@
+"""Sampling over the sharded store (paper §3.3): uniformity, prefix
+semantics, read accounting, pre- vs post-map."""
+import numpy as np
+import pytest
+from scipy import stats as sps
+
+from repro.data import (PostMapSampler, PreMapSampler, ShardedStore,
+                        synthetic_numeric)
+
+
+def _store(n=50_000, nvals=20, interleave=True):
+    # clustered layout: values sorted -> worst case for block sampling
+    data = np.sort(np.repeat(np.arange(nvals), n // nvals)).astype(
+        np.float32)[:, None]
+    return ShardedStore.from_array(data, 1024, interleave=interleave)
+
+
+class TestUniformity:
+    def test_chi_square_uniform_sample(self):
+        """Prefix samples from an adversarially clustered layout must be
+        uniform (the paper's block-sampling hazard, §7)."""
+        store = _store()
+        sampler = PreMapSampler(store, seed=0)
+        sample = np.asarray(sampler.take(0, 5000)).ravel()
+        counts = np.bincount(sample.astype(int), minlength=20)
+        chi2, p = sps.chisquare(counts)
+        assert p > 0.001, f"sample not uniform: chi2={chi2}, p={p}"
+
+    def test_prefixes_are_nested(self):
+        store = _store()
+        sampler = PreMapSampler(store, seed=1)
+        a = np.asarray(sampler.take(0, 100))
+        b = np.asarray(sampler.take(0, 500))
+        np.testing.assert_array_equal(a, b[:100])
+
+    def test_no_replacement_within_prefix(self):
+        store = ShardedStore.from_array(
+            np.arange(10_000, dtype=np.float32)[:, None], 512)
+        sampler = PreMapSampler(store, seed=2)
+        s = np.asarray(sampler.take(0, 10_000)).ravel()
+        assert len(np.unique(s)) == 10_000
+
+
+class TestReadAccounting:
+    def test_pre_map_reads_only_sample(self):
+        store = _store()
+        sampler = PreMapSampler(store, seed=3)
+        sampler.take(0, 1000)
+        assert store.stats.rows_read == 1000
+        assert store.stats.splits_opened <= len(store.splits)
+
+    def test_post_map_reads_everything_once(self):
+        store = _store()
+        sampler = PostMapSampler(store, seed=3)
+        sampler.take(0, 1000)
+        assert store.stats.rows_read == store.N
+        assert sampler.kv_count == store.N        # exact ⟨k,v⟩ accounting
+        before = store.stats.rows_read
+        sampler.take(1000, 2000)                  # cached: no re-read
+        assert store.stats.rows_read == before
+
+    def test_pre_and_post_same_rows(self):
+        data = synthetic_numeric(20_000, 10, 2, seed=5)
+        s1 = PreMapSampler(ShardedStore.from_array(data, 1024, seed=7),
+                           seed=9)
+        s2 = PostMapSampler(ShardedStore.from_array(data, 1024, seed=7),
+                            seed=9)
+        np.testing.assert_allclose(np.asarray(s1.take(0, 500)),
+                                   np.asarray(s2.take(0, 500)))
+
+
+class TestStore:
+    def test_locate_roundtrip(self):
+        store = ShardedStore.from_array(
+            np.arange(5000, dtype=np.float32)[:, None], 512,
+            interleave=False)
+        rows = np.array([0, 511, 512, 4999])
+        split, local = store.locate(rows)
+        for r, s, l in zip(rows, split, local):
+            assert store.splits[s][l, 0] == float(r)

@@ -1,0 +1,143 @@
+"""Sharding resolver + HLO analysis unit tests (no multi-device needed)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.launch.hlo_analysis import (collective_bytes, split_computations,
+                                       while_trip_counts, _shape_bytes)
+from repro.launch.hlo_flops import dot_flops
+from repro.launch.sharding import (SERVE_RULES, TRAIN_RULES, resolve_spec)
+
+
+class _FakeMesh:
+    """Duck-typed mesh: resolver only reads .shape (name -> size)."""
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+
+
+SINGLE = _FakeMesh(data=16, model=16)
+MULTI = _FakeMesh(pod=2, data=16, model=16)
+
+
+class TestResolver:
+    def test_fsdp_weight(self):
+        spec = resolve_spec((2048, 8192), ("embed", "mlp"), SINGLE,
+                            TRAIN_RULES)
+        assert spec == P("data", "model")
+
+    def test_kv_heads_fallback_replicates(self):
+        # 8 kv heads unsplittable over model=16 -> replicated
+        spec = resolve_spec((2048, 8, 128), ("embed", "kv_heads",
+                                             "head_dim"), SINGLE,
+                            TRAIN_RULES)
+        assert spec == P("data", None, None)
+
+    def test_batch_takes_pod_and_data(self):
+        spec = resolve_spec((256, 4096), ("batch", "seq"), MULTI,
+                            TRAIN_RULES)
+        assert spec == P(("pod", "data"), None)
+
+    def test_batch_partial_prefix(self):
+        # batch 2 divisible by pod(2) but not pod*data(32)
+        spec = resolve_spec((2, 128), ("batch", "seq"), MULTI, TRAIN_RULES)
+        assert spec == P("pod", None)
+
+    def test_flash_decode_fallback(self):
+        """batch=1 can't shard -> the cache sequence axis claims data."""
+        spec = resolve_spec((1, 8, 524288, 128),
+                            ("batch", "kv_heads", "cache_seq", "head_dim"),
+                            SINGLE, SERVE_RULES)
+        assert spec == P(None, None, "data", None)
+
+    def test_no_double_use_of_axis(self):
+        spec = resolve_spec((128, 16, 32768, 128),
+                            ("batch", "kv_heads", "cache_seq", "head_dim"),
+                            SINGLE, SERVE_RULES)
+        # batch grabbed data; kv got model; cache_seq must NOT reuse either
+        assert spec == P("data", "model", None, None)
+
+    def test_padded_vocab_divisible(self):
+        from repro.configs import ARCH_IDS, get_config
+        for arch in ARCH_IDS:
+            cfg = get_config(arch)
+            assert cfg.padded_vocab % 16 == 0, arch
+            assert cfg.padded_vocab >= cfg.vocab
+
+    def test_all_dims_product_divides(self):
+        """Property: any resolved spec's axis product divides the dim."""
+        rng = np.random.default_rng(0)
+        for _ in range(200):
+            dims = tuple(int(d) for d in rng.integers(1, 4096, 3))
+            axes = tuple(rng.choice(list(TRAIN_RULES)) for _ in range(3))
+            spec = resolve_spec(dims, axes, MULTI, TRAIN_RULES)
+            for dim, part in zip(dims, spec):
+                if part is None:
+                    continue
+                parts = part if isinstance(part, tuple) else (part,)
+                prod = int(np.prod([MULTI.shape[p] for p in parts]))
+                assert dim % prod == 0
+
+
+_FAKE_HLO = """
+HloModule jit_step
+
+%body.1 (arg.1: (s32[], f32[64,128])) -> (s32[], f32[64,128]) {
+  %p = (s32[], f32[64,128]) parameter(0)
+  %ar = f32[64,128]{1,0} all-reduce(f32[64,128]{1,0} %x), replica_groups={}
+  ROOT %t = (s32[], f32[64,128]) tuple(%i, %ar)
+}
+
+%cond.1 (arg.2: (s32[], f32[64,128])) -> pred[] {
+  %p2 = (s32[], f32[64,128]) parameter(0)
+  %bound = s32[] constant(12)
+  ROOT %cmp = pred[] compare(%it, %bound), direction=LT
+}
+
+ENTRY %main (a: f32[64,128]) -> f32[64,128] {
+  %a = f32[64,128]{1,0} parameter(0)
+  %ag = f32[64,256]{1,0} all-gather(f32[64,128]{1,0} %a), dimensions={1}
+  %w = (s32[], f32[64,128]) while(%init), condition=%cond.1, body=%body.1
+  ROOT %out = f32[64,128]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+class TestHloAnalysis:
+    def test_shape_bytes(self):
+        assert _shape_bytes("f32[2,3]") == 24
+        assert _shape_bytes("bf16[10]") == 20
+        assert _shape_bytes("(f32[2], s32[4])") == 24
+
+    def test_split_computations(self):
+        comps = split_computations(_FAKE_HLO)
+        assert set(comps) == {"body.1", "cond.1", "main"}
+        assert comps["main"].is_entry
+
+    def test_trip_counts(self):
+        trips = dict(while_trip_counts(_FAKE_HLO))
+        assert trips["body.1"] == 12
+
+    def test_collective_bytes_trip_multiplied(self):
+        out = collective_bytes(_FAKE_HLO)
+        # all-gather: 64*256*4 = 65536; all-reduce: 2 * 64*128*4 * 12 trips
+        assert out["all-gather"] == 65536
+        assert out["all-reduce"] == 2 * 64 * 128 * 4 * 12
+        assert out["total"] == out["all-gather"] + out["all-reduce"]
+
+    def test_dot_flops_on_real_module(self, key):
+        """Parse a real lowered module: matmul in a scan of length 5."""
+        import jax.numpy as jnp
+
+        def f(x, w):
+            def body(c, _):
+                return c @ w, None
+            y, _ = jax.lax.scan(body, x, None, length=5)
+            return y
+
+        x = jax.ShapeDtypeStruct((8, 16), jnp.float32)
+        w = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+        hlo = jax.jit(f).lower(x, w).compile().as_text()
+        out = dot_flops(hlo)
+        expected = 2 * 8 * 16 * 16 * 5
+        assert out["flops"] == pytest.approx(expected, rel=0.01), out

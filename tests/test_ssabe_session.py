@@ -1,0 +1,103 @@
+"""SSABE + EarlSession + earl_eval + pipeline restartability."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import EarlSession, Mean
+from repro.core.ssabe import fit_cv_curve, invert_cv_curve, ssabe
+from repro.data import synthetic_tokens
+from repro.data.pipeline import EvalSamplePipeline, TokenBatchPipeline
+
+
+class TestSSABE:
+    def test_fit_recovers_planted_curve(self):
+        ns = np.array([50, 100, 200, 400, 800])
+        a_true, c_true = 0.8, 0.01
+        cvs = a_true / np.sqrt(ns) + c_true
+        a, c = fit_cv_curve(ns, cvs)
+        assert a == pytest.approx(a_true, rel=1e-6)
+        assert c == pytest.approx(c_true, abs=1e-8)
+
+    def test_invert_curve(self):
+        # a/sqrt(n) + c <= sigma  ->  n >= (a/(sigma-c))^2
+        n = invert_cv_curve(a=1.0, c=0.0, sigma=0.1, n_cap=10**9)
+        assert n == 100
+
+    def test_invert_impossible_sigma_caps(self):
+        assert invert_cv_curve(a=1.0, c=0.2, sigma=0.1, n_cap=1234) == 1234
+
+    def test_histories_recorded(self, key):
+        x = jax.random.normal(key, (1000,)) + 5
+        res = ssabe(x, Mean(), sigma=0.05, tau=0.01, key=key, N=10**6)
+        assert len(res.cv_history_B) >= 1
+        assert len(res.cv_history_n) == 5          # l = 5 (paper)
+        ns = [h[0] for h in res.cv_history_n]
+        assert ns == sorted(ns)                    # nested n_i = n/2^(l-i)
+
+    def test_single_iteration_typical(self, key):
+        """Paper §5: 'a single iteration is usually required'."""
+        class Perm:
+            def __init__(self, data):
+                self.data = np.asarray(data)
+                self.N = len(data)
+            def take(self, a, b):
+                return jnp.asarray(self.data[a:b])
+        data = np.random.default_rng(1).normal(50, 5, 400_000).astype(
+            np.float32)
+        sess = EarlSession(Perm(data), Mean(), sigma=0.01)
+        out = sess.run(key)
+        assert out.iterations <= 2
+        assert not out.fell_back
+
+
+class TestPipelines:
+    def test_token_pipeline_restart(self):
+        docs = synthetic_tokens(64, 33, 128, seed=0)
+        p1 = TokenBatchPipeline(docs, batch=4, seq_len=32, seed=5)
+        for _ in range(3):
+            p1.next_batch()
+        saved = p1.state_dict()
+        want_t, want_l = p1.next_batch()
+
+        p2 = TokenBatchPipeline(docs, batch=4, seq_len=32, seed=5)
+        p2.load_state_dict(saved)
+        got_t, got_l = p2.next_batch()
+        np.testing.assert_array_equal(np.asarray(want_t), np.asarray(got_t))
+        np.testing.assert_array_equal(np.asarray(want_l), np.asarray(got_l))
+
+    def test_epoch_rollover_reshuffles(self):
+        docs = synthetic_tokens(8, 33, 128, seed=0)
+        p = TokenBatchPipeline(docs, batch=4, seq_len=32, seed=5)
+        first_epoch = [np.asarray(p.next_batch()[0]) for _ in range(2)]
+        second_epoch = [np.asarray(p.next_batch()[0]) for _ in range(2)]
+        assert p.state.epoch == 1
+        same = all((a == b).all() for a, b in zip(first_epoch, second_epoch))
+        assert not same, "new epoch must reshuffle"
+
+    def test_eval_pipeline_prefix(self):
+        docs = synthetic_tokens(128, 65, 100, seed=2)
+        ep = EvalSamplePipeline(docs, seq_len=64)
+        t1, l1 = ep.take(0, 8)
+        t2, l2 = ep.take(0, 16)
+        np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2)[:8])
+        assert l1.shape == (8, 64)
+
+
+class TestEarlEvalIntegration:
+    def test_eval_speedup_and_accuracy(self, key):
+        from repro.configs import get_config
+        from repro.models import init_params
+        from repro.train import EarlEval, make_eval_step
+
+        cfg = get_config("stablelm-3b", smoke=True)
+        params = init_params(key, cfg)
+        docs = synthetic_tokens(3000, 33, cfg.vocab, seed=3)
+        pipe = EvalSamplePipeline(docs, seq_len=32)
+        ev = EarlEval(jax.jit(make_eval_step(cfg)), params, pipe,
+                      sigma=0.01, tau=0.05, eval_batch=64)
+        res = ev.run(key)
+        info = res.history[-1]
+        assert info["model_forwards"] < 0.5 * info["full_pass_forwards"], \
+            "earl_eval must certify accuracy from a fraction of the corpus"
+        assert res.cv <= 0.01

@@ -1,0 +1,91 @@
+"""End-to-end behaviour tests for the EARL system (paper-level claims)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (EarlSession, Mean, Median, Quantile, Sum, bootstrap,
+                        ssabe)
+from repro.data import (PreMapSampler, ShardedStore, synthetic_numeric)
+
+
+def _store(n=200_000, mean=10.0, std=2.0, seed=0):
+    data = synthetic_numeric(n, mean, std, seed=seed)
+    return ShardedStore.from_array(data, 8192, seed=seed)
+
+
+class TestEarlyAccurateResults:
+    """C1: early results within the user bound, from a fraction of data."""
+
+    def test_mean_within_bound(self, key):
+        store = _store()
+        sess = EarlSession(PreMapSampler(store, seed=1), Mean(), sigma=0.01)
+        out = sess.run(key)
+        true = np.concatenate([s for s in store.splits]).mean()
+        assert not out.fell_back
+        assert out.fraction < 0.25, "early result should use a fraction"
+        # cv <= sigma certified; sanity: estimate near truth
+        assert out.cv <= 0.01
+        assert abs(float(np.ravel(out.result)[0]) - true) / true < 0.05
+
+    def test_sum_corrected_by_p(self, key):
+        store = _store(n=100_000)
+        sess = EarlSession(PreMapSampler(store, seed=2), Sum(), sigma=0.02)
+        out = sess.run(key)
+        true = np.concatenate([s for s in store.splits]).sum()
+        est = float(np.ravel(out.result)[0])
+        assert abs(est - true) / abs(true) < 0.05, \
+            "correct(1/p) must rescale the sampled SUM (paper §2.1)"
+
+    def test_small_data_falls_back_to_exact(self, key):
+        """Paper §6.1: below the profitability point EARL switches to the
+        full computation."""
+        store = _store(n=300)
+        sess = EarlSession(PreMapSampler(store, seed=3), Mean(),
+                           sigma=0.0005)
+        out = sess.run(key)
+        assert out.fell_back
+        true = np.concatenate([s for s in store.splits]).mean()
+        np.testing.assert_allclose(np.ravel(out.result)[0], true, rtol=1e-5)
+
+    def test_median_early(self, key):
+        store = _store(n=150_000)
+        q = Quantile(0.5, lo=0.0, hi=20.0)
+        sess = EarlSession(PreMapSampler(store, seed=4), q, sigma=0.02)
+        out = sess.run(key)
+        data = np.concatenate([s for s in store.splits])
+        true = np.median(data)
+        assert not out.fell_back
+        assert abs(float(np.ravel(out.result)[0]) - true) / true < 0.05
+
+    def test_read_savings(self, key):
+        """The pre-map sampler must not read the whole store."""
+        store = _store(n=200_000)
+        sampler = PreMapSampler(store, seed=5)
+        sess = EarlSession(sampler, Mean(), sigma=0.01)
+        sess.run(key)
+        assert store.stats.rows_read < 0.75 * store.N
+
+
+class TestPaperConstants:
+    """Fig 2 / §6.4: ~30 bootstraps, ~1% sample for 5% error on the mean."""
+
+    def test_about_30_bootstraps_suffice(self, key):
+        x = jnp.asarray(synthetic_numeric(5000, 10, 2, seed=7))
+        res = ssabe(x[:2000], Mean(), sigma=0.05, tau=0.01, key=key,
+                    N=10_000_000)
+        assert 4 <= res.B <= 128, f"B-hat={res.B} out of the paper's regime"
+
+    def test_small_sample_for_5pct(self, key):
+        x = jnp.asarray(synthetic_numeric(5000, 10, 2, seed=8))
+        res = ssabe(x[:2000], Mean(), sigma=0.05, tau=0.01, key=key,
+                    N=1_000_000)
+        # for N(10, 2) the CLT needs (0.2/0.05)^2 = 16 samples; SSABE must
+        # land well under 1% of N
+        assert res.n <= 0.01 * 1_000_000
+
+    def test_cv_decreases_with_B_and_n(self, key):
+        x = jnp.asarray(synthetic_numeric(4000, 10, 2, seed=9))
+        cv_small_n = bootstrap(x[:100], Mean(), B=64, key=key).cv
+        cv_large_n = bootstrap(x, Mean(), B=64, key=key).cv
+        assert cv_large_n < cv_small_n, "Fig 2b: larger n -> lower c_v"
