@@ -5,12 +5,25 @@ correctness tool, not a perf tool), so the timing comparison here is the
 fused *algorithm* (one pass, three moments) against the naive version — the
 structural win the TPU kernel encodes.  The VMEM/MXU design constants are
 reported as derived metadata for the roofline discussion.
+
+``run_bootstrap`` benchmarks the matrix-free resample loop (in-kernel
+counter-based RNG fused into the contraction, via the scan lowering on CPU)
+against the materialized-(B, n) weight-matrix path and the naive 3-pass
+formulation, and writes the trajectory to BENCH_bootstrap.json so perf is
+tracked PR-over-PR.
 """
+import json
+import pathlib
+
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, timeit
+from repro.kernels.weighted_hist import ops as wh_ops
 from repro.kernels.weighted_stats import ops as ws_ops
+
+_BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent \
+    / "BENCH_bootstrap.json"
 
 
 def _naive(w, x):
@@ -49,3 +62,90 @@ def run() -> None:
     emit("kernel_weighted_moments_design", 0.0,
          f"tile_vmem_bytes={vmem};arith_intensity={intensity:.1f}"
          f";mxu_aligned={bb % 128 == 0 and bd % 128 == 0}")
+
+    run_bootstrap()
+    run_histogram()
+
+
+def run_bootstrap() -> None:
+    """Matrix-free bootstrap: fused-RNG vs materialized-W vs naive 3-pass.
+
+    The fused-RNG path never builds the (B, n) weight matrix (peak live
+    memory O(B·block_n + B·d) on CPU, O(B·d) HBM on TPU); the other two pay
+    for both the jax.random.poisson draw of (B, n) and its memory traffic.
+    """
+    B, n, d = 256, 1 << 16, 8
+    key = jax.random.PRNGKey(7)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (n, d))
+
+    @jax.jit
+    def materialized(key, x):
+        w = jax.random.poisson(key, 1.0, (B, n)).astype(jnp.float32)
+        return jnp.sum(w, axis=1), w @ x, w @ (x * x)
+
+    wgen = jax.jit(
+        lambda key: jax.random.poisson(key, 1.0, (B, n)).astype(jnp.float32))
+    p1 = jax.jit(lambda w: jnp.sum(w, axis=1))
+    p2 = jax.jit(lambda w, x: w @ x)
+    p3 = jax.jit(lambda w, x: w @ (x * x))
+
+    def naive():
+        w = wgen(key)
+        jax.block_until_ready((p1(w), p2(w, x), p3(w, x)))
+
+    us_fused = timeit(lambda: jax.block_until_ready(
+        ws_ops.fused_poisson_moments(7, x, B)))
+    us_mat = timeit(lambda: jax.block_until_ready(materialized(key, x)))
+    us_naive = timeit(naive)
+
+    speedup_mat = us_mat / max(us_fused, 1e-9)
+    speedup_naive = us_naive / max(us_fused, 1e-9)
+    emit("bootstrap_fused_rng", us_fused,
+         f"B={B};n={n};d={d};weight_matrix_bytes=0")
+    emit("bootstrap_materialized_w", us_mat,
+         f"fused_speedup={speedup_mat:.2f}x;weight_matrix_bytes={4 * B * n}")
+    emit("bootstrap_naive_3pass", us_naive,
+         f"fused_speedup={speedup_naive:.2f}x;w_bytes_read_ratio=3.0")
+
+    _BENCH_JSON.write_text(json.dumps({
+        "config": {"B": B, "n": n, "d": d,
+                   "backend": jax.default_backend(),
+                   "fused_lowering": ("pallas"
+                                      if jax.default_backend() == "tpu"
+                                      else "scan")},
+        "us_per_call": {"fused_rng": us_fused,
+                        "materialized_w": us_mat,
+                        "naive_3pass": us_naive},
+        "speedup_fused_vs_materialized": speedup_mat,
+        "speedup_fused_vs_naive": speedup_naive,
+        "peak_weight_bytes": {"fused_rng": 0,
+                              "materialized_w": 4 * B * n,
+                              "naive_3pass": 4 * B * n},
+    }, indent=2) + "\n")
+
+
+def run_histogram() -> None:
+    """Quantile sketch update: flattened scatter-add vs one_hot+einsum
+    (the old (n, d, nbins) memory blowup)."""
+    n, d, nbins = 1 << 16, 4, 2048
+    key = jax.random.PRNGKey(3)
+    x = jax.random.uniform(key, (n, d))
+    w = jnp.ones((n,))
+    lo, hi = jnp.zeros((d,)), jnp.ones((d,))
+
+    scatter = jax.jit(lambda x, w: wh_ops.weighted_histogram(
+        x, w, lo, hi, nbins, backend="jnp"))
+
+    @jax.jit
+    def onehot(x, w):
+        idx = jnp.clip((x * nbins).astype(jnp.int32), 0, nbins - 1)
+        oh = jax.nn.one_hot(idx, nbins, dtype=jnp.float32)
+        return jnp.einsum("n,ndb->db", w, oh)
+
+    us_s = timeit(lambda: jax.block_until_ready(scatter(x, w)))
+    us_o = timeit(lambda: jax.block_until_ready(onehot(x, w)))
+    emit("hist_scatter_add", us_s,
+         f"n={n};d={d};nbins={nbins};peak_bytes={4 * n * d}")
+    emit("hist_onehot_einsum", us_o,
+         f"scatter_speedup={us_o / max(us_s, 1e-9):.2f}x"
+         f";peak_bytes={4 * n * d * nbins}")

@@ -1,0 +1,14 @@
+"""Version-compatibility shims (the container pins jax 0.4.37)."""
+from __future__ import annotations
+
+
+def shard_map_compat():
+    """Return ``(shard_map, kwargs)`` with replication checking disabled,
+    across the jax>=0.6 (``jax.shard_map``/``check_vma``) and jax 0.4.x
+    (``jax.experimental.shard_map``/``check_rep``) APIs."""
+    try:
+        from jax import shard_map
+        return shard_map, {"check_vma": False}
+    except ImportError:
+        from jax.experimental.shard_map import shard_map
+        return shard_map, {"check_rep": False}

@@ -13,6 +13,19 @@ Two engines:
   shard-independent, and makes inter-iteration delta maintenance exact.
 
 Both route moment statistics through kernels/weighted_stats when asked.
+
+Backends (``backend=`` on ``bootstrap``/``bootstrap_chunked``):
+
+* ``None``        — materialized weights (jnp oracle); ``use_kernel`` may
+  additionally route the contraction through the weighted_stats kernel.
+* ``"fused_rng"`` — matrix-free (poisson engine only): weights are
+  generated inside the contraction from a counter-based PRNG
+  (kernels/weighted_stats.fused_poisson_moments), so the (B, n) weight
+  matrix never exists and peak live memory is O(B·d).  For statistics
+  without a moment decomposition the same implicit weights are
+  materialized per chunk as a fallback.  The PRNG seed derives
+  deterministically from ``key``, so the fold-in discipline (delta
+  maintenance, common random numbers) carries over unchanged.
 """
 from __future__ import annotations
 
@@ -43,19 +56,55 @@ class BootstrapResult:
 # ----------------------------------------------------------------------------
 # weight generation
 # ----------------------------------------------------------------------------
+def seed_from_key(key: jax.Array) -> jax.Array:
+    """Deterministic int32 seed for the counter-based in-kernel PRNG.
+
+    Multi-stream callers (chunked bootstrap, delta maintenance) derive ONE
+    base seed per run and offset it by the chunk/step counter — streams
+    within a run are distinct *by construction* (no 31-bit birthday bound),
+    while different keys still give independent runs."""
+    return jax.random.randint(key, (), 0, jnp.iinfo(jnp.int32).max,
+                              dtype=jnp.int32)
+
+
+def fused_resample_states(stat: Statistic, seed, x2: jax.Array, B: int,
+                          n_valid=None):
+    """B-leading pytree of per-resample states for ``x2`` under implicit
+    in-kernel Poisson(1) weights (the matrix-free hot path).
+
+    Moment statistics come straight from ``fused_poisson_moments`` (the
+    (B, n) matrix never exists); other statistics fall back to
+    materializing the same implicit weights.  The result is a *delta*
+    state: ``merge`` it into running states (delta/chunked) or ``finalize``
+    it directly (one-shot bootstrap).
+    """
+    from repro.kernels.weighted_stats import ops as ws_ops
+    if stat.moment_powers is not None:
+        w_tot, s1, s2 = ws_ops.fused_poisson_moments(seed, x2, B,
+                                                     n_valid=n_valid)
+        return jax.vmap(stat.from_moments)(w_tot, s1, s2)
+    w = ws_ops.implicit_weights(seed, B, x2.shape[0])
+    if n_valid is not None:
+        w = w * (jnp.arange(x2.shape[0]) < n_valid).astype(w.dtype)[None, :]
+    dim = x2.shape[1]
+    return jax.vmap(lambda wr: stat.update(stat.init_state(dim), x2, wr))(w)
+
+
 def multinomial_counts(key: jax.Array, B: int, n: int,
                        resample_size: Optional[int] = None) -> jax.Array:
     """Exact multinomial bootstrap counts, shape (B, n) int32.
 
-    Drawn as n' categorical draws per resample, histogrammed via scatter-add.
+    Drawn as n' categorical draws per resample, histogrammed as ONE
+    flattened (B·m,) scatter-add into the (B, n) zeros buffer — a single
+    XLA scatter dispatch instead of B vmapped ones.
     """
     m = n if resample_size is None else int(resample_size)
     idx = jax.random.randint(key, (B, m), 0, n)            # (B, m) draws
-
-    def hist(row):
-        return jnp.zeros((n,), jnp.int32).at[row].add(1)
-
-    return jax.vmap(hist)(idx)
+    rows = jnp.broadcast_to(jnp.arange(B, dtype=idx.dtype)[:, None],
+                            idx.shape)
+    # 2-D scatter indices (not a flattened B·n offset, which would overflow
+    # int32 once B·n >= 2^31): still one XLA scatter dispatch.
+    return jnp.zeros((B, n), jnp.int32).at[rows, idx].add(1)
 
 
 def poisson_weights(key: jax.Array, B: int, n: int,
@@ -95,28 +144,48 @@ def bootstrap_thetas(values: jax.Array, stat: Statistic,
     return jax.vmap(one)(weights)
 
 
-@partial(jax.jit, static_argnames=("stat", "B", "engine", "use_kernel"))
-def _bootstrap_jit(values, key, stat, B, engine, use_kernel):
+def _fused_thetas(values: jax.Array, stat: Statistic, B: int,
+                  key: jax.Array) -> jax.Array:
+    """Matrix-free resample loop: moments via in-kernel RNG, (B, n) never
+    built.  Falls back to materializing the same implicit weights for
+    statistics without a moment decomposition."""
+    states = fused_resample_states(stat, seed_from_key(key), _as_2d(values),
+                                   B)
+    return jax.vmap(stat.finalize)(states)
+
+
+@partial(jax.jit,
+         static_argnames=("stat", "B", "engine", "use_kernel", "backend"))
+def _bootstrap_jit(values, key, stat, B, engine, use_kernel, backend):
     n = values.shape[0]
-    w = weights_for(engine, key, B, n)
-    thetas = bootstrap_thetas(values, stat, w, use_kernel=use_kernel)
+    if backend == "fused_rng":
+        thetas = _fused_thetas(values, stat, B, key)
+    else:
+        w = weights_for(engine, key, B, n)
+        thetas = bootstrap_thetas(values, stat, w, use_kernel=use_kernel)
     estimate = stat(values)
     return thetas, estimate
 
 
 def bootstrap(values: jax.Array, stat: Statistic, B: int, key: jax.Array,
               engine: str = "poisson", p: float = 1.0,
-              use_kernel: bool = False, alpha: float = 0.05
-              ) -> BootstrapResult:
+              use_kernel: bool = False, alpha: float = 0.05,
+              backend: Optional[str] = None) -> BootstrapResult:
     """One full bootstrap pass: B resamples, result distribution, accuracy.
 
     ``p`` is the fraction of the population the sample represents — passed to
     ``stat.correct`` (paper §2.1) on both the estimate and the thetas.
+    ``backend="fused_rng"`` runs the matrix-free pipeline (module docstring).
     """
     if not isinstance(stat, Statistic):
         raise TypeError("stat must be a reduce_api.Statistic")
+    if backend not in (None, "fused_rng"):
+        raise ValueError(f"unknown bootstrap backend: {backend!r}")
+    if backend == "fused_rng" and engine != "poisson":
+        raise ValueError("backend='fused_rng' requires the poisson engine "
+                         "(in-kernel RNG draws iid Poisson(1) weights)")
     thetas, estimate = _bootstrap_jit(values, key, stat, int(B), engine,
-                                      bool(use_kernel))
+                                      bool(use_kernel), backend)
     thetas = stat.correct(thetas, p)
     estimate = stat.correct(estimate, p)
     return BootstrapResult(
@@ -133,36 +202,46 @@ def bootstrap(values: jax.Array, stat: Statistic, B: int, key: jax.Array,
 # ----------------------------------------------------------------------------
 def bootstrap_chunked(values: jax.Array, stat: Statistic, B: int,
                       key: jax.Array, chunk: int = 65536,
-                      engine: str = "poisson", p: float = 1.0
-                      ) -> BootstrapResult:
+                      engine: str = "poisson", p: float = 1.0,
+                      backend: Optional[str] = None) -> BootstrapResult:
     """Scan over chunks of the sample, merging per-resample states.
 
     Only valid for mergeable statistics (all built-ins).  Poisson weights are
     drawn per chunk with a folded key, so the full (B, n) matrix never
-    materializes — peak memory is (B, chunk).
+    materializes — peak memory is (B, chunk), or O(B·d) with
+    ``backend="fused_rng"`` (weights generated inside the contraction, the
+    per-chunk matrix never materializes either).
     """
     if engine != "poisson":
         raise ValueError("chunked bootstrap requires the poisson engine "
                          "(multinomial couples all chunks; see DESIGN.md §7)")
+    if backend not in (None, "fused_rng"):
+        raise ValueError(f"unknown bootstrap backend: {backend!r}")
     x = _as_2d(values)
     n, dim = x.shape
     pad = (-n) % chunk
     xp = jnp.pad(x, ((0, pad), (0, 0)))
-    valid = jnp.pad(jnp.ones((n,), jnp.float32), (0, pad))
     nchunks = xp.shape[0] // chunk
     xc = xp.reshape(nchunks, chunk, dim)
-    vc = valid.reshape(nchunks, chunk)
 
     init = jax.vmap(lambda _: stat.init_state(dim))(jnp.arange(B))
+    base_seed = seed_from_key(key)      # one base; chunks offset by counter
 
     def body(states, inp):
-        i, xi, vi = inp
-        w = poisson_weights(jax.random.fold_in(key, i), B, chunk) * vi[None, :]
+        i, xi = inp
+        n_valid = jnp.minimum(chunk, n - i * chunk)   # suffix of last chunk
+        if backend == "fused_rng":
+            delta = fused_resample_states(stat, base_seed + i, xi, B,
+                                          n_valid=n_valid)
+            return jax.vmap(stat.merge)(states, delta), None
+        vi = (jnp.arange(chunk) < n_valid).astype(jnp.float32)
+        w = poisson_weights(jax.random.fold_in(key, i), B, chunk) \
+            * vi[None, :]
         new = jax.vmap(lambda s, wr: stat.update(s, xi, wr))(states, w)
         return new, None
 
     states, _ = jax.lax.scan(body, init,
-                             (jnp.arange(nchunks), xc, vc))
+                             (jnp.arange(nchunks), xc))
     thetas = jax.vmap(stat.finalize)(states)
     thetas = stat.correct(thetas, p)
     estimate = stat.correct(stat(values), p)

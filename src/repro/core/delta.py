@@ -32,7 +32,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import accuracy
-from repro.core.bootstrap import BootstrapResult, poisson_weights
+from repro.core.bootstrap import (BootstrapResult, fused_resample_states,
+                                  poisson_weights, seed_from_key)
 from repro.core.reduce_api import Statistic, _as_2d
 
 
@@ -48,19 +49,33 @@ class PoissonDelta:
     B: int
     n: int
     step: int            # key-folding counter (one per extend)
+    backend: Optional[str] = None   # None = jnp weights, "fused_rng" =
+    #                                 matrix-free in-kernel RNG (O(B·d) peak)
 
 
-def poisson_delta_init(stat: Statistic, B: int, dim: int,
-                       key: jax.Array) -> PoissonDelta:
+def poisson_delta_init(stat: Statistic, B: int, dim: int, key: jax.Array,
+                       backend: Optional[str] = None) -> PoissonDelta:
+    if backend not in (None, "fused_rng"):
+        raise ValueError(f"unknown delta backend: {backend!r}")
     states = jax.vmap(lambda _: stat.init_state(dim))(jnp.arange(B))
     return PoissonDelta(stat=stat, key=key, states=states,
-                        est_state=stat.init_state(dim), B=B, n=0, step=0)
+                        est_state=stat.init_state(dim), B=B, n=0, step=0,
+                        backend=backend)
 
 
-@partial(jax.jit, static_argnames=("stat", "B"))
-def _pd_extend_jit(states, est_state, key, step, x, stat, B):
-    w = poisson_weights(jax.random.fold_in(key, step), B, x.shape[0])
-    new_states = jax.vmap(lambda s, wr: stat.update(s, x, wr))(states, w)
+@partial(jax.jit, static_argnames=("stat", "B", "backend"))
+def _pd_extend_jit(states, est_state, key, step, x, stat, B, backend):
+    if backend == "fused_rng":
+        # matrix-free: the Δs weight matrix never materializes; delta
+        # states from in-kernel-RNG moments merge into the running states.
+        # Streams are seed_from_key(key) + step — distinct per extend by
+        # construction (see seed_from_key).
+        delta_states = fused_resample_states(
+            stat, seed_from_key(key) + step, x, B)
+        new_states = jax.vmap(stat.merge)(states, delta_states)
+    else:
+        w = poisson_weights(jax.random.fold_in(key, step), B, x.shape[0])
+        new_states = jax.vmap(lambda s, wr: stat.update(s, x, wr))(states, w)
     new_est = stat.update(est_state, x)
     return new_states, new_est
 
@@ -72,7 +87,8 @@ def poisson_delta_extend(pd: PoissonDelta, new_values: jax.Array
     x = _as_2d(new_values)
     dn = x.shape[0]
     states, est_state = _pd_extend_jit(pd.states, pd.est_state, pd.key,
-                                       pd.step, x, pd.stat, pd.B)
+                                       pd.step, x, pd.stat, pd.B,
+                                       pd.backend)
     return dataclasses.replace(pd, states=states, est_state=est_state,
                                n=pd.n + dn, step=pd.step + 1)
 

@@ -171,18 +171,30 @@ class Quantile(Statistic):
     values are clipped into range.  Accuracy ~ (hi-lo)/nbins per component.
     For in-memory bootstrap on the sample array the exact path
     ``exact(values, weights)`` is available (used when n is small).
+
+    ``update`` accumulates via a flattened scatter-add (O(n·d) memory, one
+    dispatch) — the historical one_hot+einsum formulation materialized an
+    (n, d, nbins) tensor and is kept only as a test oracle
+    (kernels/weighted_hist/ref.py).  ``backend="pallas"`` /
+    ``"pallas_interpret"`` routes the histogram through the fused Pallas
+    sketch kernel instead (tile-local one-hot in VMEM; use for large
+    single-state updates — the scatter path is the one that vmaps over the
+    bootstrap's B axis).
     """
 
     def __init__(self, q: float, nbins: int = 2048,
-                 lo: float = 0.0, hi: float = 1.0):
+                 lo: float = 0.0, hi: float = 1.0,
+                 backend: Optional[str] = None):
         self.q = float(q)
         self.nbins = int(nbins)
         self.lo = float(lo)
         self.hi = float(hi)
+        self.backend = backend
 
     def with_range(self, lo: float, hi: float) -> "Quantile":
         span = max(hi - lo, _EPS)
-        return Quantile(self.q, self.nbins, lo - 0.01 * span, hi + 0.01 * span)
+        return Quantile(self.q, self.nbins, lo - 0.01 * span,
+                        hi + 0.01 * span, backend=self.backend)
 
     def init_state(self, dim: int) -> HistogramState:
         return HistogramState(
@@ -194,12 +206,18 @@ class Quantile(Statistic):
     def update(self, state: HistogramState, values, weights=None):
         x = _as_2d(values).astype(jnp.float32)      # (n, d)
         w = _w(x, weights)                          # (n,)
-        span = state.hi - state.lo + _EPS
-        idx = jnp.clip(((x - state.lo) / span * self.nbins).astype(jnp.int32),
-                       0, self.nbins - 1)           # (n, d)
-        onehot = jax.nn.one_hot(idx, self.nbins, dtype=jnp.float32)  # (n,d,nb)
-        counts = state.counts + jnp.einsum("n,ndb->db", w, onehot)
-        return HistogramState(counts=counts, lo=state.lo, hi=state.hi)
+        if self.backend in ("pallas", "pallas_interpret"):
+            from repro.kernels.weighted_hist import ops as wh_ops
+            delta = wh_ops.weighted_histogram(x, w, state.lo, state.hi,
+                                              self.nbins,
+                                              backend=self.backend)
+        else:
+            from repro.kernels.weighted_hist.ref import \
+                weighted_hist_scatter_ref
+            delta = weighted_hist_scatter_ref(x, w, state.lo, state.hi,
+                                              self.nbins)
+        return HistogramState(counts=state.counts + delta,
+                              lo=state.lo, hi=state.hi)
 
     def merge(self, a: HistogramState, b: HistogramState) -> HistogramState:
         return HistogramState(counts=a.counts + b.counts, lo=a.lo, hi=a.hi)

@@ -53,7 +53,8 @@ class EarlSession:
     def __init__(self, sampler, stat: Statistic, sigma: float = 0.05,
                  tau: float = 0.01, p_pilot: float = 0.01,
                  growth: float = 2.0, max_fraction: float = 1.0,
-                 min_pilot: int = 64, max_pilot: int = 8192, l: int = 5):
+                 min_pilot: int = 64, max_pilot: int = 8192, l: int = 5,
+                 backend: Optional[str] = None):
         self.sampler = sampler
         self.stat = stat
         self.sigma = float(sigma)
@@ -62,6 +63,9 @@ class EarlSession:
         self.growth = float(growth)
         self.max_fraction = float(max_fraction)
         self.min_pilot = int(min_pilot)
+        #: None = materialized jnp weights; "fused_rng" = matrix-free
+        #: in-kernel RNG for SSABE and the delta-maintained main loop.
+        self.backend = backend
         # the pilot only needs to be large enough for a stable c_v(n) fit
         # (paper §3.2: "the initial n is picked to be small ... estimation
         # can be performed on a single machine"); capping it keeps the
@@ -90,7 +94,8 @@ class EarlSession:
                       max(self.min_pilot, int(self.p_pilot * N)))
         pilot = self.sampler.take(0, n_pilot)
         est = ssabe_mod.ssabe(pilot, self.stat, self.sigma, self.tau,
-                              jax.random.fold_in(key, 1), l=self.l, N=N)
+                              jax.random.fold_in(key, 1), l=self.l, N=N,
+                              backend=self.backend)
         B, n_target = est.B, max(est.n, n_pilot)
 
         # ---- fallback check (paper §3.1) -------------------------------
@@ -100,7 +105,8 @@ class EarlSession:
         # ---- main loop with delta-maintained resamples ------------------
         dim = _as_2d(pilot).shape[1]
         pd = poisson_delta_init(self.stat, B, dim,
-                                jax.random.fold_in(key, 2))
+                                jax.random.fold_in(key, 2),
+                                backend=self.backend)
         n_have = 0
         iterations = 0
         while True:

@@ -24,7 +24,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import accuracy
-from repro.core.bootstrap import bootstrap_thetas, weights_for
+from repro.core.bootstrap import (bootstrap_thetas, seed_from_key,
+                                  weights_for)
 from repro.core.delta import poisson_delta_extend, poisson_delta_init, \
     poisson_delta_result
 from repro.core.reduce_api import Statistic, _as_2d
@@ -44,19 +45,34 @@ class SSABEResult:
 
 def estimate_B(values: jax.Array, stat: Statistic, tau: float,
                key: jax.Array, engine: str = "poisson",
-               B_min: int = 2, B_max: int | None = None
+               B_min: int = 2, B_max: int | None = None,
+               backend: str | None = None
                ) -> Tuple[int, List[Tuple[int, float]]]:
     """Phase A.  Common random numbers: resample b is keyed by fold_in(key,b),
     so growing B reuses earlier resamples — c_v(B) is a stable nested
-    sequence and the |Δc_v| < τ stop is meaningful (not MC noise)."""
+    sequence and the |Δc_v| < τ stop is meaningful (not MC noise).
+
+    With ``backend="fused_rng"`` the nested-prefix property is even
+    structural: implicit weights are keyed per (resample-tile, item-tile),
+    so row b's weights are independent of B_max entirely."""
     if B_max is None:
         B_max = max(B_min + 1, int(math.ceil(1.0 / tau)))
     x = _as_2d(values)
     n, dim = x.shape
 
-    # draw the maximal weight matrix once; prefixes give nested B
-    w_full = weights_for(engine, key, B_max, n)
-    thetas_full = bootstrap_thetas(x, stat, w_full)
+    if backend == "fused_rng" and engine == "poisson" \
+            and stat.moment_powers is not None:
+        # matrix-free: thetas for all B_max resamples without the (B_max, n)
+        # weight matrix; prefixes of thetas give nested B as before.
+        from repro.kernels.weighted_stats import ops as ws_ops
+        w_tot, s1, s2 = ws_ops.fused_poisson_moments(
+            seed_from_key(key), x, B_max)
+        states = jax.vmap(stat.from_moments)(w_tot, s1, s2)
+        thetas_full = jax.vmap(stat.finalize)(states)
+    else:
+        # draw the maximal weight matrix once; prefixes give nested B
+        w_full = weights_for(engine, key, B_max, n)
+        thetas_full = bootstrap_thetas(x, stat, w_full)
 
     # geometric candidate ladder: consecutive integers differ by O(1/B) by
     # construction (nested prefixes), which would stop at B≈3 for any tau;
@@ -102,7 +118,8 @@ def invert_cv_curve(a: float, c: float, sigma: float, n_cap: int) -> int:
 
 
 def estimate_n(values: jax.Array, stat: Statistic, sigma: float, B: int,
-               key: jax.Array, l: int = 5, n_cap: int | None = None
+               key: jax.Array, l: int = 5, n_cap: int | None = None,
+               backend: str | None = None
                ) -> Tuple[int, List[Tuple[int, float]], float, float]:
     """Phase B with delta maintenance: the nested subsamples n_i = n/2^{l-i}
     are prefixes, so each step extends the Poisson-bootstrap states with the
@@ -112,7 +129,7 @@ def estimate_n(values: jax.Array, stat: Statistic, sigma: float, B: int,
     if n_cap is None:
         n_cap = 1 << 62
 
-    pd = poisson_delta_init(stat, B, dim, key)
+    pd = poisson_delta_init(stat, B, dim, key, backend=backend)
     history: List[Tuple[int, float]] = []
     prev = 0
     for i in range(1, l + 1):
@@ -131,14 +148,19 @@ def estimate_n(values: jax.Array, stat: Statistic, sigma: float, B: int,
 
 def ssabe(pilot_values: jax.Array, stat: Statistic, sigma: float, tau: float,
           key: jax.Array, l: int = 5, N: int | None = None,
-          engine: str = "poisson") -> SSABEResult:
-    """The full two-phase SSABE algorithm on a pilot sample."""
+          engine: str = "poisson",
+          backend: str | None = None) -> SSABEResult:
+    """The full two-phase SSABE algorithm on a pilot sample.
+
+    ``backend="fused_rng"`` routes both phases matrix-free (in-kernel
+    Poisson weights) for moment statistics."""
     acc = accuracy
     kb, kn = jax.random.split(jax.random.fold_in(key, 0xEA))
-    B_hat, hist_B = estimate_B(pilot_values, stat, tau, kb, engine=engine)
+    B_hat, hist_B = estimate_B(pilot_values, stat, tau, kb, engine=engine,
+                               backend=backend)
     n_cap = N if N is not None else int(1e12)
     n_hat, hist_n, a, c = estimate_n(pilot_values, stat, sigma, B_hat, kn,
-                                     l=l, n_cap=n_cap)
+                                     l=l, n_cap=n_cap, backend=backend)
 
     x = np.asarray(_as_2d(pilot_values))
     n_theory = acc.theoretical_sample_size(

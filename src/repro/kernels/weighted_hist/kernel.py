@@ -1,0 +1,90 @@
+"""Fused weighted-histogram Pallas kernel (mergeable quantile sketch).
+
+Computes, per value dimension c, a fixed-range weighted histogram
+
+    counts[c, b] = Σ_i  w[i] · 1[ bin(x[i, c]) = b ]
+
+without ever materializing the (n, d, nbins) one-hot tensor the naive
+``jax.nn.one_hot`` + einsum path builds in HBM (the §6.2 median/quantile
+memory blowup).  Each (bn, bd) value tile is binned in VMEM and the per-bin
+mass is accumulated with one (1, bn) × (bn, nbins) MXU contraction per
+dimension column — the one-hot exists only tile-at-a-time in VMEM.
+
+Grid: (d/bd, n/bn); the n axis is LAST so each (bd, nbins) output tile is
+revisited sequentially and accumulated in place.  Histogram counts are a
+mergeable synopsis (Jestes et al., wavelet histograms on MapReduce), so
+per-shard outputs psum cleanly — same merge discipline as
+``reduce_api.HistogramState``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_EPS = 1e-12
+
+
+def _wh_kernel(x_ref, w_ref, lo_ref, hi_ref, out_ref, *, nbins: int,
+               out_bins: int, block_d: int):
+    k = pl.program_id(1)        # n-tile index (accumulation axis)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros(out_ref.shape, out_ref.dtype)
+
+    x = x_ref[...].astype(jnp.float32)           # (bn, bd)
+    w = w_ref[...].astype(jnp.float32)           # (bn, 1)
+    lo = lo_ref[...]                             # (1, bd)
+    hi = hi_ref[...]
+    span = hi - lo + jnp.float32(_EPS)
+    # bin against the TRUE nbins; out_bins >= nbins is only lane padding,
+    # so bins [nbins, out_bins) stay empty and slicing them off is exact.
+    idx = jnp.clip(((x - lo) / span * nbins).astype(jnp.int32),
+                   0, nbins - 1)                 # (bn, bd)
+
+    bn = x.shape[0]
+    bins = jax.lax.broadcasted_iota(jnp.int32, (bn, out_bins), 1)
+    wt = w.reshape(1, bn)
+    for c in range(block_d):                     # static unroll, bd is small
+        onehot = (idx[:, c:c + 1] == bins).astype(jnp.float32)  # (bn, ob)
+        out_ref[c:c + 1, :] += jax.lax.dot(
+            wt, onehot, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("nbins", "block_n", "block_d",
+                                    "interpret"))
+def weighted_hist_kernel(values: jax.Array, weights: jax.Array,
+                         lo: jax.Array, hi: jax.Array, nbins: int,
+                         block_n: int = 256, block_d: int = 8,
+                         interpret: bool = True) -> jax.Array:
+    """Raw kernel entry: shapes must already be padded to block multiples.
+
+    values (n, d) f32, weights (n, 1) f32 (zero-padded rows contribute
+    nothing), lo/hi (1, d) f32.  ``nbins`` is the true bin count; the
+    output's last dim is padded up to the 128-lane multiple (extra bins are
+    always zero — callers slice [:, :nbins]).  Returns (d, out_bins) f32.
+    """
+    n, d = values.shape
+    assert n % block_n == 0 and d % block_d == 0, ((n, d), (block_n, block_d))
+    out_bins = nbins + (-nbins) % 128
+
+    grid = (d // block_d, n // block_n)
+    kern = functools.partial(_wh_kernel, nbins=nbins, out_bins=out_bins,
+                             block_d=block_d)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, block_d), lambda j, k: (k, j)),
+            pl.BlockSpec((block_n, 1), lambda j, k: (k, 0)),
+            pl.BlockSpec((1, block_d), lambda j, k: (0, j)),
+            pl.BlockSpec((1, block_d), lambda j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_d, out_bins), lambda j, k: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((d, out_bins), jnp.float32),
+        interpret=interpret,
+    )(values, weights, lo, hi)

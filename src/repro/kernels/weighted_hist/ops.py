@@ -1,0 +1,45 @@
+"""jit'd public wrapper for weighted_hist: padding + platform dispatch.
+
+backend: None = auto (pallas on TPU, jnp scatter-add elsewhere), "pallas",
+"pallas_interpret", "jnp".
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.weighted_hist.kernel import weighted_hist_kernel
+from repro.kernels.weighted_hist.ref import weighted_hist_scatter_ref
+from repro.kernels.weighted_stats.ops import _pad_to
+
+
+def weighted_histogram(values: jax.Array, weights: jax.Array,
+                       lo: jax.Array, hi: jax.Array, nbins: int,
+                       backend: str | None = None,
+                       block_n: int = 256, block_d: int = 8) -> jax.Array:
+    """values (n, d) or (n,), weights (n,), lo/hi (d,) -> (d, nbins) f32.
+
+    The (n, d, nbins) one-hot tensor never materializes on any backend.
+    """
+    if values.ndim == 1:
+        values = values[:, None]
+    n, d = values.shape
+    lo = jnp.broadcast_to(jnp.asarray(lo, jnp.float32), (d,))
+    hi = jnp.broadcast_to(jnp.asarray(hi, jnp.float32), (d,))
+    w = jnp.asarray(weights, jnp.float32)
+
+    if backend is None:
+        backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if backend == "jnp":
+        return weighted_hist_scatter_ref(values, w, lo, hi, nbins)
+
+    bn = min(block_n, max(8, n))
+    bd = min(block_d, max(1, d))
+    xp = _pad_to(_pad_to(values.astype(jnp.float32), bn, 0), bd, 1)
+    wp = _pad_to(w[:, None], bn, 0)              # zero rows: no mass
+    lop = _pad_to(lo[None, :], bd, 1)
+    hip = _pad_to(hi[None, :], bd, 1, value=1.0)  # avoid zero span in padding
+    counts = weighted_hist_kernel(xp, wp, lop, hip, nbins,
+                                  block_n=bn, block_d=bd,
+                                  interpret=(backend != "pallas"))
+    return counts[:d, :nbins]

@@ -1,0 +1,43 @@
+"""Oracles for weighted_hist.
+
+``weighted_hist_onehot_ref`` is the original memory-blowup formulation
+(materializes the (n, d, nbins) one-hot in HBM) — kept strictly as a
+correctness oracle; ``weighted_hist_scatter_ref`` is the O(n·d) scatter-add
+formulation that reduce_api.Quantile now uses as its default jnp path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+def _bin_indices(values: jax.Array, lo: jax.Array, hi: jax.Array,
+                 nbins: int) -> jax.Array:
+    x = values.astype(jnp.float32)                       # (n, d)
+    span = hi - lo + _EPS
+    return jnp.clip(((x - lo) / span * nbins).astype(jnp.int32),
+                    0, nbins - 1)                        # (n, d)
+
+
+def weighted_hist_onehot_ref(values: jax.Array, weights: jax.Array,
+                             lo: jax.Array, hi: jax.Array,
+                             nbins: int) -> jax.Array:
+    """(n, d) values, (n,) weights, (d,) lo/hi -> (d, nbins) counts."""
+    idx = _bin_indices(values, lo[None, :], hi[None, :], nbins)
+    onehot = jax.nn.one_hot(idx, nbins, dtype=jnp.float32)   # (n, d, nbins)
+    return jnp.einsum("n,ndb->db", weights.astype(jnp.float32), onehot)
+
+
+def weighted_hist_scatter_ref(values: jax.Array, weights: jax.Array,
+                              lo: jax.Array, hi: jax.Array,
+                              nbins: int) -> jax.Array:
+    """Same result via a flattened scatter-add: O(n·d) memory, one dispatch."""
+    idx = _bin_indices(values, lo[None, :], hi[None, :], nbins)  # (n, d)
+    d = idx.shape[1]
+    flat = idx + jnp.arange(d, dtype=jnp.int32)[None, :] * nbins
+    w = jnp.broadcast_to(weights.astype(jnp.float32)[:, None], idx.shape)
+    counts = jnp.zeros((d * nbins,), jnp.float32)
+    counts = counts.at[flat.reshape(-1)].add(w.reshape(-1))
+    return counts.reshape(d, nbins)

@@ -1,6 +1,7 @@
-"""Fused weighted-moments Pallas kernel.
+"""Fused weighted-moments Pallas kernels.
 
-Computes, for every bootstrap resample b (a row of the weight matrix W):
+``weighted_moments_kernel`` computes, for every bootstrap resample b (a row
+of the weight matrix W):
 
     w_tot[b] = Σ_i W[b,i]
     s1[b,:]  = Σ_i W[b,i] · X[i,:]
@@ -10,6 +11,15 @@ in a single pass: the (bB, bn) weight tile is read once from VMEM and feeds
 two MXU contractions (against X and X²) plus a VPU row-sum — 3 outputs for
 one HBM read of W, which is what makes the B-resample loop compute-bound
 instead of bandwidth-bound (DESIGN.md §2).
+
+``fused_poisson_moments_kernel`` goes one step further and is the
+*matrix-free* bootstrap hot path: the Poisson(1) weight tile is never read
+from HBM at all — it is generated inside the kernel from a counter-based
+PRNG keyed by ``(seed, b-tile, n-tile)`` (the same threefry/tile discipline
+as kernels/poisson_counts, so the implicit weight matrix is bit-identical
+to ``poisson_counts(seed, B, n)`` under matching block shapes) and
+immediately contracted.  Peak HBM traffic drops from O(B·n) to O(n·d + B·d)
+and the (B, n) matrix never exists anywhere.
 
 Grid: (B/bB, d/bd, n/bn); the contraction axis n is the LAST grid axis so
 output tiles are revisited sequentially and accumulated in place.
@@ -21,6 +31,10 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.poisson_counts.kernel import (_poisson_from_bits,
+                                                 _threefry_bits)
 
 
 def _ws_kernel(w_ref, x_ref, wtot_ref, s1_ref, s2_ref):
@@ -84,3 +98,97 @@ def weighted_moments_kernel(weights: jax.Array, values: jax.Array,
         ],
         interpret=interpret,
     )(weights, values)
+
+
+# ============================================================================
+# matrix-free path: in-kernel weight generation + contraction
+# ============================================================================
+def _poisson_tile(seed, i, k, shape, n_valid, block_n: int,
+                  use_tpu_prng: bool) -> jax.Array:
+    """Poisson(1) weight tile for grid position (i, k), padding masked to 0.
+
+    Identical per-tile seeding to kernels/poisson_counts (same fold-in order,
+    same CDF ladder), so the implicit weight matrix equals
+    ``poisson_counts(seed, B, n)`` under matching block shapes.
+    """
+    if use_tpu_prng:
+        pltpu.prng_seed(seed, i, k)
+        bits = pltpu.bitcast(pltpu.prng_random_bits(shape), jnp.uint32)
+    else:
+        bits = _threefry_bits(seed, i, k, shape)
+    w = _poisson_from_bits(bits)
+    col = k * block_n + jax.lax.broadcasted_iota(jnp.int32, shape, 1)
+    return jnp.where(col < n_valid, w, 0.0)
+
+
+def _fpm_kernel(scal_ref, x_ref, wtot_ref, s1_ref, s2_ref, *,
+                block_b: int, block_n: int, use_tpu_prng: bool):
+    i = pl.program_id(0)        # B-tile index
+    j = pl.program_id(1)        # d-tile index
+    k = pl.program_id(2)        # n-tile index (contraction)
+
+    w = _poisson_tile(scal_ref[0], i, k, (block_b, block_n), scal_ref[1],
+                      block_n, use_tpu_prng)
+    x = x_ref[...].astype(jnp.float32)       # (bn, bd)
+
+    @pl.when(k == 0)
+    def _init_moments():
+        s1_ref[...] = jnp.zeros(s1_ref.shape, s1_ref.dtype)
+        s2_ref[...] = jnp.zeros(s2_ref.shape, s2_ref.dtype)
+
+    s1_ref[...] += jax.lax.dot(w, x, preferred_element_type=jnp.float32)
+    s2_ref[...] += jax.lax.dot(w, x * x, preferred_element_type=jnp.float32)
+
+    @pl.when(jnp.logical_and(j == 0, k == 0))
+    def _init_wtot():
+        wtot_ref[...] = jnp.zeros(wtot_ref.shape, wtot_ref.dtype)
+
+    @pl.when(j == 0)
+    def _acc_wtot():
+        wtot_ref[...] += jnp.sum(w, axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("B", "block_b", "block_n", "block_d",
+                                    "interpret", "use_tpu_prng"))
+def fused_poisson_moments_kernel(seed: jax.Array, n_valid: jax.Array,
+                                 values: jax.Array, B: int,
+                                 block_b: int = 128, block_n: int = 512,
+                                 block_d: int = 128, interpret: bool = True,
+                                 use_tpu_prng: bool = False):
+    """Matrix-free bootstrap moments: weights generated in VMEM, never in HBM.
+
+    values: (n, d) f32, pre-padded to block multiples (ops.py handles this);
+    ``n_valid`` is the unpadded row count — weight columns >= n_valid are
+    masked to zero so ``w_tot`` ignores the padding (padded X rows are zero,
+    so s1/s2 are unaffected either way).  ``B`` must be a block_b multiple.
+    Returns (w_tot (B, 1), s1 (B, d), s2 (B, d)) — all f32.
+    """
+    n, d = values.shape
+    assert B % block_b == 0 and n % block_n == 0 and d % block_d == 0, (
+        (B, n, d), (block_b, block_n, block_d))
+
+    grid = (B // block_b, d // block_d, n // block_n)
+    kern = functools.partial(_fpm_kernel, block_b=block_b, block_n=block_n,
+                             use_tpu_prng=use_tpu_prng)
+    scal = jnp.stack([jnp.asarray(seed, jnp.int32),
+                      jnp.asarray(n_valid, jnp.int32)])
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((block_n, block_d), lambda i, j, k: (k, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, 1), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((block_b, block_d), lambda i, j, k: (i, j)),
+            pl.BlockSpec((block_b, block_d), lambda i, j, k: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, d), jnp.float32),
+            jax.ShapeDtypeStruct((B, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(scal, values)

@@ -1,27 +1,42 @@
-"""jit'd public wrapper for weighted_stats: padding + platform dispatch.
+"""jit'd public wrappers for weighted_stats: padding + platform dispatch.
 
-On TPU the Pallas kernel runs compiled; everywhere else it runs in
-interpret mode (tests) or falls back to the jnp oracle (fast CPU path for
-the benchmarks — interpret mode is a correctness tool, not a perf tool).
+On TPU the Pallas kernels run compiled; everywhere else they run in
+interpret mode (tests) or fall back to jnp paths (fast CPU path for the
+benchmarks — interpret mode is a correctness tool, not a perf tool).
+
+Two entry points:
+
+* ``weighted_moments``       — contract an explicit (B, n) weight matrix.
+* ``fused_poisson_moments``  — matrix-free: Poisson(1) weights are generated
+  from a counter-based PRNG *inside* the contraction (Pallas kernel on TPU,
+  a tile-by-tile ``lax.scan`` on CPU) so the (B, n) matrix never
+  materializes; peak live memory is O(B·block_n + B·d).
 """
 from __future__ import annotations
 
+import functools
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.weighted_stats.kernel import weighted_moments_kernel
+from repro.kernels.poisson_counts.kernel import (_poisson_from_bits,
+                                                 _threefry_bits)
+from repro.kernels.weighted_stats.kernel import (fused_poisson_moments_kernel,
+                                                 weighted_moments_kernel)
 from repro.kernels.weighted_stats.ref import weighted_moments_ref
 
 
-def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
+def _pad_to(x: jax.Array, mult: int, axis: int,
+            value: float = 0.0) -> jax.Array:
+    """Zero-pad (or ``value``-pad) ``axis`` up to a multiple of ``mult``.
+    Shared by the kernel ops wrappers (weighted_hist imports it too)."""
     pad = (-x.shape[axis]) % mult
     if pad == 0:
         return x
     widths = [(0, 0)] * x.ndim
     widths[axis] = (0, pad)
-    return jnp.pad(x, widths)
+    return jnp.pad(x, widths, constant_values=value)
 
 
 def _pick_blocks(B: int, n: int, d: int) -> Tuple[int, int, int]:
@@ -33,7 +48,7 @@ def _pick_blocks(B: int, n: int, d: int) -> Tuple[int, int, int]:
     """
     bb = min(128, max(8, B))
     bn = min(512, max(128, n))
-    bd = min(128, max(128, d))
+    bd = 128                    # lane width: fixed regardless of d
     return bb, bn, bd
 
 
@@ -63,3 +78,117 @@ def weighted_moments(weights: jax.Array, values: jax.Array,
     w_tot, s1, s2 = weighted_moments_kernel(
         wp, xp, block_b=bb, block_n=bn, block_d=bd, interpret=interpret)
     return w_tot[:B, 0], s1[:B, :d], s2[:B, :d]
+
+
+# ============================================================================
+# matrix-free path
+# ============================================================================
+@functools.partial(jax.jit, static_argnames=("B", "block_b", "block_n"))
+def _fused_scan(seed, n_valid, xp, B, block_b, block_n):
+    """CPU/matrix-free oracle of the fused kernel: same tile decomposition,
+    same per-tile threefry bits and CDF ladder, same k-sequential f32
+    accumulation — but expressed as a jnp scan so XLA:CPU runs it at full
+    speed.  Peak live memory per step is (B, block_n)."""
+    n, d = xp.shape
+    nb_b, nb_n = B // block_b, n // block_n
+    xc = xp.reshape(nb_n, block_n, d)
+    cols = jnp.arange(block_n, dtype=jnp.int32)
+
+    def tile_w(k):
+        def one(i):
+            bits = _threefry_bits(seed, i, k, (block_b, block_n))
+            return _poisson_from_bits(bits)
+        w = jax.vmap(one)(jnp.arange(nb_b)).reshape(B, block_n)
+        mask = (k * block_n + cols) < n_valid
+        return jnp.where(mask[None, :], w, 0.0)
+
+    def body(carry, k):
+        w_tot, s1, s2 = carry
+        w = tile_w(k)
+        xk = xc[k]
+        return (w_tot + jnp.sum(w, axis=1, keepdims=True),
+                s1 + w @ xk,
+                s2 + w @ (xk * xk)), None
+
+    init = (jnp.zeros((B, 1), jnp.float32),
+            jnp.zeros((B, d), jnp.float32),
+            jnp.zeros((B, d), jnp.float32))
+    (w_tot, s1, s2), _ = jax.lax.scan(body, init,
+                                      jnp.arange(nb_n, dtype=jnp.int32))
+    return w_tot, s1, s2
+
+
+def fused_poisson_moments(seed, values: jax.Array, B: int,
+                          backend: str | None = None,
+                          block_b: int = 128, block_n: int = 512,
+                          n_valid=None):
+    """Matrix-free bootstrap moments from an int32 seed (no weight matrix).
+
+    values (n, d) or (n,) -> (w_tot (B,), s1 (B,d), s2 (B,d)) where the
+    implicit weights are Poisson(1), keyed per (block_b, block_n) tile by
+    (seed, b-tile, n-tile) — bit-identical to
+    ``poisson_counts(seed, B, n)`` with the same blocks (see
+    ``implicit_weights``).
+
+    ``n_valid`` (traced scalar, default n) masks weight columns >= n_valid
+    to zero — callers that pass pre-padded values (e.g. the chunked
+    bootstrap's ragged tail) use it so ``w_tot`` ignores padding.
+
+    backend: None = auto (pallas on TPU, scan elsewhere), "pallas",
+    "pallas_interpret", "scan".
+    """
+    if values.ndim == 1:
+        values = values[:, None]
+    n, d = values.shape
+    if backend is None:
+        backend = "pallas" if jax.default_backend() == "tpu" else "scan"
+    if n_valid is None:
+        n_valid = n
+
+    bb = min(block_b, max(8, B))
+    bn = min(block_n, max(128, n))
+    Bp = B + (-B) % bb
+    seed = jnp.asarray(seed, jnp.int32)
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+    xp = _pad_to(values.astype(jnp.float32), bn, 0)
+
+    if backend == "scan":
+        w_tot, s1, s2 = _fused_scan(seed, n_valid, xp, Bp, bb, bn)
+        return w_tot[:B, 0], s1[:B], s2[:B]
+
+    bd = 128                    # lane width: fixed regardless of d
+    xp = _pad_to(xp, bd, 1)
+    w_tot, s1, s2 = fused_poisson_moments_kernel(
+        seed, n_valid, xp, Bp,
+        block_b=bb, block_n=bn, block_d=bd,
+        interpret=(backend != "pallas"),
+        use_tpu_prng=(backend == "pallas"))
+    return w_tot[:B, 0], s1[:B, :d], s2[:B, :d]
+
+
+@functools.partial(jax.jit, static_argnames=("B", "n", "block_b", "block_n"))
+def implicit_weights(seed, B: int, n: int, block_b: int = 128,
+                     block_n: int = 512) -> jax.Array:
+    """Materialize the (B, n) weight matrix the threefry-lowered fused paths
+    ("scan", "pallas_interpret") use implicitly: same per-tile fold-in and
+    CDF ladder, expressed as one vmapped jnp computation (fast on CPU; also
+    bit-identical to ``poisson_counts(..., backend="pallas_interpret")``).
+
+    Used as the test oracle and as the fused_rng fallback for statistics
+    without a moment decomposition.  Note: on TPU the compiled kernel draws
+    its bits from the hardware PRNG (``use_tpu_prng=True``), which is
+    distributionally identical but NOT bit-identical to this matrix.
+    """
+    bb = min(block_b, max(8, B))
+    bn = min(block_n, max(128, n))
+    nb_b = (B + (-B) % bb) // bb
+    nb_n = (n + (-n) % bn) // bn
+    seed = jnp.asarray(seed, jnp.int32)
+
+    def tile(i, k):
+        return _poisson_from_bits(_threefry_bits(seed, i, k, (bb, bn)))
+
+    w = jax.vmap(lambda i: jax.vmap(lambda k: tile(i, k))(
+        jnp.arange(nb_n)))(jnp.arange(nb_b))     # (nb_b, nb_n, bb, bn)
+    w = w.transpose(0, 2, 1, 3).reshape(nb_b * bb, nb_n * bn)
+    return w[:B, :n]

@@ -365,8 +365,10 @@ def moe_ffn_shard_map(cfg: ModelConfig, p: Params, x: jax.Array
             or cfg.d_ff % math.prod(mesh.shape[a] for a in model_axes):
         return moe_ffn(cfg, p, x)
 
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map_compat
+    shard_map, sm_kw = shard_map_compat()
 
     def body(p_loc, x_loc):
         y = _moe_route_compute(cfg, p_loc, x_loc)
@@ -389,7 +391,7 @@ def moe_ffn_shard_map(cfg: ModelConfig, p: Params, x: jax.Array
         }
     x_spec = P(batch_axes if batch_axes else None, None, None)
     fn = shard_map(body, mesh=mesh, in_specs=(p_specs, x_spec),
-                   out_specs=x_spec, check_vma=False)
+                   out_specs=x_spec, **sm_kw)
     return fn({k: p[k] for k in p_specs}, x)
 
 

@@ -1,0 +1,337 @@
+"""Matrix-free bootstrap: in-kernel RNG fused moments + histogram sketch.
+
+Covers the ISSUE-1 acceptance criteria:
+  * fused moments == materialized implicit-weights oracle (all backends)
+  * in-kernel Poisson(1) weights are statistically sound (mean/var, and the
+    fused bootstrap matches the jax.random.poisson oracle distributionally)
+  * poisson_delta_extend stays exact under backend="fused_rng"
+  * shape-capture harness: the fused pipeline at n=2^20, B=256 contains NO
+    (B, n)-sized intermediate anywhere in its jaxpr (and the harness itself
+    is validated against the legacy path, which does contain one)
+  * Quantile scatter-add path == one_hot+einsum oracle == Pallas sketch
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Mean, Quantile, Std, Var, bootstrap,
+                        bootstrap_chunked, multinomial_counts)
+from repro.core.bootstrap import seed_from_key
+from repro.core.delta import (poisson_delta_extend, poisson_delta_init,
+                              poisson_delta_result)
+from repro.core.reduce_api import _as_2d
+from repro.core.ssabe import ssabe
+from repro.kernels.weighted_hist import ops as wh_ops
+from repro.kernels.weighted_hist.ref import (weighted_hist_onehot_ref,
+                                             weighted_hist_scatter_ref)
+from repro.kernels.weighted_stats import ops as ws_ops
+from repro.kernels.weighted_stats.ref import weighted_moments_ref
+
+
+# ----------------------------------------------------------------------------
+# jaxpr shape-capture harness
+# ----------------------------------------------------------------------------
+def _walk_shapes(jaxpr, out):
+    """Collect every intermediate aval shape, recursing into sub-jaxprs
+    (pjit/scan/pallas_call bodies)."""
+    for eqn in jaxpr.eqns:
+        for v in list(eqn.invars) + list(eqn.outvars):
+            aval = getattr(v, "aval", None)
+            if aval is not None and hasattr(aval, "shape"):
+                out.append(tuple(aval.shape))
+        for p in eqn.params.values():
+            for q in (p if isinstance(p, (tuple, list)) else (p,)):
+                if hasattr(q, "jaxpr") and hasattr(q.jaxpr, "eqns"):
+                    _walk_shapes(q.jaxpr, out)       # ClosedJaxpr
+                elif hasattr(q, "eqns"):
+                    _walk_shapes(q, out)             # raw Jaxpr
+    return out
+
+
+def _max_intermediate_size(fn, *args):
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    shapes = _walk_shapes(jaxpr.jaxpr, [])
+    return max((int(np.prod(s)) for s in shapes if s), default=0)
+
+
+class TestNoWeightMatrix:
+    B, N = 256, 1 << 20
+
+    def test_fused_pipeline_never_builds_Bn(self, key):
+        """n=2^20, B=256: every intermediate in the traced fused pipeline is
+        far smaller than the (B, n) weight matrix (268M elements)."""
+        from repro.core.bootstrap import _fused_thetas
+        x = jnp.zeros((self.N,), jnp.float32)
+        biggest = _max_intermediate_size(
+            lambda v, k: _fused_thetas(v, Mean(), self.B, k), x, key)
+        assert biggest < self.B * self.N / 100, (
+            f"largest intermediate has {biggest} elements — "
+            f"(B, n) would be {self.B * self.N}")
+
+    def test_harness_detects_legacy_weight_matrix(self, key):
+        """Sanity: the same harness DOES flag the materialized-W path."""
+        from repro.core.bootstrap import weights_for
+        x = jnp.zeros((self.N,), jnp.float32)
+        biggest = _max_intermediate_size(
+            lambda v, k: weights_for("poisson", k, self.B, v.shape[0]),
+            x, key)
+        assert biggest >= self.B * self.N
+
+    def test_quantile_scatter_never_builds_onehot(self, key):
+        n, d, nbins = 1 << 15, 2, 2048
+        q = Quantile(0.5, nbins=nbins)
+        x = jnp.zeros((n, d), jnp.float32)
+        biggest = _max_intermediate_size(
+            lambda v: q.update(q.init_state(d), v).counts, x)
+        assert biggest < n * d * nbins / 100, (
+            f"largest intermediate has {biggest} elements — "
+            f"one_hot would be {n * d * nbins}")
+
+
+# ----------------------------------------------------------------------------
+# fused moments vs oracles
+# ----------------------------------------------------------------------------
+class TestFusedMoments:
+    @pytest.mark.parametrize("B,n,d", [
+        (1, 8, 1), (7, 130, 5), (32, 1000, 1), (64, 2048, 3), (129, 700, 2),
+    ])
+    def test_matches_implicit_weights_oracle(self, key, B, n, d):
+        """Fused output == contracting the materialized implicit weights."""
+        x = jax.random.normal(key, (n, d))
+        W = ws_ops.implicit_weights(42, B, n)
+        wt_r, s1_r, s2_r = weighted_moments_ref(W, x)
+        for backend in ("scan", "pallas_interpret"):
+            wt, s1, s2 = ws_ops.fused_poisson_moments(42, x, B,
+                                                      backend=backend)
+            np.testing.assert_allclose(wt, wt_r[:, 0], rtol=1e-6)
+            # tile-sequential accumulation != one big dot, so f32 tolerance
+            np.testing.assert_allclose(s1, s1_r, rtol=5e-4, atol=1e-4)
+            np.testing.assert_allclose(s2, s2_r, rtol=5e-4, atol=1e-4)
+
+    def test_implicit_weights_bit_identical_to_poisson_counts(self):
+        """The fast jnp materializer must reproduce the kernel tile
+        discipline exactly (same threefry folds, same ladder)."""
+        from repro.kernels.poisson_counts import ops as pc_ops
+        for B, n in [(5, 100), (129, 1000), (64, 512)]:
+            a = ws_ops.implicit_weights(13, B, n)
+            b = pc_ops.poisson_counts(13, B, n, backend="pallas_interpret")
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_scan_equals_interpret(self, key):
+        x = jax.random.normal(key, (900, 4))
+        a = ws_ops.fused_poisson_moments(9, x, 48, backend="scan")
+        b = ws_ops.fused_poisson_moments(9, x, 48,
+                                         backend="pallas_interpret")
+        for u, v in zip(a, b):
+            np.testing.assert_allclose(np.asarray(u), np.asarray(v),
+                                       rtol=1e-6)
+
+    def test_deterministic_and_seed_sensitive(self, key):
+        x = jax.random.normal(key, (512,))
+        a = ws_ops.fused_poisson_moments(5, x, 32)
+        b = ws_ops.fused_poisson_moments(5, x, 32)
+        c = ws_ops.fused_poisson_moments(6, x, 32)
+        np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+        assert not np.array_equal(np.asarray(a[1]), np.asarray(c[1]))
+
+    def test_n_valid_masks_padding(self, key):
+        """Zero-padded tail + n_valid == the unpadded computation."""
+        n, pad = 700, 1024 - 700
+        x = jax.random.normal(key, (n, 2))
+        xp = jnp.pad(x, ((0, pad), (0, 0)))
+        a = ws_ops.fused_poisson_moments(3, x, 16)
+        b = ws_ops.fused_poisson_moments(3, xp, 16, n_valid=n)
+        np.testing.assert_allclose(np.asarray(a[0]), np.asarray(b[0]),
+                                   rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(a[1]), np.asarray(b[1]),
+                                   rtol=1e-6)
+
+
+class TestInKernelWeightStatistics:
+    def test_moments_match_poisson1(self):
+        """mean/var of in-kernel weights vs jax.random.poisson."""
+        W = ws_ops.implicit_weights(7, 256, 4096)
+        ref = jax.random.poisson(jax.random.PRNGKey(7), 1.0,
+                                 (256, 4096)).astype(jnp.float32)
+        assert abs(float(W.mean()) - float(ref.mean())) < 0.02
+        assert abs(float(W.var()) - float(ref.var())) < 0.03
+        assert abs(float(W.mean()) - 1.0) < 0.01
+        assert abs(float(W.var()) - 1.0) < 0.02
+
+    def test_bootstrap_fused_matches_oracle_distributionally(self, key):
+        """bootstrap(..., backend="fused_rng") thetas match the
+        jax.random.poisson oracle: same SE scale, same CLT prediction."""
+        n = 4000
+        x = jax.random.normal(key, (n,)) * 3.0 + 50.0
+        r_oracle = bootstrap(x, Mean(), B=256, key=key, engine="poisson")
+        r_fused = bootstrap(x, Mean(), B=256, key=key, backend="fused_rng")
+        clt = float(jnp.std(x) / jnp.sqrt(n))
+        assert abs(r_fused.report.se - clt) / clt < 0.25
+        assert abs(r_fused.cv - r_oracle.cv) / r_oracle.cv < 0.5
+        np.testing.assert_allclose(np.ravel(r_fused.estimate),
+                                   np.ravel(r_oracle.estimate), rtol=1e-5)
+
+    @pytest.mark.parametrize("stat_cls", [Mean, Var, Std])
+    def test_fused_stats_agree_with_legacy(self, key, stat_cls):
+        x = jax.random.normal(key, (2048,)) * 1.5 + 4
+        r_jnp = bootstrap(x, stat_cls(), B=64, key=key)
+        r_fus = bootstrap(x, stat_cls(), B=64, key=key, backend="fused_rng")
+        assert abs(r_fus.cv - r_jnp.cv) / (abs(r_jnp.cv) + 1e-12) < 0.6
+        np.testing.assert_allclose(np.ravel(r_fus.estimate),
+                                   np.ravel(r_jnp.estimate), rtol=1e-5)
+
+    def test_fused_requires_poisson_engine(self, key):
+        with pytest.raises(ValueError):
+            bootstrap(jnp.ones(32), Mean(), B=4, key=key,
+                      engine="multinomial", backend="fused_rng")
+
+    def test_non_moment_stat_falls_back(self, key):
+        """Quantile has no moment decomposition: fused_rng still works via
+        the implicit-weights fallback and matches its own oracle."""
+        x = jax.random.normal(key, (1000,)) + 5
+        q = Quantile(0.5, nbins=512, lo=0.0, hi=10.0)
+        r = bootstrap(x, q, B=16, key=key, backend="fused_rng")
+        assert np.isfinite(r.cv)
+        assert abs(float(np.ravel(r.estimate)[0]) - 5.0) < 0.3
+
+
+# ----------------------------------------------------------------------------
+# delta maintenance + chunked + ssabe under the fused backend
+# ----------------------------------------------------------------------------
+class TestFusedDelta:
+    def test_extend_exact_vs_explicit_weights(self, key):
+        """poisson_delta_extend under fused_rng == updating with the
+        materialized implicit weights of each step (bit-level key
+        discipline: seed_i = seed_from_key(key) + i, distinct per step
+        by construction)."""
+        B = 32
+        x = jax.random.normal(key, (900, 2))
+        pieces = (x[:400], x[400:])
+
+        pd = poisson_delta_init(Mean(), B, 2, key, backend="fused_rng")
+        for piece in pieces:
+            pd = poisson_delta_extend(pd, piece)
+        thetas = poisson_delta_result(pd, Mean()(x)).thetas
+
+        stat = Mean()
+        states = jax.vmap(lambda _: stat.init_state(2))(jnp.arange(B))
+        for step, piece in enumerate(pieces):
+            w = ws_ops.implicit_weights(
+                seed_from_key(key) + step, B, piece.shape[0])
+            states = jax.vmap(lambda s, wr: stat.update(s, piece, wr),
+                              in_axes=(0, 0))(states, w)
+        ref = jax.vmap(stat.finalize)(states)
+        np.testing.assert_allclose(np.asarray(thetas), np.asarray(ref),
+                                   rtol=1e-5)
+
+    def test_cv_comparable_to_jnp_backend(self, key):
+        x = jax.random.normal(key, (3000,)) * 2 + 9
+        res = {}
+        for backend in (None, "fused_rng"):
+            pd = poisson_delta_init(Mean(), 128, 1, key, backend=backend)
+            for piece in (x[:1000], x[1000:]):
+                pd = poisson_delta_extend(pd, piece)
+            res[backend] = poisson_delta_result(pd, Mean()(x)).cv
+        assert abs(res["fused_rng"] - res[None]) / res[None] < 0.5
+
+
+class TestFusedChunked:
+    def test_matches_unchunked_distribution(self, key):
+        x = jax.random.normal(key, (3000,)) * 2 + 5
+        r_plain = bootstrap(x, Mean(), B=128, key=key, backend="fused_rng")
+        r_chunk = bootstrap_chunked(x, Mean(), B=128, key=key, chunk=512,
+                                    backend="fused_rng")
+        assert abs(r_plain.cv - r_chunk.cv) / r_plain.cv < 0.5
+        np.testing.assert_allclose(np.ravel(r_plain.estimate),
+                                   np.ravel(r_chunk.estimate), rtol=1e-5)
+
+    def test_ragged_tail_masked(self, key):
+        """w_tot must ignore the zero-padded tail of the last chunk."""
+        x = jax.random.normal(key, (1001,)) + 3.0
+        r = bootstrap_chunked(x, Mean(), B=32, key=key, chunk=256,
+                              backend="fused_rng")
+        assert r.n == 1001
+        assert np.isfinite(r.cv)
+        assert abs(float(np.ravel(r.estimate)[0]) - 3.0) < 0.3
+
+
+class TestFusedSSABE:
+    def test_ssabe_fused_close_to_jnp(self, key):
+        x = jax.random.normal(key, (1000,)) + 5
+        r_jnp = ssabe(x, Mean(), sigma=0.05, tau=0.01, key=key)
+        r_fus = ssabe(x, Mean(), sigma=0.05, tau=0.01, key=key,
+                      backend="fused_rng")
+        assert len(r_fus.cv_history_n) == 5
+        # same stopping structure, comparable estimates
+        assert r_fus.B <= r_jnp.B * 4 and r_jnp.B <= r_fus.B * 4
+
+
+# ----------------------------------------------------------------------------
+# histogram sketch / Quantile
+# ----------------------------------------------------------------------------
+class TestWeightedHist:
+    @pytest.mark.parametrize("n,d,nbins", [
+        (100, 1, 128), (515, 3, 256), (1000, 5, 2048),
+        (300, 2, 2000),   # nbins not a 128 multiple: lane padding must
+                          # not shift bin edges or drop top-bin mass
+    ])
+    def test_kernel_and_scatter_match_onehot_oracle(self, key, n, d, nbins):
+        x = jax.random.uniform(key, (n, d))
+        w = jnp.abs(jax.random.normal(jax.random.fold_in(key, 1), (n,)))
+        lo, hi = jnp.zeros((d,)), jnp.ones((d,))
+        ref = weighted_hist_onehot_ref(x, w, lo, hi, nbins)
+        np.testing.assert_allclose(
+            np.asarray(weighted_hist_scatter_ref(x, w, lo, hi, nbins)),
+            np.asarray(ref), rtol=1e-5, atol=1e-5)
+        for backend in ("jnp", "pallas_interpret"):
+            out = wh_ops.weighted_histogram(x, w, lo, hi, nbins,
+                                            backend=backend)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                       rtol=1e-5, atol=1e-4)
+
+    def test_quantile_update_matches_onehot_oracle(self, key):
+        q = Quantile(0.5, nbins=256, lo=-4.0, hi=4.0)
+        x = jax.random.normal(key, (777, 2))
+        w = jnp.abs(jax.random.normal(jax.random.fold_in(key, 2), (777,)))
+        st = q.update(q.init_state(2), x, w)
+        ref = weighted_hist_onehot_ref(
+            jnp.clip(x, -4.0, 4.0), w, jnp.full((2,), -4.0),
+            jnp.full((2,), 4.0), 256)
+        np.testing.assert_allclose(np.asarray(st.counts), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-4)
+
+    def test_quantile_kernel_backend_matches_default(self, key):
+        x = jax.random.normal(key, (513,)) * 2
+        for backend in ("pallas_interpret",):
+            q0 = Quantile(0.25, nbins=512, lo=-8.0, hi=8.0)
+            qk = Quantile(0.25, nbins=512, lo=-8.0, hi=8.0, backend=backend)
+            s0 = q0.update(q0.init_state(1), x)
+            sk = qk.update(qk.init_state(1), x)
+            np.testing.assert_allclose(np.asarray(sk.counts),
+                                       np.asarray(s0.counts),
+                                       rtol=1e-5, atol=1e-4)
+            np.testing.assert_allclose(float(q0.finalize(s0)),
+                                       float(qk.finalize(sk)), rtol=1e-6)
+
+    def test_quantile_vmaps_over_bootstrap_axis(self, key):
+        """The scatter path must batch over the B resample axis."""
+        x = jax.random.normal(key, (800,)) + 7
+        q = Quantile(0.5, nbins=512, lo=0.0, hi=14.0)
+        r = bootstrap(x, q, B=24, key=key)
+        assert r.thetas.shape[0] == 24
+        assert abs(float(np.ravel(r.estimate)[0]) - 7.0) < 0.2
+
+
+class TestMultinomialScatter:
+    def test_single_dispatch_matches_per_row_oracle(self, key):
+        """The flattened scatter must equal the old per-row vmap(hist)."""
+        B, n = 16, 257
+        counts = multinomial_counts(key, B=B, n=n)
+        idx = jax.random.randint(key, (B, n), 0, n)
+
+        def hist(row):
+            return jnp.zeros((n,), jnp.int32).at[row].add(1)
+
+        ref = jax.vmap(hist)(idx)
+        np.testing.assert_array_equal(np.asarray(counts), np.asarray(ref))

@@ -2,7 +2,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed in this container")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (Mean, Quantile, Sum, Var, coefficient_of_variation,
                         p_shared, work_saved)
