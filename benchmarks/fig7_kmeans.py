@@ -4,25 +4,20 @@ Both fits start from the SAME initial centroids (k rows of the permuted
 sample) so the comparison isolates sample-vs-full data cost, not local
 optima.  The paper validates 'centroids within 5% of the optimal'; we
 check inertia of the sample-fit centroids, evaluated on the FULL data,
-against the full fit."""
+against the full fit.
+
+The Lloyd loops run through ``kmeans_fit`` (one jitted scan, centroids as
+carried state — no per-iteration recompile) and the bootstrap certifies
+the centroids on the matrix-free path (``backend="fused_rng"`` →
+kernels/kmeans_assign: no (B, n) weight matrix, no (n, k) one-hot)."""
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit
-from repro.core import KMeansStep, bootstrap
-from repro.core.reduce_api import KMeansState
+from repro.core import KMeansStep, bootstrap, kmeans_fit
 from repro.data import PreMapSampler, ShardedStore, synthetic_clusters
-
-
-def _lloyd(x, cents, iters):
-    for _ in range(iters):
-        step = KMeansStep(cents)
-        st = step.update(step.init_state(x.shape[1]), x)
-        cents = step.finalize(st)
-    return cents
 
 
 def _inertia(x, cents):
@@ -36,23 +31,29 @@ def run() -> None:
     x_np, _ = synthetic_clusters(N, k=k, dim=2, seed=5)
     sampler = PreMapSampler(ShardedStore.from_array(x_np, 65_536), seed=6)
 
-    x_full = jnp.asarray(x_np)
+    x_full = jax.numpy.asarray(x_np)
     n = max(2000, N // 50)
     xs = sampler.take(0, n)
     cents0 = xs[:k]                                   # shared init
 
-    jax.block_until_ready(_lloyd(x_full, cents0, 1))  # warm
+    # warm: compiles the iters-length jitted scan once
+    jax.block_until_ready(kmeans_fit(x_full, k, iters, key, init=cents0))
     t0 = time.perf_counter()
-    cents_full = jax.block_until_ready(_lloyd(x_full, cents0, iters))
+    cents_full, _ = kmeans_fit(x_full, k, iters, key, init=cents0)
+    jax.block_until_ready(cents_full)
     t_full = time.perf_counter() - t0
     inertia_full = _inertia(x_np, np.asarray(cents_full))
     emit("fig7_kmeans_full", t_full * 1e6,
          f"inertia={inertia_full:.4f};rows={N * iters}")
 
-    jax.block_until_ready(_lloyd(xs, cents0, 1))      # warm
+    jax.block_until_ready(kmeans_fit(xs, k, iters, key, init=cents0))  # warm
+    jax.block_until_ready(bootstrap(xs, KMeansStep(cents0), B=24, key=key,
+                                    backend="fused_rng").thetas)       # warm
     t0 = time.perf_counter()
-    cents_s = jax.block_until_ready(_lloyd(xs, cents0, iters))
-    res = bootstrap(xs, KMeansStep(cents_s), B=24, key=key)
+    cents_s, _ = kmeans_fit(xs, k, iters, key, init=cents0)
+    jax.block_until_ready(cents_s)
+    res = bootstrap(xs, KMeansStep(cents_s), B=24, key=key,
+                    backend="fused_rng")
     jax.block_until_ready(res.thetas)
     t_earl = time.perf_counter() - t0
     inertia_s = _inertia(x_np, np.asarray(cents_s))
@@ -60,5 +61,5 @@ def run() -> None:
     emit("fig7_kmeans_earl", t_earl * 1e6,
          f"wall_speedup={t_full / max(t_earl, 1e-9):.2f}x;"
          f"row_speedup={N / n:.1f}x;centroid_cv={res.cv:.4f};"
-         f"inertia_gap={gap:.4f}")
+         f"inertia_gap={gap:.4f};bootstrap=fused_rng")
     assert gap < 0.05, f"paper claims <5% of optimal; got {gap:.3f}"

@@ -10,7 +10,10 @@ reported as derived metadata for the roofline discussion.
 counter-based RNG fused into the contraction, via the scan lowering on CPU)
 against the materialized-(B, n) weight-matrix path and the naive 3-pass
 formulation, and writes the trajectory to BENCH_bootstrap.json so perf is
-tracked PR-over-PR.
+tracked PR-over-PR.  ``run_kmeans`` does the same for bootstrap-over-
+k-means (fused assignment+accumulate, kernels/kmeans_assign) against the
+materialized path that builds the (B, n) weights AND the (B, n, k)
+weighted one-hot, writing BENCH_kmeans.json.
 """
 import json
 import pathlib
@@ -19,11 +22,15 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, timeit
+from repro.core.reduce_api import KMeansStep
+from repro.kernels.kmeans_assign import ops as ka_ops
 from repro.kernels.weighted_hist import ops as wh_ops
 from repro.kernels.weighted_stats import ops as ws_ops
 
 _BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent \
     / "BENCH_bootstrap.json"
+_BENCH_KMEANS_JSON = pathlib.Path(__file__).resolve().parent.parent \
+    / "BENCH_kmeans.json"
 
 
 def _naive(w, x):
@@ -65,6 +72,7 @@ def run() -> None:
 
     run_bootstrap()
     run_histogram()
+    run_kmeans()
 
 
 def run_bootstrap() -> None:
@@ -121,6 +129,68 @@ def run_bootstrap() -> None:
         "peak_weight_bytes": {"fused_rng": 0,
                               "materialized_w": 4 * B * n,
                               "naive_3pass": 4 * B * n},
+    }, indent=2) + "\n")
+
+
+def run_kmeans() -> None:
+    """Bootstrap-over-k-means: fused assignment+accumulate vs materialized.
+
+    The materialized path draws the (B, n) Poisson weight matrix AND builds
+    the (B, n, k) weighted one-hot inside the vmapped KMeansStep.update;
+    the fused path (kernels/kmeans_assign, scan lowering on CPU) generates
+    the weights in-pass and keeps assignment tile-local — peak live state
+    O(B·k·d).  A single-state assignment pass is timed too (tiled vs the
+    materialized (n, k) distance/one-hot).
+    """
+    B, n, k, d = 64, 1 << 16, 8, 2
+    key = jax.random.PRNGKey(11)
+    x = jax.random.normal(key, (n, d))
+    cent = jax.random.normal(jax.random.fold_in(key, 1), (k, d)) * 2
+
+    @jax.jit
+    def materialized(key, x, cent):
+        stat = KMeansStep(cent)
+        w = jax.random.poisson(key, 1.0, (B, n)).astype(jnp.float32)
+        st = jax.vmap(lambda wr: stat.update(stat.init_state(d), x, wr))(w)
+        return st.sums, st.counts, st.inertia
+
+    us_mat = timeit(lambda: jax.block_until_ready(
+        materialized(key, x, cent)))
+    us_fused = timeit(lambda: jax.block_until_ready(
+        ka_ops.fused_poisson_kmeans(7, x, cent, B)))
+    speedup = us_mat / max(us_fused, 1e-9)
+    emit("kmeans_bootstrap_fused", us_fused,
+         f"B={B};n={n};k={k};d={d};weight_matrix_bytes=0;onehot_bytes=0")
+    emit("kmeans_bootstrap_materialized", us_mat,
+         f"fused_speedup={speedup:.2f}x;"
+         f"weight_matrix_bytes={4 * B * n};onehot_bytes={4 * B * n * k}")
+
+    # single-state assignment pass: tiled scan vs materialized (n, k)
+    assign_jnp = jax.jit(
+        lambda x, cent: ka_ops.kmeans_assign(x, None, cent, backend="jnp"))
+    us_a_jnp = timeit(lambda: jax.block_until_ready(assign_jnp(x, cent)))
+    us_a_scan = timeit(lambda: jax.block_until_ready(
+        ka_ops.kmeans_assign(x, None, cent, backend="scan")))
+    emit("kmeans_assign_scan", us_a_scan, f"n={n};k={k};d={d}")
+    emit("kmeans_assign_materialized", us_a_jnp,
+         f"scan_speedup={us_a_jnp / max(us_a_scan, 1e-9):.2f}x;"
+         f"nk_bytes={4 * n * k}")
+
+    _BENCH_KMEANS_JSON.write_text(json.dumps({
+        "config": {"B": B, "n": n, "k": k, "d": d,
+                   "backend": jax.default_backend(),
+                   "fused_lowering": ("pallas"
+                                      if jax.default_backend() == "tpu"
+                                      else "scan")},
+        "us_per_call": {"fused": us_fused,
+                        "materialized": us_mat,
+                        "assign_scan": us_a_scan,
+                        "assign_materialized": us_a_jnp},
+        "speedup_fused_vs_materialized": speedup,
+        "peak_intermediate_bytes": {
+            "fused": 4 * (B * 512 + B * k * d),       # weight tile + states
+            "materialized": 4 * B * n * (1 + k),      # weights + one-hot
+        },
     }, indent=2) + "\n")
 
 

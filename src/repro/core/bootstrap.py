@@ -19,13 +19,17 @@ Backends (``backend=`` on ``bootstrap``/``bootstrap_chunked``):
 * ``None``        — materialized weights (jnp oracle); ``use_kernel`` may
   additionally route the contraction through the weighted_stats kernel.
 * ``"fused_rng"`` — matrix-free (poisson engine only): weights are
-  generated inside the contraction from a counter-based PRNG
-  (kernels/weighted_stats.fused_poisson_moments), so the (B, n) weight
-  matrix never exists and peak live memory is O(B·d).  For statistics
-  without a moment decomposition the same implicit weights are
-  materialized per chunk as a fallback.  The PRNG seed derives
-  deterministically from ``key``, so the fold-in discipline (delta
-  maintenance, common random numbers) carries over unchanged.
+  generated inside the contraction from a counter-based PRNG, so the (B, n)
+  weight matrix never exists.  Statistics opt in via
+  ``Statistic.fused_poisson_states``: moment statistics (Mean/Sum/Count/
+  Var/Std) route through kernels/weighted_stats.fused_poisson_moments
+  (peak O(B·d)), ``KMeansStep`` through
+  kernels/kmeans_assign.fused_poisson_kmeans (peak O(B·k·d), and no (n, k)
+  distance/one-hot intermediate either); statistics without a fused path
+  (e.g. Quantile) fall back to materializing the same implicit weights per
+  chunk.  The PRNG seed derives deterministically from ``key``, so the
+  fold-in discipline (delta maintenance, common random numbers) carries
+  over unchanged.
 """
 from __future__ import annotations
 
@@ -37,7 +41,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import accuracy
-from repro.core.reduce_api import Statistic, _as_2d
+from repro.core.reduce_api import (Statistic, _as_2d, bind_params,
+                                   split_params)
 
 
 @dataclasses.dataclass
@@ -60,11 +65,29 @@ def seed_from_key(key: jax.Array) -> jax.Array:
     """Deterministic int32 seed for the counter-based in-kernel PRNG.
 
     Multi-stream callers (chunked bootstrap, delta maintenance) derive ONE
-    base seed per run and offset it by the chunk/step counter — streams
-    within a run are distinct *by construction* (no 31-bit birthday bound),
-    while different keys still give independent runs."""
+    base seed per run and offset it by the chunk/step counter via
+    ``offset_seed`` — streams within a run are distinct *by construction*
+    (no 31-bit birthday bound), while different keys still give independent
+    runs."""
     return jax.random.randint(key, (), 0, jnp.iinfo(jnp.int32).max,
                               dtype=jnp.int32)
+
+
+_SEED_MOD = int(jnp.iinfo(jnp.int32).max)      # 2^31 - 1
+
+
+def offset_seed(base_seed, i):
+    """The i-th derived stream seed: (base + i) mod (2^31 − 1), computed
+    without int32 overflow.
+
+    ``base_seed`` comes from ``seed_from_key`` (∈ [0, 2^31−1)); a plain
+    ``base + i`` wraps past ``iinfo(int32).max`` for large chunk/step
+    counters (or a base drawn near the boundary), silently flipping the
+    seed negative.  Both branches stay inside [0, 2^31−1)."""
+    base = jnp.asarray(base_seed, jnp.int32)
+    off = jnp.asarray(i, jnp.int32) % _SEED_MOD
+    room = _SEED_MOD - off
+    return jnp.where(base >= room, base - room, base + off)
 
 
 def fused_resample_states(stat: Statistic, seed, x2: jax.Array, B: int,
@@ -72,17 +95,16 @@ def fused_resample_states(stat: Statistic, seed, x2: jax.Array, B: int,
     """B-leading pytree of per-resample states for ``x2`` under implicit
     in-kernel Poisson(1) weights (the matrix-free hot path).
 
-    Moment statistics come straight from ``fused_poisson_moments`` (the
-    (B, n) matrix never exists); other statistics fall back to
-    materializing the same implicit weights.  The result is a *delta*
-    state: ``merge`` it into running states (delta/chunked) or ``finalize``
-    it directly (one-shot bootstrap).
+    Statistics with a fused path (``Statistic.fused_poisson_states``:
+    moment statistics and KMeansStep) never see a (B, n) matrix; other
+    statistics fall back to materializing the same implicit weights.  The
+    result is a *delta* state: ``merge`` it into running states
+    (delta/chunked) or ``finalize`` it directly (one-shot bootstrap).
     """
+    states = stat.fused_poisson_states(seed, x2, B, n_valid=n_valid)
+    if states is not None:
+        return states
     from repro.kernels.weighted_stats import ops as ws_ops
-    if stat.moment_powers is not None:
-        w_tot, s1, s2 = ws_ops.fused_poisson_moments(seed, x2, B,
-                                                     n_valid=n_valid)
-        return jax.vmap(stat.from_moments)(w_tot, s1, s2)
     w = ws_ops.implicit_weights(seed, B, x2.shape[0])
     if n_valid is not None:
         w = w * (jnp.arange(x2.shape[0]) < n_valid).astype(w.dtype)[None, :]
@@ -156,7 +178,12 @@ def _fused_thetas(values: jax.Array, stat: Statistic, B: int,
 
 @partial(jax.jit,
          static_argnames=("stat", "B", "engine", "use_kernel", "backend"))
-def _bootstrap_jit(values, key, stat, B, engine, use_kernel, backend):
+def _bootstrap_jit(values, key, params, stat, B, engine, use_kernel,
+                   backend):
+    # ``stat`` is the hashable spec; its array parameters (e.g. KMeansStep
+    # centroids) arrive traced in ``params`` so Lloyd-style loops that pass
+    # a fresh same-shaped Statistic per call hit this cache entry.
+    stat = bind_params(stat, params)
     n = values.shape[0]
     if backend == "fused_rng":
         thetas = _fused_thetas(values, stat, B, key)
@@ -184,8 +211,9 @@ def bootstrap(values: jax.Array, stat: Statistic, B: int, key: jax.Array,
     if backend == "fused_rng" and engine != "poisson":
         raise ValueError("backend='fused_rng' requires the poisson engine "
                          "(in-kernel RNG draws iid Poisson(1) weights)")
-    thetas, estimate = _bootstrap_jit(values, key, stat, int(B), engine,
-                                      bool(use_kernel), backend)
+    spec, params = split_params(stat)
+    thetas, estimate = _bootstrap_jit(values, key, params, spec, int(B),
+                                      engine, bool(use_kernel), backend)
     thetas = stat.correct(thetas, p)
     estimate = stat.correct(estimate, p)
     return BootstrapResult(
@@ -208,9 +236,11 @@ def bootstrap_chunked(values: jax.Array, stat: Statistic, B: int,
 
     Only valid for mergeable statistics (all built-ins).  Poisson weights are
     drawn per chunk with a folded key, so the full (B, n) matrix never
-    materializes — peak memory is (B, chunk), or O(B·d) with
-    ``backend="fused_rng"`` (weights generated inside the contraction, the
-    per-chunk matrix never materializes either).
+    materializes — peak memory is (B, chunk), or O(B·d) / O(B·k·d) with
+    ``backend="fused_rng"`` for statistics with a fused path (moment
+    statistics, KMeansStep — see ``Statistic.fused_poisson_states``; the
+    per-chunk weight matrix never materializes either).  Chunk seeds derive
+    as ``offset_seed(base, i)`` so long streams can't wrap int32.
     """
     if engine != "poisson":
         raise ValueError("chunked bootstrap requires the poisson engine "
@@ -231,8 +261,8 @@ def bootstrap_chunked(values: jax.Array, stat: Statistic, B: int,
         i, xi = inp
         n_valid = jnp.minimum(chunk, n - i * chunk)   # suffix of last chunk
         if backend == "fused_rng":
-            delta = fused_resample_states(stat, base_seed + i, xi, B,
-                                          n_valid=n_valid)
+            delta = fused_resample_states(stat, offset_seed(base_seed, i),
+                                          xi, B, n_valid=n_valid)
             return jax.vmap(stat.merge)(states, delta), None
         vi = (jnp.arange(chunk) < n_valid).astype(jnp.float32)
         w = poisson_weights(jax.random.fold_in(key, i), B, chunk) \

@@ -33,8 +33,10 @@ import numpy as np
 
 from repro.core import accuracy
 from repro.core.bootstrap import (BootstrapResult, fused_resample_states,
-                                  poisson_weights, seed_from_key)
-from repro.core.reduce_api import Statistic, _as_2d
+                                  offset_seed, poisson_weights,
+                                  seed_from_key)
+from repro.core.reduce_api import Statistic, _as_2d, bind_params, \
+    split_params
 
 
 # ============================================================================
@@ -64,14 +66,17 @@ def poisson_delta_init(stat: Statistic, B: int, dim: int, key: jax.Array,
 
 
 @partial(jax.jit, static_argnames=("stat", "B", "backend"))
-def _pd_extend_jit(states, est_state, key, step, x, stat, B, backend):
+def _pd_extend_jit(states, est_state, key, step, x, params, stat, B,
+                   backend):
+    stat = bind_params(stat, params)   # traced array params (e.g. centroids)
     if backend == "fused_rng":
         # matrix-free: the Δs weight matrix never materializes; delta
-        # states from in-kernel-RNG moments merge into the running states.
-        # Streams are seed_from_key(key) + step — distinct per extend by
-        # construction (see seed_from_key).
+        # states from in-kernel-RNG weights merge into the running states.
+        # Streams are offset_seed(seed_from_key(key), step) — distinct per
+        # extend by construction (see seed_from_key), safe at the int32
+        # boundary.
         delta_states = fused_resample_states(
-            stat, seed_from_key(key) + step, x, B)
+            stat, offset_seed(seed_from_key(key), step), x, B)
         new_states = jax.vmap(stat.merge)(states, delta_states)
     else:
         w = poisson_weights(jax.random.fold_in(key, step), B, x.shape[0])
@@ -86,8 +91,9 @@ def poisson_delta_extend(pd: PoissonDelta, new_values: jax.Array
     point estimate's state is maintained incrementally too (O(Δn))."""
     x = _as_2d(new_values)
     dn = x.shape[0]
+    spec, params = split_params(pd.stat)
     states, est_state = _pd_extend_jit(pd.states, pd.est_state, pd.key,
-                                       pd.step, x, pd.stat, pd.B,
+                                       pd.step, x, params, spec, pd.B,
                                        pd.backend)
     return dataclasses.replace(pd, states=states, est_state=est_state,
                                n=pd.n + dn, step=pd.step + 1)

@@ -14,8 +14,10 @@ over the mesh for free.
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
-from typing import Any, Optional, Tuple
+from functools import partial
+from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +26,48 @@ State = Any
 Result = Any
 
 _EPS = 1e-12
+
+
+class _ArrayParam(NamedTuple):
+    """Hashable stand-in for an array attribute in a jit-static Statistic.
+
+    ``split_params`` swaps array attributes (declared via
+    ``Statistic.array_params``) for these markers so two Statistics with
+    same-shaped parameters compare equal — the jit cache keys on structure
+    while the array values travel as traced operands."""
+    shape: Tuple[int, ...]
+    dtype: str
+
+
+def split_params(stat: "Statistic") -> Tuple["Statistic", dict]:
+    """Split a Statistic into a (hashable, jit-static) spec and a dict of
+    traced array parameters (the attributes named in ``stat.array_params``).
+
+    The spec carries ``_ArrayParam(shape, dtype)`` markers in place of the
+    arrays, so e.g. every ``KMeansStep(cent)`` of a Lloyd loop maps to ONE
+    jit cache entry; ``bind_params`` re-attaches the (possibly traced)
+    arrays inside the jitted function."""
+    names = stat.array_params
+    if not names:
+        return stat, {}
+    spec = copy.copy(stat)
+    params = {}
+    for name in names:
+        v = getattr(stat, name)
+        params[name] = v
+        object.__setattr__(spec, name, _ArrayParam(
+            tuple(jnp.shape(v)), jnp.result_type(v).name))
+    return spec, params
+
+
+def bind_params(stat: "Statistic", params: dict) -> "Statistic":
+    """Inverse of ``split_params``: re-attach traced array parameters."""
+    if not params:
+        return stat
+    bound = copy.copy(stat)
+    for name, v in params.items():
+        object.__setattr__(bound, name, v)
+    return bound
 
 
 def _as_2d(values: jax.Array) -> jax.Array:
@@ -47,15 +91,24 @@ class Statistic:
     #: routed through the fused Pallas kernel (kernels/weighted_stats).
     moment_powers: Optional[Tuple[int, ...]] = None
 
+    #: names of array-valued attributes that are *traced parameters* of the
+    #: statistic (e.g. KMeansStep centroids).  The jit entry points split
+    #: them out with ``split_params`` so they travel as traced operands
+    #: instead of being closed over as compile-time constants — fresh
+    #: instances with same-shaped parameters share one compilation.
+    array_params: Tuple[str, ...] = ()
+
     # Structural hash/eq so jit caches keyed on a (static) Statistic hit
     # across instances: Mean() == Mean(); config'd stats compare by their
-    # scalar attributes; array-valued attributes (e.g. KMeansStep
-    # centroids, which are closed over as constants) compare by identity.
+    # scalar attributes; ``split_params`` markers compare by (shape, dtype).
+    # Raw array attributes NOT declared in ``array_params`` still compare by
+    # identity — by-id is a cache miss for fresh instances, but weakening it
+    # would let a compilation with stale baked-in constants be reused.
     def _static_key(self):
         items = []
         for k in sorted(self.__dict__):
             v = self.__dict__[k]
-            if isinstance(v, (int, float, str, bool, type(None))):
+            if isinstance(v, (int, float, str, bool, tuple, type(None))):
                 items.append((k, v))
             else:
                 items.append((k, id(v)))
@@ -88,6 +141,24 @@ class Statistic:
         p = fraction of data used.  Default: estimator is p-invariant."""
         del p
         return result
+
+    def fused_poisson_states(self, seed, values: jax.Array, B: int,
+                             n_valid=None) -> Optional[State]:
+        """Matrix-free hook for ``backend="fused_rng"``: B per-resample
+        states under implicit in-kernel Poisson(1) weights, WITHOUT
+        materializing the (B, n) weight matrix.
+
+        Fused implementations exist for moment statistics (Mean/Sum/Count/
+        Var/Std via kernels/weighted_stats) and KMeansStep (via
+        kernels/kmeans_assign); the default ``None`` makes
+        ``bootstrap.fused_resample_states`` fall back to materializing the
+        same implicit weights.  ``values`` is already 2-D (n, d); ``seed``
+        keys the counter-based PRNG tile discipline, so implementations
+        must draw weights identical to
+        ``weighted_stats.ops.implicit_weights(seed, B, n)``.
+        """
+        del seed, values, B, n_valid
+        return None
 
     # convenience -----------------------------------------------------------
     def __call__(self, values: jax.Array,
@@ -122,6 +193,12 @@ class _MomentStatistic(Statistic):
 
     def from_moments(self, w, s1, s2) -> MomentState:
         return MomentState(w=w, s1=s1, s2=s2)
+
+    def fused_poisson_states(self, seed, values, B, n_valid=None):
+        from repro.kernels.weighted_stats import ops as ws_ops
+        w_tot, s1, s2 = ws_ops.fused_poisson_moments(seed, values, B,
+                                                     n_valid=n_valid)
+        return jax.vmap(self.from_moments)(w_tot, s1, s2)
 
 
 class Mean(_MomentStatistic):
@@ -182,9 +259,13 @@ class Quantile(Statistic):
     bootstrap's B axis).
     """
 
+    _BACKENDS = (None, "pallas", "pallas_interpret")
+
     def __init__(self, q: float, nbins: int = 2048,
                  lo: float = 0.0, hi: float = 1.0,
                  backend: Optional[str] = None):
+        if backend not in self._BACKENDS:
+            raise ValueError(f"unknown quantile backend: {backend!r}")
         self.q = float(q)
         self.nbins = int(nbins)
         self.lo = float(lo)
@@ -246,8 +327,12 @@ class Quantile(Statistic):
         return v[jnp.clip(i, 0, v.shape[0] - 1)]
 
 
-def Median(nbins: int = 2048, lo: float = 0.0, hi: float = 1.0) -> Quantile:
-    return Quantile(0.5, nbins=nbins, lo=lo, hi=hi)
+def Median(nbins: int = 2048, lo: float = 0.0, hi: float = 1.0,
+           backend: Optional[str] = None) -> Quantile:
+    """q=0.5 Quantile; forwards every constructor knob ``Quantile`` accepts
+    (``backend`` was historically dropped here, silently downgrading Pallas
+    users to the scatter path)."""
+    return Quantile(0.5, nbins=nbins, lo=lo, hi=hi, backend=backend)
 
 
 @jax.tree_util.register_dataclass
@@ -259,16 +344,35 @@ class KMeansState:
 
 
 class KMeansStep(Statistic):
-    """One weighted Lloyd assignment pass against fixed ``centroids``.
+    """One weighted Lloyd assignment pass against ``centroids``.
 
     finalize() -> new centroids; the EARL session / examples drive the outer
     Lloyd loop (paper §6.3 runs K-Means over the sample).  The bootstrap
     statistic of record is the (scalar) inertia, exposed via
     ``finalize_inertia`` — centroid c_v is also available via finalize().
+
+    ``centroids`` is a *traced parameter* (``array_params``): the jit entry
+    points carry it as an operand rather than a baked-in constant, so Lloyd
+    loops that build a fresh ``KMeansStep`` per iteration compile once.
+
+    ``backend`` picks the assignment lowering: None/"jnp" materializes the
+    (n, k) distance/one-hot matrices; "scan"/"pallas"/"pallas_interpret"
+    route through kernels/kmeans_assign (tiled — no (n, k) intermediate).
+    The matrix-free bootstrap hook ``fused_poisson_states`` is implemented
+    either way (kernels/kmeans_assign.fused_poisson_kmeans), so
+    ``bootstrap(..., backend="fused_rng")`` over a KMeansStep never builds
+    the (B, n) weight matrix.
     """
 
-    def __init__(self, centroids: jax.Array):
+    array_params = ("centroids",)
+
+    _BACKENDS = (None, "jnp", "scan", "pallas", "pallas_interpret")
+
+    def __init__(self, centroids: jax.Array, backend: Optional[str] = None):
+        if backend not in self._BACKENDS:
+            raise ValueError(f"unknown kmeans backend: {backend!r}")
         self.centroids = jnp.asarray(centroids, jnp.float32)  # (k, d)
+        self.backend = backend
 
     def init_state(self, dim: int) -> KMeansState:
         k, d = self.centroids.shape
@@ -281,9 +385,19 @@ class KMeansStep(Statistic):
     def update(self, state: KMeansState, values, weights=None) -> KMeansState:
         x = _as_2d(values).astype(jnp.float32)               # (n, d)
         w = _w(x, weights)
+        if self.backend in ("scan", "pallas", "pallas_interpret"):
+            from repro.kernels.kmeans_assign import ops as ka_ops
+            sums, counts, inertia = ka_ops.kmeans_assign(
+                x, w, self.centroids, backend=self.backend)
+            return KMeansState(sums=state.sums + sums,
+                               counts=state.counts + counts,
+                               inertia=state.inertia + inertia)
         d2 = (jnp.sum(x * x, -1, keepdims=True)
               - 2.0 * x @ self.centroids.T
               + jnp.sum(self.centroids * self.centroids, -1))  # (n, k)
+        # f32 cancellation can push the expanded form slightly below zero
+        # for points at/near a centroid — clamp so inertia stays >= 0.
+        d2 = jnp.maximum(d2, 0.0)
         assign = jax.nn.one_hot(jnp.argmin(d2, -1), self.centroids.shape[0],
                                 dtype=jnp.float32)             # (n, k)
         wa = assign * w[:, None]
@@ -293,6 +407,15 @@ class KMeansStep(Statistic):
             inertia=state.inertia + jnp.sum(w * jnp.min(d2, -1)),
         )
 
+    def fused_poisson_states(self, seed, values, B, n_valid=None):
+        from repro.kernels.kmeans_assign import ops as ka_ops
+        backend = self.backend if self.backend in (
+            "scan", "pallas", "pallas_interpret") else None
+        sums, counts, inertia = ka_ops.fused_poisson_kmeans(
+            seed, values, self.centroids, B, n_valid=n_valid,
+            backend=backend)
+        return KMeansState(sums=sums, counts=counts, inertia=inertia)
+
     def finalize(self, state: KMeansState):
         return state.sums / (state.counts[:, None] + _EPS)
 
@@ -300,21 +423,39 @@ class KMeansStep(Statistic):
         return state.inertia / (jnp.sum(state.counts) + _EPS)
 
 
-def kmeans_fit(values: jax.Array, k: int, iters: int, key: jax.Array,
-               weights: Optional[jax.Array] = None
-               ) -> Tuple[jax.Array, jax.Array]:
-    """Weighted Lloyd's on in-memory values; returns (centroids, inertia)."""
-    x = _as_2d(values).astype(jnp.float32)
-    init_idx = jax.random.choice(key, x.shape[0], (k,), replace=False)
-    cent0 = x[init_idx]
-
+@partial(jax.jit, static_argnames=("iters", "backend"))
+def _kmeans_fit_jit(x, cent0, weights, iters, backend):
     def body(cent, _):
-        step = KMeansStep(cent)
+        step = KMeansStep(cent, backend=backend)
         st = step.update(step.init_state(x.shape[1]), x, weights)
         return step.finalize(st), step.finalize_inertia(st)
 
     cent, inertias = jax.lax.scan(body, cent0, None, length=iters)
     return cent, inertias[-1]
+
+
+def kmeans_fit(values: jax.Array, k: int, iters: int, key: jax.Array,
+               weights: Optional[jax.Array] = None,
+               init: Optional[jax.Array] = None,
+               backend: Optional[str] = None
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Weighted Lloyd's on in-memory values; returns (centroids, inertia).
+
+    ``init`` (k, d) pins the starting centroids (benchmarks share one init
+    across fits); default is k distinct random rows.  The whole Lloyd loop
+    is one jitted scan with the centroids as carried state — repeat calls
+    with same-shaped inputs reuse one compilation.  ``backend`` is
+    forwarded to ``KMeansStep``.
+    """
+    x = _as_2d(values).astype(jnp.float32)
+    if init is None:
+        init_idx = jax.random.choice(key, x.shape[0], (k,), replace=False)
+        init = x[init_idx]
+    elif init.shape[0] != k:
+        raise ValueError(f"init has {init.shape[0]} centroids, expected "
+                         f"k={k}")
+    return _kmeans_fit_jit(x, jnp.asarray(init, jnp.float32), weights,
+                           int(iters), backend)
 
 
 class MeanLoss(Mean):

@@ -116,8 +116,10 @@ class EarlSession:
             pd = poisson_delta_extend(pd, delta)
             n_have = n_goal
             p = n_have / N
-            estimate = self.stat(self.sampler.take(0, n_have))
-            res: BootstrapResult = poisson_delta_result(pd, estimate, p=p)
+            # the point estimate is delta-maintained in pd.est_state (each
+            # extend folds Δs in, O(Δn)); recomputing stat(take(0, n_have))
+            # here would re-read the whole prefix every round, O(n).
+            res: BootstrapResult = poisson_delta_result(pd, p=p)
             history.append(dict(iteration=iterations, n=n_have, B=B,
                                 cv=res.cv,
                                 t=time.perf_counter() - t0))

@@ -24,8 +24,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import accuracy
-from repro.core.bootstrap import (bootstrap_thetas, seed_from_key,
-                                  weights_for)
+from repro.core.bootstrap import (bootstrap_thetas, fused_resample_states,
+                                  seed_from_key, weights_for)
 from repro.core.delta import poisson_delta_extend, poisson_delta_init, \
     poisson_delta_result
 from repro.core.reduce_api import Statistic, _as_2d
@@ -55,19 +55,20 @@ def estimate_B(values: jax.Array, stat: Statistic, tau: float,
     With ``backend="fused_rng"`` the nested-prefix property is even
     structural: implicit weights are keyed per (resample-tile, item-tile),
     so row b's weights are independent of B_max entirely."""
+    if backend == "fused_rng" and engine != "poisson":
+        raise ValueError("backend='fused_rng' requires the poisson engine "
+                         "(in-kernel RNG draws iid Poisson(1) weights)")
     if B_max is None:
         B_max = max(B_min + 1, int(math.ceil(1.0 / tau)))
     x = _as_2d(values)
     n, dim = x.shape
 
-    if backend == "fused_rng" and engine == "poisson" \
-            and stat.moment_powers is not None:
+    if backend == "fused_rng" and engine == "poisson":
         # matrix-free: thetas for all B_max resamples without the (B_max, n)
-        # weight matrix; prefixes of thetas give nested B as before.
-        from repro.kernels.weighted_stats import ops as ws_ops
-        w_tot, s1, s2 = ws_ops.fused_poisson_moments(
-            seed_from_key(key), x, B_max)
-        states = jax.vmap(stat.from_moments)(w_tot, s1, s2)
+        # weight matrix (for statistics with a fused_poisson_states path —
+        # moments, KMeansStep; others materialize the same implicit
+        # weights); prefixes of thetas give nested B as before.
+        states = fused_resample_states(stat, seed_from_key(key), x, B_max)
         thetas_full = jax.vmap(stat.finalize)(states)
     else:
         # draw the maximal weight matrix once; prefixes give nested B

@@ -14,6 +14,14 @@ hot spots are:
                     round-trip for the (B, n) weight matrix); also the
                     tile/seeding machinery the fused path reuses and the
                     materialization oracle for its tests.
+  kmeans_assign/    fused k-means assignment+accumulate for KMeansStep:
+                    distances, argmin and the weighted (sums, counts,
+                    inertia) per x tile with the centroid block resident in
+                    VMEM — neither the (n, k) distance matrix nor the one-
+                    hot ever exists in HBM; ``fused_poisson_kmeans`` adds
+                    the in-kernel Poisson(1) weight generation (same tile
+                    discipline as weighted_stats), the matrix-free
+                    bootstrap-over-k-means hot path (peak O(B·k·d)).
   weighted_hist/    fused weighted-histogram sketch for Quantile/Median:
                     per-tile one-hot in VMEM + MXU bin accumulate, so the
                     (n, d, nbins) one-hot tensor never materializes.

@@ -1,0 +1,194 @@
+"""jit'd public wrappers for kmeans_assign: padding + platform dispatch.
+
+On TPU the Pallas kernels run compiled; everywhere else they run in
+interpret mode (tests) or through the jnp scan lowerings — the same tile
+decomposition, assignment math (`kernel._assign_tile`) and k-sequential f32
+accumulation expressed as a ``lax.scan``, so XLA:CPU runs the identical
+algorithm at full speed with the identical per-tile working set.
+
+Two entry points:
+
+* ``kmeans_assign``        — one weighted Lloyd assignment pass to a single
+  (sums, counts, inertia) state; the (n, k) distance/one-hot matrices only
+  ever exist one (block_n, k) tile at a time.
+* ``fused_poisson_kmeans`` — matrix-free bootstrap-over-k-means: B
+  per-resample states under implicit Poisson(1) weights generated inside
+  the pass from the counter-based PRNG (same (seed, b-tile, n-tile)
+  discipline as weighted_stats.fused_poisson_moments, so the implicit
+  matrix equals ``implicit_weights(seed, B, n)``); neither the (B, n)
+  weight matrix nor any (n, k) intermediate materializes — peak live state
+  is O(B·k·d) plus one (B, block_n) weight tile.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.kmeans_assign.kernel import (_assign_tile,
+                                                fused_poisson_kmeans_kernel,
+                                                kmeans_assign_kernel)
+from repro.kernels.weighted_stats.ops import _pad_to, implicit_weight_tile
+
+
+def _pick_bn(n: int, block_n: int) -> int:
+    return min(block_n, max(128, n))
+
+
+# ============================================================================
+# single-state weighted assignment pass
+# ============================================================================
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def _assign_scan(xp: jax.Array, wp: jax.Array, cent: jax.Array,
+                 block_n: int):
+    """CPU lowering of the single-state kernel: scan over n-tiles with the
+    shared `_assign_tile` math; peak live intermediate is (block_n, k)."""
+    n, d = xp.shape
+    k = cent.shape[0]
+    nt = n // block_n
+    xc = xp.reshape(nt, block_n, d)
+    wc = wp.reshape(nt, block_n)
+
+    def body(carry, inp):
+        sums, counts, inertia = carry
+        x, w = inp
+        assign, min_d2 = _assign_tile(x, cent, k)
+        wx = x * w[:, None]
+        return (sums + jax.lax.dot_general(
+                    assign, wx, (((0,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32),
+                counts + assign.T @ w,
+                inertia + jnp.sum(w * min_d2)), None
+
+    init = (jnp.zeros((k, d), jnp.float32), jnp.zeros((k,), jnp.float32),
+            jnp.zeros((), jnp.float32))
+    (sums, counts, inertia), _ = jax.lax.scan(body, init, (xc, wc))
+    return sums, counts, inertia
+
+
+def kmeans_assign(values: jax.Array, weights: Optional[jax.Array],
+                  centroids: jax.Array, backend: str | None = None,
+                  block_n: int = 512):
+    """values (n, d) × centroids (k, d) [× weights (n,)] ->
+    (sums (k, d), counts (k,), inertia ()).
+
+    backend: None = auto (pallas on TPU, scan elsewhere), "pallas",
+    "pallas_interpret", "scan", "jnp" (materialized (n, k) oracle).
+    """
+    if values.ndim == 1:
+        values = values[:, None]
+    n, d = values.shape
+    if weights is None:
+        weights = jnp.ones((n,), jnp.float32)
+    if backend is None:
+        backend = "pallas" if jax.default_backend() == "tpu" else "scan"
+
+    if backend == "jnp":
+        from repro.kernels.kmeans_assign.ref import kmeans_assign_ref
+        return kmeans_assign_ref(values, weights, centroids)
+
+    bn = _pick_bn(n, block_n)
+    xp = _pad_to(values.astype(jnp.float32), bn, 0)
+    wp = _pad_to(weights.astype(jnp.float32), bn, 0)   # zero weight = no-op
+
+    if backend == "scan":
+        return _assign_scan(xp, wp, jnp.asarray(centroids, jnp.float32), bn)
+
+    k = centroids.shape[0]
+    cp = _pad_to(_pad_to(jnp.asarray(centroids, jnp.float32), 8, 0), 128, 1)
+    xpp = _pad_to(xp, 128, 1)
+    sums, counts, inertia = kmeans_assign_kernel(
+        xpp, wp[:, None], cp, k_valid=k, block_n=bn,
+        interpret=(backend != "pallas"))
+    return sums[:k, :d], counts[:k, 0], inertia[0, 0]
+
+
+# ============================================================================
+# matrix-free bootstrap path
+# ============================================================================
+@functools.partial(jax.jit, static_argnames=("B", "block_b", "block_n"))
+def _fused_kmeans_scan(seed, n_valid, xp, cent, B, block_b, block_n):
+    """CPU lowering of the fused kernel: weights come from the SHARED
+    ``weighted_stats.ops.implicit_weight_tile`` (same per-tile threefry
+    bits and CDF ladder as every fused path), assignment from the shared
+    ``_assign_tile`` — peak live state per step is the (B, block_n) weight
+    tile plus the (block_n, k·d) per-cluster moment tile."""
+    n, d = xp.shape
+    k = cent.shape[0]
+    nb_n = n // block_n
+    xc = xp.reshape(nb_n, block_n, d)
+
+    def body(carry, t):
+        sums, counts, inertia = carry
+        w = implicit_weight_tile(seed, n_valid, t, B,
+                                 block_b, block_n)       # (B, bn)
+        xt = xc[t]
+        assign, min_d2 = _assign_tile(xt, cent, k)       # (bn, k)
+        # cluster-masked moments as ONE (B, bn) @ (bn, k·d) contraction
+        y = (assign[:, :, None] * xt[:, None, :]).reshape(block_n, k * d)
+        return (sums + (w @ y).reshape(B, k, d),
+                counts + w @ assign,
+                inertia + w @ min_d2), None
+
+    init = (jnp.zeros((B, k, d), jnp.float32),
+            jnp.zeros((B, k), jnp.float32),
+            jnp.zeros((B,), jnp.float32))
+    (sums, counts, inertia), _ = jax.lax.scan(
+        body, init, jnp.arange(nb_n, dtype=jnp.int32))
+    return sums, counts, inertia
+
+
+def fused_poisson_kmeans(seed, values: jax.Array, centroids: jax.Array,
+                         B: int, backend: str | None = None,
+                         block_b: int = 128, block_n: int = 512,
+                         n_valid=None) -> Tuple[jax.Array, jax.Array,
+                                                jax.Array]:
+    """Matrix-free bootstrap-over-k-means from an int32 seed.
+
+    values (n, d) or (n,) × centroids (k, d) ->
+    (sums (B, k, d), counts (B, k), inertia (B,)) where the implicit
+    weights are Poisson(1), keyed per (block_b, block_n) tile by
+    (seed, b-tile, n-tile) — the same matrix as
+    ``weighted_stats.ops.implicit_weights(seed, B, n)``.
+
+    ``n_valid`` (traced scalar, default n) masks weight columns >= n_valid
+    to zero, so pre-padded callers (the chunked bootstrap's ragged tail)
+    contribute nothing for padding rows.
+
+    backend: None = auto (pallas on TPU, scan elsewhere), "pallas",
+    "pallas_interpret", "scan".
+    """
+    if values.ndim == 1:
+        values = values[:, None]
+    n, d = values.shape
+    k = centroids.shape[0]
+    if backend is None:
+        backend = "pallas" if jax.default_backend() == "tpu" else "scan"
+    if n_valid is None:
+        n_valid = n
+
+    bb = min(block_b, max(8, B))
+    bn = _pick_bn(n, block_n)
+    Bp = B + (-B) % bb
+    seed = jnp.asarray(seed, jnp.int32)
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+    xp = _pad_to(values.astype(jnp.float32), bn, 0)
+    cent = jnp.asarray(centroids, jnp.float32)
+
+    if backend == "scan":
+        sums, counts, inertia = _fused_kmeans_scan(seed, n_valid, xp, cent,
+                                                   Bp, bb, bn)
+        return sums[:B], counts[:B], inertia[:B]
+
+    cp = _pad_to(_pad_to(cent, 8, 0), 128, 1)
+    kp, dp = cp.shape
+    xpp = _pad_to(xp, 128, 1)
+    sums, counts, inertia = fused_poisson_kmeans_kernel(
+        seed, n_valid, xpp, cp, Bp, k_valid=k,
+        block_b=bb, block_n=bn,
+        interpret=(backend != "pallas"),
+        use_tpu_prng=(backend == "pallas"))
+    sums = sums.reshape(Bp, kp, dp)
+    return sums[:B, :k, :d], counts[:B, :k], inertia[:B, 0]

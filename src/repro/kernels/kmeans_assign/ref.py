@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the kmeans_assign kernel.
+
+Materializes exactly what the kernel avoids: the (n, k) distance matrix and
+the (n, k) one-hot assignment.  Kept as the correctness oracle (and as the
+memory-hog baseline the shape-capture tests flag).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def kmeans_assign_ref(values: jax.Array, weights: jax.Array,
+                      centroids: jax.Array):
+    """One weighted Lloyd assignment pass, materialized.
+
+    values (n, d), weights (n,), centroids (k, d) ->
+    (sums (k, d), counts (k,), inertia ()).
+
+    d² uses the expanded form ‖x‖² − 2x·c + ‖c‖², clamped at 0: f32
+    cancellation can push it slightly negative for points at/near a
+    centroid, which would leak a negative inertia.
+    """
+    x = jnp.asarray(values, jnp.float32)
+    w = jnp.asarray(weights, jnp.float32)
+    c = jnp.asarray(centroids, jnp.float32)
+    d2 = (jnp.sum(x * x, -1, keepdims=True)
+          - 2.0 * x @ c.T
+          + jnp.sum(c * c, -1))                              # (n, k)
+    d2 = jnp.maximum(d2, 0.0)
+    assign = jax.nn.one_hot(jnp.argmin(d2, -1), c.shape[0],
+                            dtype=jnp.float32)               # (n, k)
+    wa = assign * w[:, None]
+    return (wa.T @ x,
+            jnp.sum(wa, 0),
+            jnp.sum(w * jnp.min(d2, -1)))

@@ -83,6 +83,27 @@ def weighted_moments(weights: jax.Array, values: jax.Array,
 # ============================================================================
 # matrix-free path
 # ============================================================================
+def implicit_weight_tile(seed, n_valid, t, B: int, block_b: int,
+                         block_n: int) -> jax.Array:
+    """The (B, block_n) implicit Poisson(1) weight tile at n-tile ``t``:
+    the scan-lowering analogue of the kernels' in-VMEM per-tile draw (same
+    threefry fold-in order, same CDF ladder, columns >= ``n_valid`` masked
+    to 0).
+
+    EVERY matrix-free scan lowering (fused moments here,
+    kernels/kmeans_assign's fused bootstrap) must draw its weights through
+    this helper — it is what keeps the implicit matrix bit-identical to
+    ``implicit_weights(seed, B, n)`` across statistics, which the delta-
+    maintenance / common-random-numbers discipline relies on."""
+    def one(i):
+        bits = _threefry_bits(seed, i, t, (block_b, block_n))
+        return _poisson_from_bits(bits)
+    w = jax.vmap(one)(jnp.arange(B // block_b)).reshape(B, block_n)
+    cols = jnp.arange(block_n, dtype=jnp.int32)
+    mask = (t * block_n + cols) < n_valid
+    return jnp.where(mask[None, :], w, 0.0)
+
+
 @functools.partial(jax.jit, static_argnames=("B", "block_b", "block_n"))
 def _fused_scan(seed, n_valid, xp, B, block_b, block_n):
     """CPU/matrix-free oracle of the fused kernel: same tile decomposition,
@@ -90,21 +111,12 @@ def _fused_scan(seed, n_valid, xp, B, block_b, block_n):
     accumulation — but expressed as a jnp scan so XLA:CPU runs it at full
     speed.  Peak live memory per step is (B, block_n)."""
     n, d = xp.shape
-    nb_b, nb_n = B // block_b, n // block_n
+    nb_n = n // block_n
     xc = xp.reshape(nb_n, block_n, d)
-    cols = jnp.arange(block_n, dtype=jnp.int32)
-
-    def tile_w(k):
-        def one(i):
-            bits = _threefry_bits(seed, i, k, (block_b, block_n))
-            return _poisson_from_bits(bits)
-        w = jax.vmap(one)(jnp.arange(nb_b)).reshape(B, block_n)
-        mask = (k * block_n + cols) < n_valid
-        return jnp.where(mask[None, :], w, 0.0)
 
     def body(carry, k):
         w_tot, s1, s2 = carry
-        w = tile_w(k)
+        w = implicit_weight_tile(seed, n_valid, k, B, block_b, block_n)
         xk = xc[k]
         return (w_tot + jnp.sum(w, axis=1, keepdims=True),
                 s1 + w @ xk,

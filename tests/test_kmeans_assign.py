@@ -1,0 +1,285 @@
+"""Fused k-means assignment kernel + session/statistic bugfix sweep (ISSUE 2).
+
+Covers the acceptance criteria:
+  * kmeans_assign (weighted + implicit-weight variants) == materialized
+    (n, k) oracle on every lowering; scan == interpret
+  * fused_poisson_kmeans == contracting the materialized implicit weights
+    resample-by-resample (same counter-based tile discipline as
+    weighted_stats)
+  * shape-capture harness: bootstrap-over-k-means on the fused path at
+    n=2^20 contains NO (n, k) or (B, n) intermediate anywhere in its jaxpr
+    (and the harness itself flags the materialized KMeansStep.update)
+  * statistical equivalence of fused bootstrap-over-k-means cv vs the
+    materialized oracle
+  * Lloyd loops compile once: fresh same-shaped KMeansStep instances hit
+    one _bootstrap_jit / _pd_extend_jit / _kmeans_fit_jit cache entry
+    (centroids are traced params, not jit-static constants keyed by id())
+  * inertia stays >= 0 for points at/near centroids (d² clamp)
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (KMeansStep, bootstrap, bootstrap_chunked,
+                        kmeans_fit)
+from repro.core.bootstrap import _bootstrap_jit
+from repro.core.delta import (_pd_extend_jit, poisson_delta_extend,
+                              poisson_delta_init, poisson_delta_result)
+from repro.core.reduce_api import _kmeans_fit_jit
+from repro.kernels.kmeans_assign import ops as ka_ops
+from repro.kernels.kmeans_assign.ref import kmeans_assign_ref
+from repro.kernels.weighted_stats import ops as ws_ops
+from test_matrix_free import _max_intermediate_size
+
+
+# ----------------------------------------------------------------------------
+# single-state assignment pass vs the materialized oracle
+# ----------------------------------------------------------------------------
+class TestAssignParity:
+    @pytest.mark.parametrize("n,k,d", [
+        (64, 2, 1), (500, 5, 2), (1030, 7, 3), (256, 16, 5),
+    ])
+    def test_weighted_matches_ref(self, key, n, k, d):
+        x = jax.random.normal(key, (n, d))
+        w = jnp.abs(jax.random.normal(jax.random.fold_in(key, 1), (n,)))
+        cent = jax.random.normal(jax.random.fold_in(key, 2), (k, d)) * 2
+        ref = kmeans_assign_ref(x, w, cent)
+        for backend in ("scan", "pallas_interpret"):
+            out = ka_ops.kmeans_assign(x, w, cent, backend=backend)
+            for a, b in zip(out, ref):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           rtol=2e-5, atol=2e-5,
+                                           err_msg=backend)
+
+    def test_implicit_weights_variant(self, key):
+        """weights=None == all-ones weights."""
+        x = jax.random.normal(key, (700, 3))
+        cent = x[:5]
+        a = ka_ops.kmeans_assign(x, None, cent, backend="scan")
+        b = ka_ops.kmeans_assign(x, jnp.ones((700,)), cent, backend="scan")
+        for u, v in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(u), np.asarray(v))
+
+    def test_scan_equals_interpret(self, key):
+        x = jax.random.normal(key, (900, 4))
+        w = jnp.abs(jax.random.normal(jax.random.fold_in(key, 1), (900,)))
+        cent = jax.random.normal(jax.random.fold_in(key, 2), (6, 4))
+        a = ka_ops.kmeans_assign(x, w, cent, backend="scan")
+        b = ka_ops.kmeans_assign(x, w, cent, backend="pallas_interpret")
+        for u, v in zip(a, b):
+            np.testing.assert_allclose(np.asarray(u), np.asarray(v),
+                                       rtol=1e-6)
+
+    def test_kmeans_step_backend_matches_jnp(self, key):
+        x = jax.random.normal(key, (513, 2)) + 3
+        w = jnp.abs(jax.random.normal(jax.random.fold_in(key, 1), (513,)))
+        cent = x[:4]
+        s_jnp = KMeansStep(cent)
+        s_ker = KMeansStep(cent, backend="scan")
+        a = s_jnp.update(s_jnp.init_state(2), x, w)
+        b = s_ker.update(s_ker.init_state(2), x, w)
+        np.testing.assert_allclose(np.asarray(a.sums), np.asarray(b.sums),
+                                   rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(np.asarray(a.counts),
+                                   np.asarray(b.counts), rtol=1e-6)
+        np.testing.assert_allclose(float(a.inertia), float(b.inertia),
+                                   rtol=2e-5)
+
+    def test_rejects_unknown_backend(self):
+        with pytest.raises(ValueError):
+            KMeansStep(jnp.zeros((2, 2)), backend="cuda")
+
+
+# ----------------------------------------------------------------------------
+# matrix-free bootstrap path vs the implicit-weights oracle
+# ----------------------------------------------------------------------------
+class TestFusedPoissonKMeans:
+    @pytest.mark.parametrize("B,n,k,d", [
+        (7, 130, 3, 2), (24, 700, 5, 2), (129, 1000, 9, 4),
+    ])
+    def test_matches_implicit_weights_oracle(self, key, B, n, k, d):
+        """Fused output == per-resample contraction of the materialized
+        implicit weight matrix (same threefry tile discipline)."""
+        x = jax.random.normal(key, (n, d))
+        cent = jax.random.normal(jax.random.fold_in(key, 3), (k, d))
+        W = ws_ops.implicit_weights(42, B, n)
+        ref = jax.vmap(lambda wr: kmeans_assign_ref(x, wr, cent))(W)
+        for backend in ("scan", "pallas_interpret"):
+            out = ka_ops.fused_poisson_kmeans(42, x, cent, B,
+                                              backend=backend)
+            for a, b in zip(out, ref):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           rtol=5e-4, atol=1e-3,
+                                           err_msg=backend)
+
+    def test_n_valid_masks_padding(self, key):
+        n, pad = 700, 1024 - 700
+        x = jax.random.normal(key, (n, 2))
+        xp = jnp.pad(x, ((0, pad), (0, 0)))
+        a = ka_ops.fused_poisson_kmeans(3, x, x[:4], 16)
+        b = ka_ops.fused_poisson_kmeans(3, xp, x[:4], 16, n_valid=n)
+        for u, v in zip(a, b):
+            np.testing.assert_allclose(np.asarray(u), np.asarray(v),
+                                       rtol=1e-6)
+
+    def test_deterministic_and_seed_sensitive(self, key):
+        x = jax.random.normal(key, (512, 2))
+        a = ka_ops.fused_poisson_kmeans(5, x, x[:3], 16)
+        b = ka_ops.fused_poisson_kmeans(5, x, x[:3], 16)
+        c = ka_ops.fused_poisson_kmeans(6, x, x[:3], 16)
+        np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+        assert not np.array_equal(np.asarray(a[0]), np.asarray(c[0]))
+
+
+# ----------------------------------------------------------------------------
+# statistical equivalence through bootstrap / chunked / delta
+# ----------------------------------------------------------------------------
+class TestBootstrapOverKMeans:
+    def test_fused_cv_matches_materialized(self, key):
+        x = jax.random.normal(key, (3000, 2)) * 0.3 \
+            + jnp.array([[4.0, -4.0]])
+        cent = x[:5]
+        r_mat = bootstrap(x, KMeansStep(cent), B=64, key=key)
+        r_fus = bootstrap(x, KMeansStep(cent), B=64, key=key,
+                          backend="fused_rng")
+        # same estimator on the unweighted sample, bit-for-bit comparable
+        np.testing.assert_allclose(np.asarray(r_mat.estimate),
+                                   np.asarray(r_fus.estimate), rtol=1e-5)
+        assert abs(r_fus.cv - r_mat.cv) / (r_mat.cv + 1e-12) < 0.5
+
+    def test_chunked_fused_matches_unchunked(self, key):
+        x = jax.random.normal(key, (2001, 2)) + 5
+        cent = x[:4]
+        r_plain = bootstrap(x, KMeansStep(cent), B=32, key=key,
+                            backend="fused_rng")
+        r_chunk = bootstrap_chunked(x, KMeansStep(cent), B=32, key=key,
+                                    chunk=512, backend="fused_rng")
+        assert r_chunk.n == 2001
+        np.testing.assert_allclose(np.asarray(r_plain.estimate),
+                                   np.asarray(r_chunk.estimate), rtol=1e-5)
+        assert abs(r_plain.cv - r_chunk.cv) / (r_plain.cv + 1e-12) < 0.5
+
+    def test_delta_extend_fused(self, key):
+        x = jax.random.normal(key, (900, 2)) + 2
+        cent = x[:3]
+        pd = poisson_delta_init(KMeansStep(cent), 24, 2, key,
+                                backend="fused_rng")
+        for piece in (x[:400], x[400:]):
+            pd = poisson_delta_extend(pd, piece)
+        res = poisson_delta_result(pd)
+        assert np.isfinite(res.cv)
+        assert res.thetas.shape[0] == 24
+
+
+# ----------------------------------------------------------------------------
+# jaxpr shape capture: no (n, k) / (B, n) HBM intermediate
+# ----------------------------------------------------------------------------
+class TestNoAssignmentMatrix:
+    B, N, K = 256, 1 << 20, 8
+
+    def test_fused_pipeline_never_builds_nk_or_Bn(self, key):
+        """n=2^20, B=256, k=8: every intermediate in the traced fused
+        bootstrap-over-k-means pipeline is far smaller than both the (n, k)
+        one-hot (8.4M elements) and the (B, n) weight matrix (268M)."""
+        from repro.core.bootstrap import _fused_thetas
+        x = jnp.zeros((self.N, 1), jnp.float32)
+        cent = jnp.zeros((self.K, 1), jnp.float32)
+        biggest = _max_intermediate_size(
+            lambda v, k: _fused_thetas(v, KMeansStep(cent), self.B, k),
+            x, key)
+        # the (N, 1) input itself is the largest legitimate buffer
+        assert biggest <= self.N, (
+            f"largest intermediate has {biggest} elements — (n, k) would "
+            f"be {self.N * self.K}, (B, n) would be {self.B * self.N}")
+
+    def test_harness_detects_materialized_onehot(self, key):
+        """Sanity: the same harness DOES flag the jnp KMeansStep.update."""
+        x = jnp.zeros((self.N, 1), jnp.float32)
+        cent = jnp.zeros((self.K, 1), jnp.float32)
+        step = KMeansStep(cent)
+        biggest = _max_intermediate_size(
+            lambda v: step.update(step.init_state(1), v).counts, x)
+        assert biggest >= self.N * self.K
+
+
+# ----------------------------------------------------------------------------
+# compilation-count regression: centroids are traced, not id()-keyed
+# ----------------------------------------------------------------------------
+class TestCompileOnce:
+    def test_bootstrap_compiles_once_across_lloyd_iterations(self, key):
+        """Fresh same-shaped KMeansStep per Lloyd iteration must hit ONE
+        _bootstrap_jit entry (historically _static_key keyed centroids by
+        id(), so every instance recompiled)."""
+        x = jax.random.normal(key, (400, 2))
+        cents = x[:4]
+        _bootstrap_jit._clear_cache()
+        for _ in range(3):
+            bootstrap(x, KMeansStep(cents), B=8, key=key,
+                      backend="fused_rng")
+            step = KMeansStep(cents)
+            cents = step.finalize(step.update(step.init_state(2), x))
+        assert _bootstrap_jit._cache_size() == 1
+
+    def test_delta_extend_compiles_once(self, key):
+        x = jax.random.normal(key, (256, 2))
+        _pd_extend_jit._clear_cache()
+        for i in range(3):
+            cent = x[i:i + 4]          # fresh array each time
+            pd = poisson_delta_init(KMeansStep(cent), 8, 2, key,
+                                    backend="fused_rng")
+            poisson_delta_extend(pd, x)
+        assert _pd_extend_jit._cache_size() == 1
+
+    def test_kmeans_fit_compiles_once(self, key):
+        x = jax.random.normal(key, (300, 2))
+        _kmeans_fit_jit._clear_cache()
+        kmeans_fit(x, 4, 3, key)
+        kmeans_fit(x + 1.0, 4, 3, jax.random.fold_in(key, 1))
+        assert _kmeans_fit_jit._cache_size() == 1
+
+    def test_same_shape_steps_equal_as_static_keys(self):
+        """split_params specs of same-shaped KMeansSteps compare equal; the
+        bound statistics themselves still don't (different centroids)."""
+        from repro.core.reduce_api import split_params
+        a = KMeansStep(jnp.zeros((3, 2)))
+        b = KMeansStep(jnp.ones((3, 2)))
+        assert a != b
+        sa, pa = split_params(a)
+        sb, pb = split_params(b)
+        assert sa == sb and hash(sa) == hash(sb)
+        assert set(pa) == {"centroids"} and pb["centroids"].shape == (3, 2)
+
+
+# ----------------------------------------------------------------------------
+# inertia clamp
+# ----------------------------------------------------------------------------
+class TestInertiaClamp:
+    def _near_centroid_data(self, rng):
+        """Points jittered ~1e-4 around magnitude-100 centroids: the
+        expanded ‖x‖² − 2x·c + ‖c‖² goes below 0 in f32 for ~30% of them
+        (verified against the unclamped formula below)."""
+        cent = rng.normal(0, 100, (5, 2)).astype(np.float32)
+        idx = rng.integers(0, 5, 400)
+        x = (cent[idx].astype(np.float64)
+             + rng.normal(0, 1e-4, (400, 2))).astype(np.float32)
+        return jnp.asarray(x), jnp.asarray(cent)
+
+    def test_expanded_form_does_go_negative(self, rng):
+        """The regression is real: without the clamp this data yields a
+        negative min-d² somewhere (else the clamp test is vacuous)."""
+        x, cent = self._near_centroid_data(rng)
+        raw = (jnp.sum(x * x, -1, keepdims=True) - 2.0 * x @ cent.T
+               + jnp.sum(cent * cent, -1))
+        assert float(jnp.min(raw)) < 0.0
+
+    def test_inertia_nonnegative_everywhere(self, rng):
+        x, cent = self._near_centroid_data(rng)
+        for stat in (KMeansStep(cent), KMeansStep(cent, backend="scan"),
+                     KMeansStep(cent, backend="pallas_interpret")):
+            st = stat.update(stat.init_state(2), x)
+            assert float(st.inertia) >= 0.0, stat.backend
+        _, _, inertia = kmeans_assign_ref(x, jnp.ones((x.shape[0],)), cent)
+        assert float(inertia) >= 0.0
+        _, _, fused_inertia = ka_ops.fused_poisson_kmeans(11, x, cent, 16)
+        assert float(jnp.min(fused_inertia)) >= 0.0

@@ -203,8 +203,9 @@ class TestFusedDelta:
     def test_extend_exact_vs_explicit_weights(self, key):
         """poisson_delta_extend under fused_rng == updating with the
         materialized implicit weights of each step (bit-level key
-        discipline: seed_i = seed_from_key(key) + i, distinct per step
-        by construction)."""
+        discipline: seed_i = offset_seed(seed_from_key(key), i), distinct
+        per step by construction and int32-overflow-safe)."""
+        from repro.core.bootstrap import offset_seed
         B = 32
         x = jax.random.normal(key, (900, 2))
         pieces = (x[:400], x[400:])
@@ -218,7 +219,7 @@ class TestFusedDelta:
         states = jax.vmap(lambda _: stat.init_state(2))(jnp.arange(B))
         for step, piece in enumerate(pieces):
             w = ws_ops.implicit_weights(
-                seed_from_key(key) + step, B, piece.shape[0])
+                offset_seed(seed_from_key(key), step), B, piece.shape[0])
             states = jax.vmap(lambda s, wr: stat.update(s, piece, wr),
                               in_axes=(0, 0))(states, w)
         ref = jax.vmap(stat.finalize)(states)

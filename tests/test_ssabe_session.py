@@ -50,6 +50,35 @@ class TestSSABE:
         assert out.iterations <= 2
         assert not out.fell_back
 
+    def test_no_prefix_reread_per_iteration(self, key):
+        """The point estimate is delta-maintained (PoissonDelta.est_state):
+        each main-loop round must read only Δs, never re-read the [0, n)
+        prefix — total rows touched == pilot + final n (the old
+        stat(take(0, n_have)) per round read O(n) extra each time)."""
+        class CountingPerm:
+            def __init__(self, data):
+                self.data = np.asarray(data)
+                self.N = len(data)
+                self.rows = 0
+            def take(self, a, b):
+                self.rows += b - a
+                return jnp.asarray(self.data[a:b])
+
+        data = np.random.default_rng(2).normal(50, 5, 400_000).astype(
+            np.float32)
+        s = CountingPerm(data)
+        sess = EarlSession(s, Mean(), sigma=0.005)
+        out = sess.run(key)
+        assert not out.fell_back
+        n_pilot = min(s.N, sess.max_pilot,
+                      max(sess.min_pilot, int(sess.p_pilot * s.N)))
+        assert s.rows == n_pilot + out.n_used, (
+            f"read {s.rows} rows for pilot={n_pilot}, n_used={out.n_used} "
+            f"— the session is re-reading the sample prefix")
+        # and the delta-maintained estimate equals the prefix recompute
+        ref = float(np.mean(data[:out.n_used]))
+        assert abs(float(np.ravel(out.result)[0]) - ref) < 1e-3
+
 
 class TestPipelines:
     def test_token_pipeline_restart(self):
