@@ -9,11 +9,18 @@ reported as derived metadata for the roofline discussion.
 ``run_bootstrap`` benchmarks the matrix-free resample loop (in-kernel
 counter-based RNG fused into the contraction, via the scan lowering on CPU)
 against the materialized-(B, n) weight-matrix path and the naive 3-pass
-formulation, and writes the trajectory to BENCH_bootstrap.json so perf is
+formulation — plus the bf16-input variant (ROADMAP study: x and w enter the
+dots in bf16 with f32 accumulators), quantifying its cv error against the
+f32 kernel — and writes the trajectory to BENCH_bootstrap.json so perf is
 tracked PR-over-PR.  ``run_kmeans`` does the same for bootstrap-over-
-k-means (fused assignment+accumulate, kernels/kmeans_assign) against the
-materialized path that builds the (B, n) weights AND the (B, n, k)
-weighted one-hot, writing BENCH_kmeans.json.
+k-means (BENCH_kmeans.json); ``run_quantile`` for the fused Quantile sketch
+(kernels/weighted_hist.fused_poisson_hist vs materializing the implicit
+weights and scatter-adding per resample), writing BENCH_quantile.json.
+
+``--smoke`` (or ``run(smoke=True)``) drives every kernel dispatch path at
+tiny shapes with NO timing and NO BENCH_*.json writes — a tier-1 pytest
+runs it (tests/test_kernelbench_smoke.py) so dispatch regressions fail in
+CI instead of only surfacing in benchmark runs.
 """
 import json
 import pathlib
@@ -22,15 +29,26 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, timeit
-from repro.core.reduce_api import KMeansStep
+from repro.core.reduce_api import KMeansStep, Quantile
 from repro.kernels.kmeans_assign import ops as ka_ops
 from repro.kernels.weighted_hist import ops as wh_ops
 from repro.kernels.weighted_stats import ops as ws_ops
 
-_BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent \
-    / "BENCH_bootstrap.json"
-_BENCH_KMEANS_JSON = pathlib.Path(__file__).resolve().parent.parent \
-    / "BENCH_kmeans.json"
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+_BENCH_JSON = _ROOT / "BENCH_bootstrap.json"
+_BENCH_KMEANS_JSON = _ROOT / "BENCH_kmeans.json"
+_BENCH_QUANTILE_JSON = _ROOT / "BENCH_quantile.json"
+
+
+def _timer(smoke: bool):
+    """smoke: execute once (so every dispatch path actually runs), report
+    0 — the smoke run is a correctness/dispatch gate, not a perf tool."""
+    if smoke:
+        def _once(fn):
+            jax.block_until_ready(fn())
+            return 0.0
+        return _once
+    return lambda fn: timeit(lambda: jax.block_until_ready(fn()))
 
 
 def _naive(w, x):
@@ -40,9 +58,10 @@ def _naive(w, x):
     return w_tot, s1, s2
 
 
-def run() -> None:
+def run(smoke: bool = False) -> None:
+    time = _timer(smoke)
     key = jax.random.PRNGKey(7)
-    B, n, d = 64, 65_536, 8
+    B, n, d = (8, 512, 3) if smoke else (64, 65_536, 8)
     w = jax.random.poisson(key, 1.0, (B, n)).astype(jnp.float32)
     x = jax.random.normal(jax.random.fold_in(key, 1), (n, d))
 
@@ -53,10 +72,8 @@ def run() -> None:
     n1 = jax.jit(lambda w: jnp.sum(w, axis=1))
     n2 = jax.jit(lambda w, x: w @ x)
     n3 = jax.jit(lambda w, x: w @ (x * x))
-    us_f = timeit(lambda: jax.block_until_ready(fused(w, x)))
-    us_n = timeit(lambda: (jax.block_until_ready(n1(w)),
-                           jax.block_until_ready(n2(w, x)),
-                           jax.block_until_ready(n3(w, x))))
+    us_f = time(lambda: fused(w, x))
+    us_n = time(lambda: (n1(w), n2(w, x), n3(w, x)))
     emit("kernel_weighted_moments_fused", us_f, "")
     emit("kernel_weighted_moments_3pass", us_n,
          f"fused_speedup={us_n / max(us_f, 1e-9):.2f}x;"
@@ -70,19 +87,30 @@ def run() -> None:
          f"tile_vmem_bytes={vmem};arith_intensity={intensity:.1f}"
          f";mxu_aligned={bb % 128 == 0 and bd % 128 == 0}")
 
-    run_bootstrap()
-    run_histogram()
-    run_kmeans()
+    run_bootstrap(smoke=smoke)
+    run_histogram(smoke=smoke)
+    run_quantile(smoke=smoke)
+    run_kmeans(smoke=smoke)
 
 
-def run_bootstrap() -> None:
-    """Matrix-free bootstrap: fused-RNG vs materialized-W vs naive 3-pass.
+def _cv(thetas):
+    m = jnp.mean(thetas, axis=0)
+    return float(jnp.mean(jnp.std(thetas, axis=0) / (jnp.abs(m) + 1e-12)))
+
+
+def run_bootstrap(smoke: bool = False) -> None:
+    """Matrix-free bootstrap: fused-RNG (f32 and bf16-input) vs
+    materialized-W vs naive 3-pass.
 
     The fused-RNG path never builds the (B, n) weight matrix (peak live
     memory O(B·block_n + B·d) on CPU, O(B·d) HBM on TPU); the other two pay
     for both the jax.random.poisson draw of (B, n) and its memory traffic.
+    The bf16 variant feeds x/w to the dots in bf16 with f32 accumulators
+    (halves X-side HBM/VMEM traffic on TPU) — the emitted cv_rel_err
+    quantifies what that costs in bootstrap-accuracy terms.
     """
-    B, n, d = 256, 1 << 16, 8
+    time = _timer(smoke)
+    B, n, d = (8, 512, 2) if smoke else (256, 1 << 16, 8)
     key = jax.random.PRNGKey(7)
     x = jax.random.normal(jax.random.fold_in(key, 1), (n, d))
 
@@ -99,22 +127,44 @@ def run_bootstrap() -> None:
 
     def naive():
         w = wgen(key)
-        jax.block_until_ready((p1(w), p2(w, x), p3(w, x)))
+        return p1(w), p2(w, x), p3(w, x)
 
-    us_fused = timeit(lambda: jax.block_until_ready(
-        ws_ops.fused_poisson_moments(7, x, B)))
-    us_mat = timeit(lambda: jax.block_until_ready(materialized(key, x)))
-    us_naive = timeit(naive)
+    us_fused = time(lambda: ws_ops.fused_poisson_moments(7, x, B))
+    us_bf16 = time(lambda: ws_ops.fused_poisson_moments(
+        7, x, B, dtype=jnp.bfloat16))
+    us_mat = time(lambda: materialized(key, x))
+    us_naive = time(naive)
+
+    # bf16 accuracy study: same implicit weights, different input precision
+    # — compare the bootstrap cv of the Mean (the quantity EARL's AES
+    # gates on) and the raw moment error.
+    wt32, s1_32, s2_32 = ws_ops.fused_poisson_moments(7, x, B)
+    wtbf, s1_bf, s2_bf = ws_ops.fused_poisson_moments(7, x, B,
+                                                      dtype=jnp.bfloat16)
+    cv32 = _cv(s1_32 / wt32[:, None])
+    cvbf = _cv(s1_bf / wtbf[:, None])
+    cv_rel_err = abs(cvbf - cv32) / max(cv32, 1e-12)
+    # scale-normalized moment error (element-wise relative error is
+    # meaningless for s1 of zero-mean data, where the true sums sit near 0)
+    s1_rel = float(jnp.max(jnp.abs(s1_bf - s1_32))
+                   / (jnp.max(jnp.abs(s1_32)) + 1e-9))
+    s2_rel = float(jnp.max(jnp.abs(s2_bf - s2_32))
+                   / (jnp.max(jnp.abs(s2_32)) + 1e-9))
 
     speedup_mat = us_mat / max(us_fused, 1e-9)
     speedup_naive = us_naive / max(us_fused, 1e-9)
     emit("bootstrap_fused_rng", us_fused,
          f"B={B};n={n};d={d};weight_matrix_bytes=0")
+    emit("bootstrap_fused_rng_bf16", us_bf16,
+         f"cv_rel_err={cv_rel_err:.2e};s1_rel_err={s1_rel:.2e};"
+         f"s2_rel_err={s2_rel:.2e}")
     emit("bootstrap_materialized_w", us_mat,
          f"fused_speedup={speedup_mat:.2f}x;weight_matrix_bytes={4 * B * n}")
     emit("bootstrap_naive_3pass", us_naive,
          f"fused_speedup={speedup_naive:.2f}x;w_bytes_read_ratio=3.0")
 
+    if smoke:
+        return
     _BENCH_JSON.write_text(json.dumps({
         "config": {"B": B, "n": n, "d": d,
                    "backend": jax.default_backend(),
@@ -122,17 +172,74 @@ def run_bootstrap() -> None:
                                       if jax.default_backend() == "tpu"
                                       else "scan")},
         "us_per_call": {"fused_rng": us_fused,
+                        "fused_rng_bf16": us_bf16,
                         "materialized_w": us_mat,
                         "naive_3pass": us_naive},
         "speedup_fused_vs_materialized": speedup_mat,
         "speedup_fused_vs_naive": speedup_naive,
+        "bf16_study": {"cv_f32": cv32, "cv_bf16": cvbf,
+                       "cv_rel_err": cv_rel_err,
+                       "s1_max_rel_err": s1_rel,
+                       "s2_max_rel_err": s2_rel,
+                       "x_bytes_ratio_vs_f32": 0.5},
         "peak_weight_bytes": {"fused_rng": 0,
                               "materialized_w": 4 * B * n,
                               "naive_3pass": 4 * B * n},
     }, indent=2) + "\n")
 
 
-def run_kmeans() -> None:
+def run_quantile(smoke: bool = False) -> None:
+    """Matrix-free bootstrap-over-Quantile: fused histogram sketch vs
+    materializing the SAME implicit weights and scatter-adding per resample.
+
+    The fused path (kernels/weighted_hist.fused_poisson_hist, scan lowering
+    on CPU) generates the Poisson(1) weights in-pass and bins tile-locally
+    — neither the (B, n) weight matrix nor any (n, d, nbins) one-hot
+    exists; peak live state is the (B, d, nbins) sketch accumulator.
+    """
+    time = _timer(smoke)
+    B, n, nbins = (8, 512, 64) if smoke else (256, 1 << 16, 2048)
+    key = jax.random.PRNGKey(5)
+    x = jax.random.normal(key, (n,)) * 2.0 + 8.0
+    q = Quantile(0.5, nbins=nbins, lo=0.0, hi=16.0)
+
+    @jax.jit
+    def fused(x):
+        return wh_ops.fused_poisson_hist(7, x[:, None], q.lo, q.hi,
+                                         nbins, B)
+
+    @jax.jit
+    def materialized(x):
+        w = ws_ops.implicit_weights(7, B, n)
+        st0 = q.init_state(1)
+        return jax.vmap(lambda wr: q.update(st0, x, wr).counts)(w)
+
+    us_fused = time(lambda: fused(x))
+    us_mat = time(lambda: materialized(x))
+    speedup = us_mat / max(us_fused, 1e-9)
+    emit("quantile_bootstrap_fused", us_fused,
+         f"B={B};n={n};nbins={nbins};weight_matrix_bytes=0")
+    emit("quantile_bootstrap_materialized", us_mat,
+         f"fused_speedup={speedup:.2f}x;weight_matrix_bytes={4 * B * n}")
+
+    if smoke:
+        return
+    _BENCH_QUANTILE_JSON.write_text(json.dumps({
+        "config": {"B": B, "n": n, "d": 1, "nbins": nbins,
+                   "backend": jax.default_backend(),
+                   "fused_lowering": ("pallas"
+                                      if jax.default_backend() == "tpu"
+                                      else "scan")},
+        "us_per_call": {"fused": us_fused, "materialized": us_mat},
+        "speedup_fused_vs_materialized": speedup,
+        "peak_intermediate_bytes": {
+            "fused": 4 * (B * 512 + B * nbins),   # weight tile + sketch
+            "materialized": 4 * B * n,            # implicit weights
+        },
+    }, indent=2) + "\n")
+
+
+def run_kmeans(smoke: bool = False) -> None:
     """Bootstrap-over-k-means: fused assignment+accumulate vs materialized.
 
     The materialized path draws the (B, n) Poisson weight matrix AND builds
@@ -142,7 +249,8 @@ def run_kmeans() -> None:
     O(B·k·d).  A single-state assignment pass is timed too (tiled vs the
     materialized (n, k) distance/one-hot).
     """
-    B, n, k, d = 64, 1 << 16, 8, 2
+    time = _timer(smoke)
+    B, n, k, d = (8, 512, 3, 2) if smoke else (64, 1 << 16, 8, 2)
     key = jax.random.PRNGKey(11)
     x = jax.random.normal(key, (n, d))
     cent = jax.random.normal(jax.random.fold_in(key, 1), (k, d)) * 2
@@ -154,10 +262,8 @@ def run_kmeans() -> None:
         st = jax.vmap(lambda wr: stat.update(stat.init_state(d), x, wr))(w)
         return st.sums, st.counts, st.inertia
 
-    us_mat = timeit(lambda: jax.block_until_ready(
-        materialized(key, x, cent)))
-    us_fused = timeit(lambda: jax.block_until_ready(
-        ka_ops.fused_poisson_kmeans(7, x, cent, B)))
+    us_mat = time(lambda: materialized(key, x, cent))
+    us_fused = time(lambda: ka_ops.fused_poisson_kmeans(7, x, cent, B))
     speedup = us_mat / max(us_fused, 1e-9)
     emit("kmeans_bootstrap_fused", us_fused,
          f"B={B};n={n};k={k};d={d};weight_matrix_bytes=0;onehot_bytes=0")
@@ -168,14 +274,16 @@ def run_kmeans() -> None:
     # single-state assignment pass: tiled scan vs materialized (n, k)
     assign_jnp = jax.jit(
         lambda x, cent: ka_ops.kmeans_assign(x, None, cent, backend="jnp"))
-    us_a_jnp = timeit(lambda: jax.block_until_ready(assign_jnp(x, cent)))
-    us_a_scan = timeit(lambda: jax.block_until_ready(
-        ka_ops.kmeans_assign(x, None, cent, backend="scan")))
+    us_a_jnp = time(lambda: assign_jnp(x, cent))
+    us_a_scan = time(lambda: ka_ops.kmeans_assign(x, None, cent,
+                                                  backend="scan"))
     emit("kmeans_assign_scan", us_a_scan, f"n={n};k={k};d={d}")
     emit("kmeans_assign_materialized", us_a_jnp,
          f"scan_speedup={us_a_jnp / max(us_a_scan, 1e-9):.2f}x;"
          f"nk_bytes={4 * n * k}")
 
+    if smoke:
+        return
     _BENCH_KMEANS_JSON.write_text(json.dumps({
         "config": {"B": B, "n": n, "k": k, "d": d,
                    "backend": jax.default_backend(),
@@ -194,10 +302,11 @@ def run_kmeans() -> None:
     }, indent=2) + "\n")
 
 
-def run_histogram() -> None:
+def run_histogram(smoke: bool = False) -> None:
     """Quantile sketch update: flattened scatter-add vs one_hot+einsum
     (the old (n, d, nbins) memory blowup)."""
-    n, d, nbins = 1 << 16, 4, 2048
+    time = _timer(smoke)
+    n, d, nbins = (512, 2, 64) if smoke else (1 << 16, 4, 2048)
     key = jax.random.PRNGKey(3)
     x = jax.random.uniform(key, (n, d))
     w = jnp.ones((n,))
@@ -212,10 +321,25 @@ def run_histogram() -> None:
         oh = jax.nn.one_hot(idx, nbins, dtype=jnp.float32)
         return jnp.einsum("n,ndb->db", w, oh)
 
-    us_s = timeit(lambda: jax.block_until_ready(scatter(x, w)))
-    us_o = timeit(lambda: jax.block_until_ready(onehot(x, w)))
+    us_s = time(lambda: scatter(x, w))
+    us_o = time(lambda: onehot(x, w))
     emit("hist_scatter_add", us_s,
          f"n={n};d={d};nbins={nbins};peak_bytes={4 * n * d}")
     emit("hist_onehot_einsum", us_o,
          f"scatter_speedup={us_o / max(us_s, 1e-9):.2f}x"
          f";peak_bytes={4 * n * d * nbins}")
+    if smoke:
+        # smoke also exercises the Pallas interpret dispatch of the sketch
+        jax.block_until_ready(wh_ops.weighted_histogram(
+            x, w, lo, hi, nbins, backend="pallas_interpret"))
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, no timing, no BENCH_*.json writes — "
+                         "kernel dispatch gate for CI")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke)

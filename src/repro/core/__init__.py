@@ -13,7 +13,7 @@ from repro.core.accuracy import (AccuracyReport, coefficient_of_variation,
 from repro.core.bootstrap import (BootstrapResult, bootstrap,
                                   bootstrap_chunked, bootstrap_thetas,
                                   multinomial_counts, poisson_weights,
-                                  weights_for)
+                                  sharded_fused_states, weights_for)
 from repro.core.delta import (MultinomialDeltaBootstrap, PoissonDelta,
                               Sketch, optimal_y, p_shared,
                               poisson_delta_extend, poisson_delta_init,
@@ -32,7 +32,8 @@ __all__ = [
     "relative_halfwidth", "standard_error", "theoretical_num_bootstraps",
     "theoretical_sample_size",
     "BootstrapResult", "bootstrap", "bootstrap_chunked", "bootstrap_thetas",
-    "multinomial_counts", "poisson_weights", "weights_for",
+    "multinomial_counts", "poisson_weights", "sharded_fused_states",
+    "weights_for",
     "MultinomialDeltaBootstrap", "PoissonDelta", "Sketch", "optimal_y",
     "p_shared", "poisson_delta_extend", "poisson_delta_init",
     "poisson_delta_result", "shared_base_bootstrap", "work_saved",

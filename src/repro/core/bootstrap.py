@@ -25,11 +25,26 @@ Backends (``backend=`` on ``bootstrap``/``bootstrap_chunked``):
   Var/Std) route through kernels/weighted_stats.fused_poisson_moments
   (peak O(B·d)), ``KMeansStep`` through
   kernels/kmeans_assign.fused_poisson_kmeans (peak O(B·k·d), and no (n, k)
-  distance/one-hot intermediate either); statistics without a fused path
-  (e.g. Quantile) fall back to materializing the same implicit weights per
-  chunk.  The PRNG seed derives deterministically from ``key``, so the
-  fold-in discipline (delta maintenance, common random numbers) carries
-  over unchanged.
+  distance/one-hot intermediate either), ``Quantile``/``Median`` through
+  kernels/weighted_hist.fused_poisson_hist (peak O(B·d·nbins), no
+  (n, d, nbins) one-hot either) — every built-in statistic is fused;
+  custom statistics without a fused path fall back to materializing the
+  same implicit weights per chunk.  The PRNG seed derives deterministically
+  from ``key``, so the fold-in discipline (delta maintenance, common random
+  numbers) carries over unchanged.
+
+Multi-device (``mesh=`` + ``data_axis=`` on the fused backend): the n axis
+is sharded over the mesh's data axis with shard_map; each shard runs the
+in-kernel weight generation on its local rows with a stream keyed by
+``(base_seed, shard_index, chunk)`` via ``offset_seed``, and only the small
+per-resample states (``Statistic.psum_state``: (B, d) moments /
+(B, k, d) k-means / (B, d, nbins) histograms) cross devices — no weight or
+sample traffic ever does.  The paper's Hadoop mapping survives intact:
+mapper = shard-local fused update, combiner = ``merge``, reducer = psum of
+mergeable states.  ``sharded_fused_states(..., mesh=None, nshards=s)`` runs
+the identical decomposition sequentially on one device and is bitwise equal
+to the mesh run (XLA's all-reduce and the sequential left-fold merge
+reduce in the same shard order) — the single-device path stays the oracle.
 """
 from __future__ import annotations
 
@@ -112,6 +127,109 @@ def fused_resample_states(stat: Statistic, seed, x2: jax.Array, B: int,
     return jax.vmap(lambda wr: stat.update(stat.init_state(dim), x2, wr))(w)
 
 
+# ----------------------------------------------------------------------------
+# sharded matrix-free path (psum the states, never the weights)
+# ----------------------------------------------------------------------------
+def _shard_local_states(stat: Statistic, base_seed, x_local: jax.Array,
+                        B: int, shard_idx, nshards: int, n_valid_local,
+                        chunk: Optional[int] = None, step=0):
+    """Fused states for ONE shard's local rows.
+
+    The shard's stream seed for local chunk c is
+    ``offset_seed(base_seed, (step + c) * nshards + shard_idx)`` — chunk-
+    major interleaving: distinct per (shard, chunk) within a call and per
+    (shard, step) across delta extends, and an nshards=1 "mesh" reproduces
+    the single-device seeds exactly (stream index collapses to the
+    chunk/step counter).  ``chunk`` and a nonzero ``step`` are mutually
+    exclusive (enforced by ``sharded_fused_states``): combining them would
+    alias step s's chunk c+1 stream with step s+1's chunk c stream.
+    ``chunk=None`` processes the local rows in one fused call.
+    """
+    if chunk is None:
+        seed = offset_seed(base_seed, step * nshards + shard_idx)
+        return fused_resample_states(stat, seed, x_local, B,
+                                     n_valid=n_valid_local)
+    n_local, dim = x_local.shape
+    pad = (-n_local) % chunk
+    xp = jnp.pad(x_local, ((0, pad), (0, 0)))
+    nchunks = xp.shape[0] // chunk
+    xc = xp.reshape(nchunks, chunk, dim)
+    init = jax.vmap(lambda _: stat.init_state(dim))(jnp.arange(B))
+
+    def body(states, c):
+        nv = jnp.clip(n_valid_local - c * chunk, 0, chunk)
+        seed = offset_seed(base_seed, (step + c) * nshards + shard_idx)
+        delta = fused_resample_states(stat, seed, xc[c], B, n_valid=nv)
+        return jax.vmap(stat.merge)(states, delta), None
+
+    states, _ = jax.lax.scan(body, init,
+                             jnp.arange(nchunks, dtype=jnp.int32))
+    return states
+
+
+def sharded_fused_states(stat: Statistic, base_seed, x2: jax.Array, B: int,
+                         mesh=None, data_axis: str = "data",
+                         nshards: Optional[int] = None,
+                         chunk: Optional[int] = None, step=0):
+    """B-leading pytree of fused per-resample states for ``x2``, sharded
+    over ``mesh``'s ``data_axis`` (the multi-device matrix-free hot path).
+
+    Rows are split into ``nshards`` contiguous blocks (zero-padded tail,
+    masked via per-shard n_valid); each shard generates its implicit
+    Poisson(1) weights in-kernel from its own stream (see
+    ``_shard_local_states`` for the (base_seed, shard, chunk) keying) and
+    only the psum of the small per-resample states
+    (``Statistic.psum_state``) crosses devices.
+
+    ``mesh=None`` (with ``nshards`` given) evaluates the identical
+    decomposition sequentially on one device — the oracle the mesh run is
+    bit-equal to.  ``chunk`` streams each shard's local rows through
+    fixed-size fused calls (the sharded analogue of ``bootstrap_chunked``);
+    ``step`` offsets the stream counter so delta-maintenance extends draw
+    fresh streams per extension.  They are mutually exclusive: the stream
+    index (step + c)·nshards + shard would alias across (step, chunk)
+    pairs, silently correlating resamples between extensions.
+    """
+    if mesh is not None:
+        nshards = int(mesh.shape[data_axis])
+    if nshards is None:
+        raise ValueError("sharded_fused_states needs mesh= or nshards=")
+    if chunk is not None and not (isinstance(step, int) and step == 0):
+        raise ValueError("chunk= and step= are mutually exclusive (their "
+                         "stream indices would alias; see docstring)")
+    n, dim = x2.shape
+    m = -(-n // nshards)                 # ceil: local rows per shard
+    xp = jnp.pad(x2, ((0, nshards * m - n), (0, 0)))
+
+    if mesh is None:
+        states = None
+        for i in range(nshards):
+            nv = min(max(n - i * m, 0), m)
+            si = _shard_local_states(stat, base_seed, xp[i * m:(i + 1) * m],
+                                     B, i, nshards, nv, chunk=chunk,
+                                     step=step)
+            states = si if states is None else \
+                jax.vmap(stat.merge)(states, si)
+        return states
+
+    from jax.sharding import PartitionSpec as P
+    from repro.compat import shard_map_compat
+    shard_map, sm_kw = shard_map_compat()
+
+    def shard_fn(x_local, seed, step_):
+        i = jax.lax.axis_index(data_axis)
+        nv = jnp.clip(n - i * m, 0, m)
+        st = _shard_local_states(stat, seed, x_local, B, i, nshards, nv,
+                                 chunk=chunk, step=step_)
+        return stat.psum_state(st, data_axis)
+
+    fn = shard_map(shard_fn, mesh=mesh,
+                   in_specs=(P(data_axis, None), P(), P()),
+                   out_specs=P(), **sm_kw)
+    return fn(xp, jnp.asarray(base_seed, jnp.int32),
+              jnp.asarray(step, jnp.int32))
+
+
 def multinomial_counts(key: jax.Array, B: int, n: int,
                        resample_size: Optional[int] = None) -> jax.Array:
     """Exact multinomial bootstrap counts, shape (B, n) int32.
@@ -177,16 +295,23 @@ def _fused_thetas(values: jax.Array, stat: Statistic, B: int,
 
 
 @partial(jax.jit,
-         static_argnames=("stat", "B", "engine", "use_kernel", "backend"))
+         static_argnames=("stat", "B", "engine", "use_kernel", "backend",
+                          "mesh", "data_axis"))
 def _bootstrap_jit(values, key, params, stat, B, engine, use_kernel,
-                   backend):
+                   backend, mesh=None, data_axis="data"):
     # ``stat`` is the hashable spec; its array parameters (e.g. KMeansStep
     # centroids) arrive traced in ``params`` so Lloyd-style loops that pass
     # a fresh same-shaped Statistic per call hit this cache entry.
     stat = bind_params(stat, params)
     n = values.shape[0]
     if backend == "fused_rng":
-        thetas = _fused_thetas(values, stat, B, key)
+        if mesh is not None:
+            states = sharded_fused_states(stat, seed_from_key(key),
+                                          _as_2d(values), B, mesh=mesh,
+                                          data_axis=data_axis)
+            thetas = jax.vmap(stat.finalize)(states)
+        else:
+            thetas = _fused_thetas(values, stat, B, key)
     else:
         w = weights_for(engine, key, B, n)
         thetas = bootstrap_thetas(values, stat, w, use_kernel=use_kernel)
@@ -194,26 +319,39 @@ def _bootstrap_jit(values, key, params, stat, B, engine, use_kernel,
     return thetas, estimate
 
 
-def bootstrap(values: jax.Array, stat: Statistic, B: int, key: jax.Array,
-              engine: str = "poisson", p: float = 1.0,
-              use_kernel: bool = False, alpha: float = 0.05,
-              backend: Optional[str] = None) -> BootstrapResult:
-    """One full bootstrap pass: B resamples, result distribution, accuracy.
-
-    ``p`` is the fraction of the population the sample represents — passed to
-    ``stat.correct`` (paper §2.1) on both the estimate and the thetas.
-    ``backend="fused_rng"`` runs the matrix-free pipeline (module docstring).
-    """
-    if not isinstance(stat, Statistic):
-        raise TypeError("stat must be a reduce_api.Statistic")
+def _check_fused_backend(backend, engine, mesh):
     if backend not in (None, "fused_rng"):
         raise ValueError(f"unknown bootstrap backend: {backend!r}")
     if backend == "fused_rng" and engine != "poisson":
         raise ValueError("backend='fused_rng' requires the poisson engine "
                          "(in-kernel RNG draws iid Poisson(1) weights)")
+    if mesh is not None and backend != "fused_rng":
+        raise ValueError("mesh= requires backend='fused_rng' (the sharded "
+                         "path psums fused states; materialized weights "
+                         "would ship a (B, n) matrix across devices)")
+
+
+def bootstrap(values: jax.Array, stat: Statistic, B: int, key: jax.Array,
+              engine: str = "poisson", p: float = 1.0,
+              use_kernel: bool = False, alpha: float = 0.05,
+              backend: Optional[str] = None, mesh=None,
+              data_axis: str = "data") -> BootstrapResult:
+    """One full bootstrap pass: B resamples, result distribution, accuracy.
+
+    ``p`` is the fraction of the population the sample represents — passed to
+    ``stat.correct`` (paper §2.1) on both the estimate and the thetas.
+    ``backend="fused_rng"`` runs the matrix-free pipeline (module
+    docstring); adding ``mesh=`` (a jax.sharding.Mesh) shards the n axis
+    over ``data_axis`` and psums the per-shard fused states — no weight or
+    sample traffic crosses devices.
+    """
+    if not isinstance(stat, Statistic):
+        raise TypeError("stat must be a reduce_api.Statistic")
+    _check_fused_backend(backend, engine, mesh)
     spec, params = split_params(stat)
     thetas, estimate = _bootstrap_jit(values, key, params, spec, int(B),
-                                      engine, bool(use_kernel), backend)
+                                      engine, bool(use_kernel), backend,
+                                      mesh, data_axis)
     thetas = stat.correct(thetas, p)
     estimate = stat.correct(estimate, p)
     return BootstrapResult(
@@ -231,47 +369,58 @@ def bootstrap(values: jax.Array, stat: Statistic, B: int, key: jax.Array,
 def bootstrap_chunked(values: jax.Array, stat: Statistic, B: int,
                       key: jax.Array, chunk: int = 65536,
                       engine: str = "poisson", p: float = 1.0,
-                      backend: Optional[str] = None) -> BootstrapResult:
+                      backend: Optional[str] = None, mesh=None,
+                      data_axis: str = "data") -> BootstrapResult:
     """Scan over chunks of the sample, merging per-resample states.
 
     Only valid for mergeable statistics (all built-ins).  Poisson weights are
     drawn per chunk with a folded key, so the full (B, n) matrix never
-    materializes — peak memory is (B, chunk), or O(B·d) / O(B·k·d) with
-    ``backend="fused_rng"`` for statistics with a fused path (moment
-    statistics, KMeansStep — see ``Statistic.fused_poisson_states``; the
-    per-chunk weight matrix never materializes either).  Chunk seeds derive
-    as ``offset_seed(base, i)`` so long streams can't wrap int32.
+    materializes — peak memory is (B, chunk), or O(B·d) / O(B·k·d) /
+    O(B·d·nbins) with ``backend="fused_rng"`` (every built-in statistic has
+    a fused path — see ``Statistic.fused_poisson_states``; the per-chunk
+    weight matrix never materializes either).  Chunk seeds derive as
+    ``offset_seed(base, i)`` so long streams can't wrap int32.
+
+    With ``mesh=`` (fused backend only) each shard scans its LOCAL rows in
+    ``chunk``-sized fused calls — streams keyed (base_seed, shard, chunk) —
+    and the per-resample states psum once at the end; no weight or sample
+    traffic crosses devices.
     """
     if engine != "poisson":
         raise ValueError("chunked bootstrap requires the poisson engine "
                          "(multinomial couples all chunks; see DESIGN.md §7)")
-    if backend not in (None, "fused_rng"):
-        raise ValueError(f"unknown bootstrap backend: {backend!r}")
+    _check_fused_backend(backend, engine, mesh)
     x = _as_2d(values)
     n, dim = x.shape
-    pad = (-n) % chunk
-    xp = jnp.pad(x, ((0, pad), (0, 0)))
-    nchunks = xp.shape[0] // chunk
-    xc = xp.reshape(nchunks, chunk, dim)
 
-    init = jax.vmap(lambda _: stat.init_state(dim))(jnp.arange(B))
-    base_seed = seed_from_key(key)      # one base; chunks offset by counter
+    if mesh is not None:
+        states = sharded_fused_states(stat, seed_from_key(key), x, B,
+                                      mesh=mesh, data_axis=data_axis,
+                                      chunk=chunk)
+    else:
+        pad = (-n) % chunk
+        xp = jnp.pad(x, ((0, pad), (0, 0)))
+        nchunks = xp.shape[0] // chunk
+        xc = xp.reshape(nchunks, chunk, dim)
 
-    def body(states, inp):
-        i, xi = inp
-        n_valid = jnp.minimum(chunk, n - i * chunk)   # suffix of last chunk
-        if backend == "fused_rng":
-            delta = fused_resample_states(stat, offset_seed(base_seed, i),
-                                          xi, B, n_valid=n_valid)
-            return jax.vmap(stat.merge)(states, delta), None
-        vi = (jnp.arange(chunk) < n_valid).astype(jnp.float32)
-        w = poisson_weights(jax.random.fold_in(key, i), B, chunk) \
-            * vi[None, :]
-        new = jax.vmap(lambda s, wr: stat.update(s, xi, wr))(states, w)
-        return new, None
+        init = jax.vmap(lambda _: stat.init_state(dim))(jnp.arange(B))
+        base_seed = seed_from_key(key)  # one base; chunks offset by counter
 
-    states, _ = jax.lax.scan(body, init,
-                             (jnp.arange(nchunks), xc))
+        def body(states, inp):
+            i, xi = inp
+            n_valid = jnp.minimum(chunk, n - i * chunk)  # last-chunk suffix
+            if backend == "fused_rng":
+                delta = fused_resample_states(
+                    stat, offset_seed(base_seed, i), xi, B, n_valid=n_valid)
+                return jax.vmap(stat.merge)(states, delta), None
+            vi = (jnp.arange(chunk) < n_valid).astype(jnp.float32)
+            w = poisson_weights(jax.random.fold_in(key, i), B, chunk) \
+                * vi[None, :]
+            new = jax.vmap(lambda s, wr: stat.update(s, xi, wr))(states, w)
+            return new, None
+
+        states, _ = jax.lax.scan(body, init,
+                                 (jnp.arange(nchunks), xc))
     thetas = jax.vmap(stat.finalize)(states)
     thetas = stat.correct(thetas, p)
     estimate = stat.correct(stat(values), p)

@@ -34,7 +34,7 @@ import numpy as np
 from repro.core import accuracy
 from repro.core.bootstrap import (BootstrapResult, fused_resample_states,
                                   offset_seed, poisson_weights,
-                                  seed_from_key)
+                                  seed_from_key, sharded_fused_states)
 from repro.core.reduce_api import Statistic, _as_2d, bind_params, \
     split_params
 
@@ -53,30 +53,44 @@ class PoissonDelta:
     step: int            # key-folding counter (one per extend)
     backend: Optional[str] = None   # None = jnp weights, "fused_rng" =
     #                                 matrix-free in-kernel RNG (O(B·d) peak)
+    mesh: Any = None                # fused backend only: shard each Δs over
+    data_axis: str = "data"         # this mesh axis and psum the states
 
 
 def poisson_delta_init(stat: Statistic, B: int, dim: int, key: jax.Array,
-                       backend: Optional[str] = None) -> PoissonDelta:
+                       backend: Optional[str] = None, mesh=None,
+                       data_axis: str = "data") -> PoissonDelta:
     if backend not in (None, "fused_rng"):
         raise ValueError(f"unknown delta backend: {backend!r}")
+    if mesh is not None and backend != "fused_rng":
+        raise ValueError("mesh= requires backend='fused_rng' (sharded delta "
+                         "maintenance psums fused states)")
     states = jax.vmap(lambda _: stat.init_state(dim))(jnp.arange(B))
     return PoissonDelta(stat=stat, key=key, states=states,
                         est_state=stat.init_state(dim), B=B, n=0, step=0,
-                        backend=backend)
+                        backend=backend, mesh=mesh, data_axis=data_axis)
 
 
-@partial(jax.jit, static_argnames=("stat", "B", "backend"))
+@partial(jax.jit, static_argnames=("stat", "B", "backend", "mesh",
+                                   "data_axis"))
 def _pd_extend_jit(states, est_state, key, step, x, params, stat, B,
-                   backend):
+                   backend, mesh=None, data_axis="data"):
     stat = bind_params(stat, params)   # traced array params (e.g. centroids)
     if backend == "fused_rng":
         # matrix-free: the Δs weight matrix never materializes; delta
         # states from in-kernel-RNG weights merge into the running states.
         # Streams are offset_seed(seed_from_key(key), step) — distinct per
         # extend by construction (see seed_from_key), safe at the int32
-        # boundary.
-        delta_states = fused_resample_states(
-            stat, offset_seed(seed_from_key(key), step), x, B)
+        # boundary.  With a mesh, each shard of Δs draws its own stream
+        # (keyed (base, shard, step)) and the delta states psum before the
+        # merge — extension traffic is O(B·d states), never O(B·Δn).
+        if mesh is not None:
+            delta_states = sharded_fused_states(
+                stat, seed_from_key(key), x, B, mesh=mesh,
+                data_axis=data_axis, step=step)
+        else:
+            delta_states = fused_resample_states(
+                stat, offset_seed(seed_from_key(key), step), x, B)
         new_states = jax.vmap(stat.merge)(states, delta_states)
     else:
         w = poisson_weights(jax.random.fold_in(key, step), B, x.shape[0])
@@ -94,7 +108,7 @@ def poisson_delta_extend(pd: PoissonDelta, new_values: jax.Array
     spec, params = split_params(pd.stat)
     states, est_state = _pd_extend_jit(pd.states, pd.est_state, pd.key,
                                        pd.step, x, params, spec, pd.B,
-                                       pd.backend)
+                                       pd.backend, pd.mesh, pd.data_axis)
     return dataclasses.replace(pd, states=states, est_state=est_state,
                                n=pd.n + dn, step=pd.step + 1)
 

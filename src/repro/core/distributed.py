@@ -24,7 +24,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import accuracy
-from repro.core.bootstrap import BootstrapResult
+from repro.core.bootstrap import (BootstrapResult, fused_resample_states,
+                                  offset_seed, seed_from_key)
 from repro.core.reduce_api import Statistic, _as_2d
 
 
@@ -36,14 +37,28 @@ def _poisson_for_shard(key: jax.Array, shard_id: jax.Array, B: int,
 
 def build_bootstrap_step(mesh: Mesh, stat: Statistic, B: int,
                          data_axes: Sequence[str] = ("data",),
-                         donate: bool = True):
+                         donate: bool = True,
+                         backend: Optional[str] = None):
     """Returns jitted fn (values_sharded, mask_sharded, key) -> (thetas, est).
 
     values: (n_global, d) sharded over ``data_axes`` on dim 0.
     mask:   (n_global,) 1.0 for real rows, 0.0 for padding — enables
             ragged global samples (n not divisible by the data axis) and
             ft/ shard-loss reweighting (zero a lost shard's mask).
+
+    ``backend="fused_rng"`` generates each shard's Poisson(1) weights
+    inside the fused kernels (stream keyed by (seed_from_key(key), shard)
+    via ``offset_seed``) instead of materializing the (B, n_local) matrix;
+    the shard's mask must then be a prefix mask (all-ones then all-zeros —
+    what ``pad_to_shards`` produces, and what ft/ whole-shard loss zeroes),
+    since the fused paths express masking as an n_valid column count.
+
+    Cross-shard reduction goes through ``Statistic.psum_state`` (NOT a raw
+    tree-psum: Quantile's HistogramState carries non-additive lo/hi leaves
+    that a blind psum would scale by the shard count).
     """
+    if backend not in (None, "fused_rng"):
+        raise ValueError(f"unknown distributed backend: {backend!r}")
     data_axes = tuple(data_axes)
     axis_sizes = [mesh.shape[a] for a in data_axes]
     nshards = 1
@@ -56,19 +71,23 @@ def build_bootstrap_step(mesh: Mesh, stat: Statistic, B: int,
         for a in data_axes:
             idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
         n_local, dim = values.shape
-        w = _poisson_for_shard(key, idx, B, n_local) * mask[None, :]
+        if backend == "fused_rng":
+            n_valid = jnp.sum(mask).astype(jnp.int32)   # prefix mask
+            states = fused_resample_states(
+                stat, offset_seed(seed_from_key(key), idx), values, B,
+                n_valid=n_valid)
+        else:
+            w = _poisson_for_shard(key, idx, B, n_local) * mask[None, :]
 
-        def upd(w_row):
-            return stat.update(stat.init_state(dim), values, w_row)
+            def upd(w_row):
+                return stat.update(stat.init_state(dim), values, w_row)
 
-        states = jax.vmap(upd)(w)                       # B-leading pytree
-        states = jax.tree_util.tree_map(
-            lambda x: jax.lax.psum(x, data_axes), states)
+            states = jax.vmap(upd)(w)                   # B-leading pytree
+        states = stat.psum_state(states, data_axes)
         thetas = jax.vmap(stat.finalize)(states)
 
         est_state = stat.update(stat.init_state(dim), values, mask)
-        est_state = jax.tree_util.tree_map(
-            lambda x: jax.lax.psum(x, data_axes), est_state)
+        est_state = stat.psum_state(est_state, data_axes)
         estimate = stat.finalize(est_state)
         return thetas, estimate
 
@@ -118,10 +137,32 @@ class DistributedEarl:
     B: int
     sigma: float = 0.05
     data_axes: Sequence[str] = ("data",)
+    backend: Optional[str] = None   # "fused_rng" = in-kernel shard weights
 
     def __post_init__(self):
         self._step = build_bootstrap_step(self.mesh, self.stat, self.B,
-                                          self.data_axes, donate=False)
+                                          self.data_axes, donate=False,
+                                          backend=self.backend)
+
+    def _check_prefix_mask(self, mask) -> None:
+        """Loud failure for the fused backend's documented precondition:
+        each shard's mask slice must be a PREFIX mask (ones then zeros) —
+        the fused kernels express masking as an n_valid column count, so an
+        interior zero would silently weight the wrong rows (the default
+        backend handles arbitrary masks; use it for those)."""
+        import numpy as np
+        m = np.asarray(mask)
+        nshards = 1
+        for a in self.data_axes:
+            nshards *= self.mesh.shape[a]
+        for i, part in enumerate(np.array_split(m, nshards)):
+            k = int(part.sum())
+            if not np.array_equal(part, (np.arange(part.shape[0]) < k)
+                                  .astype(part.dtype)):
+                raise ValueError(
+                    f"backend='fused_rng' needs a prefix mask per shard "
+                    f"(ones then zeros); shard {i} has interior zeros — "
+                    f"use backend=None for arbitrary masks")
 
     def estimate(self, values: jax.Array, key: jax.Array,
                  p: float = 1.0) -> BootstrapResult:
@@ -138,6 +179,8 @@ class DistributedEarl:
                                 key: jax.Array, p: float = 1.0
                                 ) -> BootstrapResult:
         """ft/ path: ``mask`` already encodes lost shards (zeros)."""
+        if self.backend == "fused_rng":
+            self._check_prefix_mask(mask)
         xs = jax.device_put(_as_2d(values),
                             NamedSharding(self.mesh,
                                           P(tuple(self.data_axes), None)))

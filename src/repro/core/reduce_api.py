@@ -133,6 +133,17 @@ class Statistic:
         == update(update(s0,x),y) for the delta-maintenance paths (§4)."""
         return jax.tree_util.tree_map(jnp.add, a, b)
 
+    def psum_state(self, state: State, axis_names) -> State:
+        """Cross-device ``merge``: reduce a per-shard state over mesh axes.
+
+        The default (every leaf is additive) matches ``merge``; statistics
+        whose state carries non-additive configuration leaves (Quantile's
+        lo/hi bin range) MUST override this, otherwise a psum would scale
+        them by the shard count.  Used by the sharded fused bootstrap and
+        core/distributed.py."""
+        return jax.tree_util.tree_map(
+            lambda x: jax.lax.psum(x, axis_names), state)
+
     def finalize(self, state: State) -> Result:
         raise NotImplementedError
 
@@ -302,6 +313,34 @@ class Quantile(Statistic):
 
     def merge(self, a: HistogramState, b: HistogramState) -> HistogramState:
         return HistogramState(counts=a.counts + b.counts, lo=a.lo, hi=a.hi)
+
+    def psum_state(self, state: HistogramState, axis_names) -> HistogramState:
+        """Only the counts are additive; lo/hi are replicated configuration
+        (psum'ing them would multiply the bin range by the shard count and
+        silently shift every quantile)."""
+        return HistogramState(
+            counts=jax.lax.psum(state.counts, axis_names),
+            lo=state.lo, hi=state.hi)
+
+    def fused_poisson_states(self, seed, values, B, n_valid=None):
+        """Matrix-free bootstrap sketch: B per-resample histogram states
+        from in-kernel Poisson(1) weights (kernels/weighted_hist.
+        fused_poisson_hist) — the last built-in statistic fallback is gone;
+        Quantile/Median sessions stream through the Pallas sketch end to
+        end.  ``backend="pallas"``/``"pallas_interpret"`` on the statistic
+        routes the fused kernel too; the default picks the platform auto
+        path (scan on CPU)."""
+        from repro.kernels.weighted_hist import ops as wh_ops
+        backend = self.backend if self.backend in (
+            "pallas", "pallas_interpret") else None
+        d = values.shape[1]
+        counts = wh_ops.fused_poisson_hist(seed, values, self.lo, self.hi,
+                                           self.nbins, B, backend=backend,
+                                           n_valid=n_valid)
+        return HistogramState(
+            counts=counts,
+            lo=jnp.full((B, d), self.lo, jnp.float32),
+            hi=jnp.full((B, d), self.hi, jnp.float32))
 
     def finalize(self, state: HistogramState):
         cdf = jnp.cumsum(state.counts, axis=-1)

@@ -54,7 +54,8 @@ class EarlSession:
                  tau: float = 0.01, p_pilot: float = 0.01,
                  growth: float = 2.0, max_fraction: float = 1.0,
                  min_pilot: int = 64, max_pilot: int = 8192, l: int = 5,
-                 backend: Optional[str] = None):
+                 backend: Optional[str] = None, mesh=None,
+                 data_axis: str = "data"):
         self.sampler = sampler
         self.stat = stat
         self.sigma = float(sigma)
@@ -65,7 +66,14 @@ class EarlSession:
         self.min_pilot = int(min_pilot)
         #: None = materialized jnp weights; "fused_rng" = matrix-free
         #: in-kernel RNG for SSABE and the delta-maintained main loop.
+        #: ``mesh`` (fused backend only) shards SSABE and every delta
+        #: extension over ``data_axis``: per-shard in-kernel weight streams,
+        #: psum'd states, no weight traffic (paper's distributed resampling).
         self.backend = backend
+        self.mesh = mesh
+        self.data_axis = data_axis
+        if mesh is not None and backend != "fused_rng":
+            raise ValueError("mesh= requires backend='fused_rng'")
         # the pilot only needs to be large enough for a stable c_v(n) fit
         # (paper §3.2: "the initial n is picked to be small ... estimation
         # can be performed on a single machine"); capping it keeps the
@@ -95,7 +103,8 @@ class EarlSession:
         pilot = self.sampler.take(0, n_pilot)
         est = ssabe_mod.ssabe(pilot, self.stat, self.sigma, self.tau,
                               jax.random.fold_in(key, 1), l=self.l, N=N,
-                              backend=self.backend)
+                              backend=self.backend, mesh=self.mesh,
+                              data_axis=self.data_axis)
         B, n_target = est.B, max(est.n, n_pilot)
 
         # ---- fallback check (paper §3.1) -------------------------------
@@ -106,7 +115,8 @@ class EarlSession:
         dim = _as_2d(pilot).shape[1]
         pd = poisson_delta_init(self.stat, B, dim,
                                 jax.random.fold_in(key, 2),
-                                backend=self.backend)
+                                backend=self.backend, mesh=self.mesh,
+                                data_axis=self.data_axis)
         n_have = 0
         iterations = 0
         while True:

@@ -25,7 +25,8 @@ import numpy as np
 
 from repro.core import accuracy
 from repro.core.bootstrap import (bootstrap_thetas, fused_resample_states,
-                                  seed_from_key, weights_for)
+                                  seed_from_key, sharded_fused_states,
+                                  weights_for)
 from repro.core.delta import poisson_delta_extend, poisson_delta_init, \
     poisson_delta_result
 from repro.core.reduce_api import Statistic, _as_2d
@@ -46,7 +47,8 @@ class SSABEResult:
 def estimate_B(values: jax.Array, stat: Statistic, tau: float,
                key: jax.Array, engine: str = "poisson",
                B_min: int = 2, B_max: int | None = None,
-               backend: str | None = None
+               backend: str | None = None, mesh=None,
+               data_axis: str = "data"
                ) -> Tuple[int, List[Tuple[int, float]]]:
     """Phase A.  Common random numbers: resample b is keyed by fold_in(key,b),
     so growing B reuses earlier resamples — c_v(B) is a stable nested
@@ -58,6 +60,9 @@ def estimate_B(values: jax.Array, stat: Statistic, tau: float,
     if backend == "fused_rng" and engine != "poisson":
         raise ValueError("backend='fused_rng' requires the poisson engine "
                          "(in-kernel RNG draws iid Poisson(1) weights)")
+    if mesh is not None and backend != "fused_rng":
+        raise ValueError("mesh= requires backend='fused_rng' (same rule as "
+                         "bootstrap/bootstrap_chunked/poisson_delta_init)")
     if B_max is None:
         B_max = max(B_min + 1, int(math.ceil(1.0 / tau)))
     x = _as_2d(values)
@@ -65,10 +70,18 @@ def estimate_B(values: jax.Array, stat: Statistic, tau: float,
 
     if backend == "fused_rng" and engine == "poisson":
         # matrix-free: thetas for all B_max resamples without the (B_max, n)
-        # weight matrix (for statistics with a fused_poisson_states path —
-        # moments, KMeansStep; others materialize the same implicit
-        # weights); prefixes of thetas give nested B as before.
-        states = fused_resample_states(stat, seed_from_key(key), x, B_max)
+        # weight matrix (every built-in statistic has a
+        # fused_poisson_states path — moments, KMeansStep, Quantile; custom
+        # ones materialize the same implicit weights); prefixes of thetas
+        # give nested B as before.  With a mesh the pilot shards over the
+        # data axis and only the states psum.
+        if mesh is not None:
+            states = sharded_fused_states(stat, seed_from_key(key), x,
+                                          B_max, mesh=mesh,
+                                          data_axis=data_axis)
+        else:
+            states = fused_resample_states(stat, seed_from_key(key), x,
+                                           B_max)
         thetas_full = jax.vmap(stat.finalize)(states)
     else:
         # draw the maximal weight matrix once; prefixes give nested B
@@ -120,7 +133,8 @@ def invert_cv_curve(a: float, c: float, sigma: float, n_cap: int) -> int:
 
 def estimate_n(values: jax.Array, stat: Statistic, sigma: float, B: int,
                key: jax.Array, l: int = 5, n_cap: int | None = None,
-               backend: str | None = None
+               backend: str | None = None, mesh=None,
+               data_axis: str = "data"
                ) -> Tuple[int, List[Tuple[int, float]], float, float]:
     """Phase B with delta maintenance: the nested subsamples n_i = n/2^{l-i}
     are prefixes, so each step extends the Poisson-bootstrap states with the
@@ -130,7 +144,8 @@ def estimate_n(values: jax.Array, stat: Statistic, sigma: float, B: int,
     if n_cap is None:
         n_cap = 1 << 62
 
-    pd = poisson_delta_init(stat, B, dim, key, backend=backend)
+    pd = poisson_delta_init(stat, B, dim, key, backend=backend, mesh=mesh,
+                            data_axis=data_axis)
     history: List[Tuple[int, float]] = []
     prev = 0
     for i in range(1, l + 1):
@@ -150,18 +165,23 @@ def estimate_n(values: jax.Array, stat: Statistic, sigma: float, B: int,
 def ssabe(pilot_values: jax.Array, stat: Statistic, sigma: float, tau: float,
           key: jax.Array, l: int = 5, N: int | None = None,
           engine: str = "poisson",
-          backend: str | None = None) -> SSABEResult:
+          backend: str | None = None, mesh=None,
+          data_axis: str = "data") -> SSABEResult:
     """The full two-phase SSABE algorithm on a pilot sample.
 
     ``backend="fused_rng"`` routes both phases matrix-free (in-kernel
-    Poisson weights) for moment statistics."""
+    Poisson weights) for every built-in statistic; ``mesh=`` additionally
+    shards both phases over the data axis (states psum, weights never
+    move)."""
     acc = accuracy
     kb, kn = jax.random.split(jax.random.fold_in(key, 0xEA))
     B_hat, hist_B = estimate_B(pilot_values, stat, tau, kb, engine=engine,
-                               backend=backend)
+                               backend=backend, mesh=mesh,
+                               data_axis=data_axis)
     n_cap = N if N is not None else int(1e12)
     n_hat, hist_n, a, c = estimate_n(pilot_values, stat, sigma, B_hat, kn,
-                                     l=l, n_cap=n_cap, backend=backend)
+                                     l=l, n_cap=n_cap, backend=backend,
+                                     mesh=mesh, data_axis=data_axis)
 
     x = np.asarray(_as_2d(pilot_values))
     n_theory = acc.theoretical_sample_size(

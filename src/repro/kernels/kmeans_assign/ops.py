@@ -30,11 +30,8 @@ import jax.numpy as jnp
 from repro.kernels.kmeans_assign.kernel import (_assign_tile,
                                                 fused_poisson_kmeans_kernel,
                                                 kmeans_assign_kernel)
-from repro.kernels.weighted_stats.ops import _pad_to, implicit_weight_tile
-
-
-def _pick_bn(n: int, block_n: int) -> int:
-    return min(block_n, max(128, n))
+from repro.kernels.weighted_stats.ops import (_pad_to, implicit_weight_tile,
+                                              weight_tile_blocks)
 
 
 # ============================================================================
@@ -89,7 +86,7 @@ def kmeans_assign(values: jax.Array, weights: Optional[jax.Array],
         from repro.kernels.kmeans_assign.ref import kmeans_assign_ref
         return kmeans_assign_ref(values, weights, centroids)
 
-    bn = _pick_bn(n, block_n)
+    bn = weight_tile_blocks(8, n, 8, block_n)[1]   # shared n-tile clamp
     xp = _pad_to(values.astype(jnp.float32), bn, 0)
     wp = _pad_to(weights.astype(jnp.float32), bn, 0)   # zero weight = no-op
 
@@ -169,8 +166,7 @@ def fused_poisson_kmeans(seed, values: jax.Array, centroids: jax.Array,
     if n_valid is None:
         n_valid = n
 
-    bb = min(block_b, max(8, B))
-    bn = _pick_bn(n, block_n)
+    bb, bn = weight_tile_blocks(B, n, block_b, block_n)
     Bp = B + (-B) % bb
     seed = jnp.asarray(seed, jnp.int32)
     n_valid = jnp.asarray(n_valid, jnp.int32)

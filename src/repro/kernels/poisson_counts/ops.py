@@ -6,6 +6,7 @@ import jax.numpy as jnp
 
 from repro.kernels.poisson_counts.kernel import poisson_counts_kernel
 from repro.kernels.poisson_counts.ref import poisson_weights_ref
+from repro.kernels.weighted_stats.ops import weight_tile_blocks
 
 
 def poisson_counts(seed, B: int, n: int, backend: str | None = None,
@@ -23,8 +24,7 @@ def poisson_counts(seed, B: int, n: int, backend: str | None = None,
         return poisson_weights_ref(key, B, n)
 
     interpret = backend != "pallas"
-    bb = min(block_b, max(8, B))
-    bn = min(block_n, max(128, n))
+    bb, bn = weight_tile_blocks(B, n, block_b, block_n)
     Bp = B + (-B) % bb
     np_ = n + (-n) % bn
     out = poisson_counts_kernel(jnp.asarray(seed, jnp.int32), Bp, np_,

@@ -1,6 +1,7 @@
-"""Fused weighted-histogram Pallas kernel (mergeable quantile sketch).
+"""Fused weighted-histogram Pallas kernels (mergeable quantile sketch).
 
-Computes, per value dimension c, a fixed-range weighted histogram
+``weighted_hist_kernel`` computes, per value dimension c, a fixed-range
+weighted histogram
 
     counts[c, b] = Σ_i  w[i] · 1[ bin(x[i, c]) = b ]
 
@@ -10,11 +11,23 @@ memory blowup).  Each (bn, bd) value tile is binned in VMEM and the per-bin
 mass is accumulated with one (1, bn) × (bn, nbins) MXU contraction per
 dimension column — the one-hot exists only tile-at-a-time in VMEM.
 
-Grid: (d/bd, n/bn); the n axis is LAST so each (bd, nbins) output tile is
-revisited sequentially and accumulated in place.  Histogram counts are a
-mergeable synopsis (Jestes et al., wavelet histograms on MapReduce), so
-per-shard outputs psum cleanly — same merge discipline as
-``reduce_api.HistogramState``.
+``fused_poisson_hist_kernel`` is the matrix-free bootstrap path for
+Quantile/Median: the B Poisson(1) resample weight rows are generated
+*inside* the kernel from the same counter-based PRNG tile discipline as
+kernels/weighted_stats.fused_poisson_moments (keyed by (seed, b-tile,
+n-tile), so the implicit weight matrix is bit-identical to
+``implicit_weights(seed, B, n)`` under matching blocks) and contracted
+against the tile-local one-hot — neither the (B, n) weight matrix nor the
+(n, d, nbins) one-hot ever exists in HBM; peak live state is the
+O(B·d·nbins) per-resample histogram accumulators.
+
+Binning rule (clip out-of-range into edge bins, drop NaN mass) is imported
+from ref.py so kernel, scan lowering and scatter path can never drift.
+
+Grids: ``(d/bd, n/bn)`` for the single-state pass; ``(B/bB, n/bn)`` for the
+fused bootstrap pass with the contraction axis n LAST so output tiles are
+revisited sequentially and accumulated in place (same discipline as
+weighted_stats / kmeans_assign).
 """
 from __future__ import annotations
 
@@ -23,8 +36,10 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-_EPS = 1e-12
+from repro.kernels.weighted_hist.ref import _bin_indices, finite_mass_mask
+from repro.kernels.weighted_stats.kernel import _poisson_tile
 
 
 def _wh_kernel(x_ref, w_ref, lo_ref, hi_ref, out_ref, *, nbins: int,
@@ -37,13 +52,10 @@ def _wh_kernel(x_ref, w_ref, lo_ref, hi_ref, out_ref, *, nbins: int,
 
     x = x_ref[...].astype(jnp.float32)           # (bn, bd)
     w = w_ref[...].astype(jnp.float32)           # (bn, 1)
-    lo = lo_ref[...]                             # (1, bd)
-    hi = hi_ref[...]
-    span = hi - lo + jnp.float32(_EPS)
     # bin against the TRUE nbins; out_bins >= nbins is only lane padding,
     # so bins [nbins, out_bins) stay empty and slicing them off is exact.
-    idx = jnp.clip(((x - lo) / span * nbins).astype(jnp.int32),
-                   0, nbins - 1)                 # (bn, bd)
+    idx = _bin_indices(x, lo_ref[...], hi_ref[...], nbins)      # (bn, bd)
+    mass = finite_mass_mask(x)                   # (bn, bd); NaN carries none
 
     bn = x.shape[0]
     bins = jax.lax.broadcasted_iota(jnp.int32, (bn, out_bins), 1)
@@ -51,7 +63,8 @@ def _wh_kernel(x_ref, w_ref, lo_ref, hi_ref, out_ref, *, nbins: int,
     for c in range(block_d):                     # static unroll, bd is small
         onehot = (idx[:, c:c + 1] == bins).astype(jnp.float32)  # (bn, ob)
         out_ref[c:c + 1, :] += jax.lax.dot(
-            wt, onehot, preferred_element_type=jnp.float32)
+            wt * mass[:, c].reshape(1, bn), onehot,
+            preferred_element_type=jnp.float32)
 
 
 @functools.partial(jax.jit,
@@ -88,3 +101,86 @@ def weighted_hist_kernel(values: jax.Array, weights: jax.Array,
         out_shape=jax.ShapeDtypeStruct((d, out_bins), jnp.float32),
         interpret=interpret,
     )(values, weights, lo, hi)
+
+
+# ============================================================================
+# matrix-free bootstrap path: in-kernel weight generation + binning
+# ============================================================================
+def _fph_kernel(scal_ref, x_ref, lo_ref, hi_ref, out_ref, *, nbins: int,
+                out_bins: int, d: int, block_b: int, block_n: int,
+                use_tpu_prng: bool):
+    i = pl.program_id(0)        # B-tile index
+    t = pl.program_id(1)        # n-tile index (contraction)
+
+    w = _poisson_tile(scal_ref[0], i, t, (block_b, block_n), scal_ref[1],
+                      block_n, use_tpu_prng)                 # (bB, bn)
+    x = x_ref[...].astype(jnp.float32)                       # (bn, dp)
+    idx = _bin_indices(x, lo_ref[...], hi_ref[...], nbins)   # (bn, dp)
+    mass = finite_mass_mask(x)                               # (bn, dp)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.zeros(out_ref.shape, out_ref.dtype)
+
+    bn = x.shape[0]
+    bins = jax.lax.broadcasted_iota(jnp.int32, (bn, out_bins), 1)
+    # per-dim masked one-hot: out[:, c·ob:(c+1)·ob] is dimension c's (B,
+    # nbins) counts — d lane-aligned dots reusing the one (bB, bn) weight
+    # tile, same layout discipline as fused_poisson_kmeans' kp·dp columns.
+    # Only the d REAL columns get a dot; the lane padding of x (dp >= d,
+    # ops.py pads to 128 like every other fused kernel) is never read.
+    for c in range(d):
+        onehot = ((idx[:, c:c + 1] == bins).astype(jnp.float32)
+                  * mass[:, c:c + 1])                        # (bn, ob)
+        out_ref[:, c * out_bins:(c + 1) * out_bins] += jax.lax.dot(
+            w, onehot, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("B", "nbins", "d_valid", "block_b",
+                                    "block_n", "interpret", "use_tpu_prng"))
+def fused_poisson_hist_kernel(seed: jax.Array, n_valid: jax.Array,
+                              values: jax.Array, lo: jax.Array,
+                              hi: jax.Array, B: int, nbins: int,
+                              d_valid: int,
+                              block_b: int = 128, block_n: int = 512,
+                              interpret: bool = True,
+                              use_tpu_prng: bool = False) -> jax.Array:
+    """Matrix-free bootstrap histogram sketch: B per-resample (d, nbins)
+    count states under implicit in-kernel Poisson(1) weights.
+
+    values (n, dp) f32 pre-padded on n AND on the lane dim (dp = d padded
+    to 128, same lane-width discipline as the other fused kernels; ops.py
+    handles both); ``d_valid`` is the real dimension count — padded lanes
+    are never contracted.  ``n_valid`` masks weight columns >= the unpadded
+    row count, so padded rows (which would otherwise land real mass in bin
+    0) contribute nothing.  lo/hi are (1, dp) f32 (padding spans must be
+    nonzero).  ``B`` must be a ``block_b`` multiple.  Returns
+    (B, d_valid·out_bins) f32 with out_bins = nbins lane-padded to 128 —
+    callers reshape to (B, d_valid, out_bins) and slice [..., :nbins].
+    """
+    n, dp = values.shape
+    assert B % block_b == 0 and n % block_n == 0, ((B, n), (block_b, block_n))
+    assert d_valid <= dp, (d_valid, dp)
+    out_bins = nbins + (-nbins) % 128
+
+    kern = functools.partial(_fph_kernel, nbins=nbins, out_bins=out_bins,
+                             d=d_valid, block_b=block_b, block_n=block_n,
+                             use_tpu_prng=use_tpu_prng)
+    scal = jnp.stack([jnp.asarray(seed, jnp.int32),
+                      jnp.asarray(n_valid, jnp.int32)])
+    grid = (B // block_b, n // block_n)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((block_n, dp), lambda i, t: (t, 0)),
+            pl.BlockSpec((1, dp), lambda i, t: (0, 0)),
+            pl.BlockSpec((1, dp), lambda i, t: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, d_valid * out_bins),
+                               lambda i, t: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, d_valid * out_bins), jnp.float32),
+        interpret=interpret,
+    )(scal, values, lo, hi)

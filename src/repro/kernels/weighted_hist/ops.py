@@ -1,16 +1,31 @@
-"""jit'd public wrapper for weighted_hist: padding + platform dispatch.
+"""jit'd public wrappers for weighted_hist: padding + platform dispatch.
 
-backend: None = auto (pallas on TPU, jnp scatter-add elsewhere), "pallas",
-"pallas_interpret", "jnp".
+backend: None = auto (pallas on TPU, jnp scatter-add / scan elsewhere),
+"pallas", "pallas_interpret", "jnp"/"scan".
+
+Two entry points:
+
+* ``weighted_histogram``   — single-state sketch from explicit weights.
+* ``fused_poisson_hist``   — matrix-free bootstrap sketch: B per-resample
+  (d, nbins) histograms under implicit in-kernel Poisson(1) weights drawn
+  with the shared ``implicit_weight_tile`` discipline, so neither the
+  (B, n) weight matrix nor the (n, d, nbins) one-hot ever materializes;
+  peak live state is O(B·d·nbins) plus one (block_n, d·nbins) tile-local
+  one-hot.
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.weighted_hist.kernel import weighted_hist_kernel
-from repro.kernels.weighted_hist.ref import weighted_hist_scatter_ref
-from repro.kernels.weighted_stats.ops import _pad_to
+from repro.kernels.weighted_hist.kernel import (fused_poisson_hist_kernel,
+                                                weighted_hist_kernel)
+from repro.kernels.weighted_hist.ref import (_bin_indices, finite_mass_mask,
+                                             weighted_hist_scatter_ref)
+from repro.kernels.weighted_stats.ops import (_pad_to, implicit_weight_tile,
+                                              weight_tile_blocks)
 
 
 def weighted_histogram(values: jax.Array, weights: jax.Array,
@@ -43,3 +58,97 @@ def weighted_histogram(values: jax.Array, weights: jax.Array,
                                   block_n=bn, block_d=bd,
                                   interpret=(backend != "pallas"))
     return counts[:d, :nbins]
+
+
+# ============================================================================
+# matrix-free bootstrap path
+# ============================================================================
+@functools.partial(jax.jit, static_argnames=("B", "nbins", "block_b",
+                                             "block_n"))
+def _fused_hist_scan(seed, n_valid, xp, lo, hi, B, nbins, block_b, block_n):
+    """CPU lowering of the fused kernel: scan over n-tiles, weights from the
+    SHARED ``implicit_weight_tile`` (same per-tile threefry bits and CDF
+    ladder as every fused path), binning from the shared ref rule.
+
+    Accumulation is a per-tile scatter-add (O(B·bn·d) work) rather than the
+    kernel's one-hot MXU dots (O(B·bn·d·nbins) flops — the right trade on
+    a TPU where the one-hot stays in VMEM, ~3× the wall time on XLA:CPU).
+    The two lowerings are still BIT-identical: histogram counts are sums of
+    small integer weights, exact in f32 under any summation order.  Peak
+    live state per step is the (B, block_n) weight tile plus the
+    (B, d·nbins) accumulator — the (n, d, nbins) tensor never exists."""
+    n, d = xp.shape
+    nt = n // block_n
+    xc = xp.reshape(nt, block_n, d)
+
+    def body(counts, t):
+        w = implicit_weight_tile(seed, n_valid, t, B,
+                                 block_b, block_n)           # (B, bn)
+        xt = xc[t]
+        idx = _bin_indices(xt, lo[None, :], hi[None, :], nbins)  # (bn, d)
+        flat = (idx + jnp.arange(d, dtype=jnp.int32)[None, :]
+                * nbins).reshape(-1)                         # (bn·d,)
+        wm = (w[:, :, None] * finite_mass_mask(xt)[None, :, :]
+              ).reshape(B, block_n * d)
+        return counts.at[:, flat].add(wm), None
+
+    init = jnp.zeros((B, d * nbins), jnp.float32)
+    counts, _ = jax.lax.scan(body, init, jnp.arange(nt, dtype=jnp.int32))
+    return counts.reshape(B, d, nbins)
+
+
+def fused_poisson_hist(seed, values: jax.Array, lo, hi, nbins: int, B: int,
+                       backend: str | None = None,
+                       block_b: int = 128, block_n: int = 512,
+                       n_valid=None) -> jax.Array:
+    """Matrix-free bootstrap histogram sketch from an int32 seed.
+
+    values (n, d) or (n,), lo/hi scalar or (d,) -> (B, d, nbins) f32 counts
+    where the implicit weights are Poisson(1), keyed per (block_b, block_n)
+    tile by (seed, b-tile, n-tile) — the same matrix as
+    ``weighted_stats.ops.implicit_weights(seed, B, n)``, which is what lets
+    Quantile share one stream with every other fused statistic (common
+    random numbers / delta maintenance).
+
+    ``n_valid`` (traced scalar, default n) masks weight columns >= n_valid
+    to zero — without it the zero-padded tail would land real mass in each
+    dimension's bin 0.
+
+    backend: None = auto (pallas on TPU, scan elsewhere), "pallas",
+    "pallas_interpret", "scan".
+    """
+    if values.ndim == 1:
+        values = values[:, None]
+    n, d = values.shape
+    if backend is None:
+        backend = "pallas" if jax.default_backend() == "tpu" else "scan"
+    if backend not in ("pallas", "pallas_interpret", "scan"):
+        raise ValueError(f"unknown fused_poisson_hist backend: {backend!r}")
+    if n_valid is None:
+        n_valid = n
+
+    bb, bn = weight_tile_blocks(B, n, block_b, block_n)
+    Bp = B + (-B) % bb
+    seed = jnp.asarray(seed, jnp.int32)
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+    lo = jnp.broadcast_to(jnp.asarray(lo, jnp.float32), (d,))
+    hi = jnp.broadcast_to(jnp.asarray(hi, jnp.float32), (d,))
+    xp = _pad_to(values.astype(jnp.float32), bn, 0)
+
+    if backend == "scan":
+        counts = _fused_hist_scan(seed, n_valid, xp, lo, hi, Bp, nbins,
+                                  bb, bn)
+        return counts[:B]
+
+    # lane-width discipline (same as the other fused kernels): x/lo/hi are
+    # padded to 128 lanes; only the d real columns are ever contracted.
+    xpp = _pad_to(xp, 128, 1)
+    lop = _pad_to(lo[None, :], 128, 1)
+    hip = _pad_to(hi[None, :], 128, 1, value=1.0)  # nonzero padding span
+    counts = fused_poisson_hist_kernel(
+        seed, n_valid, xpp, lop, hip, Bp, nbins, d_valid=d,
+        block_b=bb, block_n=bn,
+        interpret=(backend != "pallas"),
+        use_tpu_prng=(backend == "pallas"))
+    out_bins = nbins + (-nbins) % 128
+    return counts.reshape(Bp, d, out_bins)[:B, :, :nbins]

@@ -1,9 +1,20 @@
-"""Oracles for weighted_hist.
+"""Oracles + shared binning rule for weighted_hist.
 
 ``weighted_hist_onehot_ref`` is the original memory-blowup formulation
 (materializes the (n, d, nbins) one-hot in HBM) — kept strictly as a
 correctness oracle; ``weighted_hist_scatter_ref`` is the O(n·d) scatter-add
-formulation that reduce_api.Quantile now uses as its default jnp path.
+formulation that reduce_api.Quantile uses as its default jnp path.
+
+Out-of-range / non-finite policy (shared by EVERY histogram path — the
+Pallas kernels import ``_bin_indices``/``finite_mass_mask`` from here so the
+rule cannot drift between lowerings):
+
+* out-of-range values are CLIPPED into the edge bins: x <= lo lands in bin
+  0, x >= hi (including x == hi exactly, and ±inf) lands in bin nbins-1 —
+  a fixed-range sketch must not silently lose tail mass;
+* NaN values are DROPPED: their weight contributes to no bin (a NaN has no
+  defined bin, and f32→int32 casts of NaN are platform-dependent — the mask
+  is what keeps kernel, scan and scatter lowerings bit-consistent).
 """
 from __future__ import annotations
 
@@ -15,10 +26,21 @@ _EPS = 1e-12
 
 def _bin_indices(values: jax.Array, lo: jax.Array, hi: jax.Array,
                  nbins: int) -> jax.Array:
+    """Bin index per element, CLIPPED into [0, nbins-1].
+
+    The clip happens in f32 BEFORE the int cast (so ±inf deterministically
+    hit the edge bins instead of going through an undefined f32→int32
+    cast), then again after (so the garbage a NaN cast produces still
+    indexes in-bounds — its mass is zeroed by ``finite_mass_mask``)."""
     x = values.astype(jnp.float32)                       # (n, d)
     span = hi - lo + _EPS
-    return jnp.clip(((x - lo) / span * nbins).astype(jnp.int32),
-                    0, nbins - 1)                        # (n, d)
+    idx_f = jnp.clip((x - lo) / span * nbins, 0.0, float(nbins - 1))
+    return jnp.clip(idx_f.astype(jnp.int32), 0, nbins - 1)
+
+
+def finite_mass_mask(values: jax.Array) -> jax.Array:
+    """1.0 where the value carries histogram mass, 0.0 for NaN."""
+    return jnp.where(jnp.isnan(values), 0.0, 1.0).astype(jnp.float32)
 
 
 def weighted_hist_onehot_ref(values: jax.Array, weights: jax.Array,
@@ -27,6 +49,7 @@ def weighted_hist_onehot_ref(values: jax.Array, weights: jax.Array,
     """(n, d) values, (n,) weights, (d,) lo/hi -> (d, nbins) counts."""
     idx = _bin_indices(values, lo[None, :], hi[None, :], nbins)
     onehot = jax.nn.one_hot(idx, nbins, dtype=jnp.float32)   # (n, d, nbins)
+    onehot = onehot * finite_mass_mask(values)[:, :, None]
     return jnp.einsum("n,ndb->db", weights.astype(jnp.float32), onehot)
 
 
@@ -38,6 +61,7 @@ def weighted_hist_scatter_ref(values: jax.Array, weights: jax.Array,
     d = idx.shape[1]
     flat = idx + jnp.arange(d, dtype=jnp.int32)[None, :] * nbins
     w = jnp.broadcast_to(weights.astype(jnp.float32)[:, None], idx.shape)
+    w = w * finite_mass_mask(values)
     counts = jnp.zeros((d * nbins,), jnp.float32)
     counts = counts.at[flat.reshape(-1)].add(w.reshape(-1))
     return counts.reshape(d, nbins)

@@ -122,7 +122,8 @@ def _poisson_tile(seed, i, k, shape, n_valid, block_n: int,
 
 
 def _fpm_kernel(scal_ref, x_ref, wtot_ref, s1_ref, s2_ref, *,
-                block_b: int, block_n: int, use_tpu_prng: bool):
+                block_b: int, block_n: int, use_tpu_prng: bool,
+                dtype=jnp.float32):
     i = pl.program_id(0)        # B-tile index
     j = pl.program_id(1)        # d-tile index
     k = pl.program_id(2)        # n-tile index (contraction)
@@ -136,8 +137,13 @@ def _fpm_kernel(scal_ref, x_ref, wtot_ref, s1_ref, s2_ref, *,
         s1_ref[...] = jnp.zeros(s1_ref.shape, s1_ref.dtype)
         s2_ref[...] = jnp.zeros(s2_ref.shape, s2_ref.dtype)
 
-    s1_ref[...] += jax.lax.dot(w, x, preferred_element_type=jnp.float32)
-    s2_ref[...] += jax.lax.dot(w, x * x, preferred_element_type=jnp.float32)
+    # dtype=bf16: inputs enter the MXU in bf16, accumulators stay f32
+    # (bf16-multiply/f32-accumulate).  Weights are small Poisson(1)
+    # integers — exact in bf16; x² is squared in f32 then rounded ONCE.
+    s1_ref[...] += jax.lax.dot(w.astype(dtype), x.astype(dtype),
+                               preferred_element_type=jnp.float32)
+    s2_ref[...] += jax.lax.dot(w.astype(dtype), (x * x).astype(dtype),
+                               preferred_element_type=jnp.float32)
 
     @pl.when(jnp.logical_and(j == 0, k == 0))
     def _init_wtot():
@@ -150,12 +156,13 @@ def _fpm_kernel(scal_ref, x_ref, wtot_ref, s1_ref, s2_ref, *,
 
 @functools.partial(jax.jit,
                    static_argnames=("B", "block_b", "block_n", "block_d",
-                                    "interpret", "use_tpu_prng"))
+                                    "interpret", "use_tpu_prng", "dtype"))
 def fused_poisson_moments_kernel(seed: jax.Array, n_valid: jax.Array,
                                  values: jax.Array, B: int,
                                  block_b: int = 128, block_n: int = 512,
                                  block_d: int = 128, interpret: bool = True,
-                                 use_tpu_prng: bool = False):
+                                 use_tpu_prng: bool = False,
+                                 dtype=jnp.float32):
     """Matrix-free bootstrap moments: weights generated in VMEM, never in HBM.
 
     values: (n, d) f32, pre-padded to block multiples (ops.py handles this);
@@ -170,7 +177,7 @@ def fused_poisson_moments_kernel(seed: jax.Array, n_valid: jax.Array,
 
     grid = (B // block_b, d // block_d, n // block_n)
     kern = functools.partial(_fpm_kernel, block_b=block_b, block_n=block_n,
-                             use_tpu_prng=use_tpu_prng)
+                             use_tpu_prng=use_tpu_prng, dtype=dtype)
     scal = jnp.stack([jnp.asarray(seed, jnp.int32),
                       jnp.asarray(n_valid, jnp.int32)])
     return pl.pallas_call(

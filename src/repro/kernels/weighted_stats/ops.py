@@ -39,15 +39,29 @@ def _pad_to(x: jax.Array, mult: int, axis: int,
     return jnp.pad(x, widths, constant_values=value)
 
 
+def weight_tile_blocks(B: int, n: int, block_b: int = 128,
+                       block_n: int = 512) -> Tuple[int, int]:
+    """Clamped (block_b, block_n) for the (implicit) weight-matrix tiling —
+    hardware-aligned defaults that also stay small for tiny test shapes.
+
+    EVERY fused path (fused_poisson_moments, fused_poisson_kmeans,
+    fused_poisson_hist, poisson_counts, implicit_weights) must pick its
+    weight-tile blocks through THIS helper: the PRNG is keyed per
+    (seed, b-tile, n-tile), so two paths agree bit-for-bit on the implicit
+    weight matrix — the common-random-numbers / delta-maintenance
+    contract — only if they agree on this clamp.
+    """
+    return min(block_b, max(8, B)), min(block_n, max(128, n))
+
+
 def _pick_blocks(B: int, n: int, d: int) -> Tuple[int, int, int]:
-    """Hardware-aligned tiles that also stay small for tiny test shapes.
+    """Tiles for the explicit-W kernel (same clamp + fixed lane width).
 
     VMEM budget (f32): bB·bn (W) + bn·bd (X, X²) + 2·bB·bd (acc) — with the
     defaults 128·512 + 512·128 + 2·128·128 floats ≈ 0.7 MB, far under the
     ~16 MB/core VMEM of v5e, leaving room for double buffering.
     """
-    bb = min(128, max(8, B))
-    bn = min(512, max(128, n))
+    bb, bn = weight_tile_blocks(B, n)
     bd = 128                    # lane width: fixed regardless of d
     return bb, bn, bd
 
@@ -104,12 +118,21 @@ def implicit_weight_tile(seed, n_valid, t, B: int, block_b: int,
     return jnp.where(mask[None, :], w, 0.0)
 
 
-@functools.partial(jax.jit, static_argnames=("B", "block_b", "block_n"))
-def _fused_scan(seed, n_valid, xp, B, block_b, block_n):
+@functools.partial(jax.jit, static_argnames=("B", "block_b", "block_n",
+                                             "dtype"))
+def _fused_scan(seed, n_valid, xp, B, block_b, block_n,
+                dtype=jnp.float32):
     """CPU/matrix-free oracle of the fused kernel: same tile decomposition,
     same per-tile threefry bits and CDF ladder, same k-sequential f32
     accumulation — but expressed as a jnp scan so XLA:CPU runs it at full
-    speed.  Peak live memory per step is (B, block_n)."""
+    speed.  Peak live memory per step is (B, block_n).
+
+    ``dtype=bfloat16`` is the reduced-precision input study: the weight
+    tile (small Poisson(1) integers, exactly representable in bf16) and x
+    enter the contraction in bf16 while the s1/s2 accumulators stay f32 —
+    i.e. the MXU bf16-multiply/f32-accumulate mode.  x² is squared in f32
+    FIRST and then rounded once to bf16 (squaring an already-rounded bf16
+    x would double the relative error of the second moment)."""
     n, d = xp.shape
     nb_n = n // block_n
     xc = xp.reshape(nb_n, block_n, d)
@@ -119,8 +142,11 @@ def _fused_scan(seed, n_valid, xp, B, block_b, block_n):
         w = implicit_weight_tile(seed, n_valid, k, B, block_b, block_n)
         xk = xc[k]
         return (w_tot + jnp.sum(w, axis=1, keepdims=True),
-                s1 + w @ xk,
-                s2 + w @ (xk * xk)), None
+                s1 + jax.lax.dot(w.astype(dtype), xk.astype(dtype),
+                                 preferred_element_type=jnp.float32),
+                s2 + jax.lax.dot(w.astype(dtype),
+                                 (xk * xk).astype(dtype),
+                                 preferred_element_type=jnp.float32)), None
 
     init = (jnp.zeros((B, 1), jnp.float32),
             jnp.zeros((B, d), jnp.float32),
@@ -133,7 +159,7 @@ def _fused_scan(seed, n_valid, xp, B, block_b, block_n):
 def fused_poisson_moments(seed, values: jax.Array, B: int,
                           backend: str | None = None,
                           block_b: int = 128, block_n: int = 512,
-                          n_valid=None):
+                          n_valid=None, dtype=jnp.float32):
     """Matrix-free bootstrap moments from an int32 seed (no weight matrix).
 
     values (n, d) or (n,) -> (w_tot (B,), s1 (B,d), s2 (B,d)) where the
@@ -146,6 +172,12 @@ def fused_poisson_moments(seed, values: jax.Array, B: int,
     to zero — callers that pass pre-padded values (e.g. the chunked
     bootstrap's ragged tail) use it so ``w_tot`` ignores padding.
 
+    ``dtype`` is the contraction input precision (ROADMAP bf16 study):
+    ``jnp.bfloat16`` feeds w and x to the dots in bf16 with f32
+    accumulators — halves the X-side HBM/VMEM traffic on TPU for ~1e-3
+    relative moment error (weights are small exact integers; see
+    benchmarks/kernelbench.run_bootstrap for the quantified cv error).
+
     backend: None = auto (pallas on TPU, scan elsewhere), "pallas",
     "pallas_interpret", "scan".
     """
@@ -157,15 +189,16 @@ def fused_poisson_moments(seed, values: jax.Array, B: int,
     if n_valid is None:
         n_valid = n
 
-    bb = min(block_b, max(8, B))
-    bn = min(block_n, max(128, n))
+    bb, bn = weight_tile_blocks(B, n, block_b, block_n)
     Bp = B + (-B) % bb
     seed = jnp.asarray(seed, jnp.int32)
     n_valid = jnp.asarray(n_valid, jnp.int32)
+    dtype = jnp.dtype(dtype)
     xp = _pad_to(values.astype(jnp.float32), bn, 0)
 
     if backend == "scan":
-        w_tot, s1, s2 = _fused_scan(seed, n_valid, xp, Bp, bb, bn)
+        w_tot, s1, s2 = _fused_scan(seed, n_valid, xp, Bp, bb, bn,
+                                    dtype=dtype)
         return w_tot[:B, 0], s1[:B], s2[:B]
 
     bd = 128                    # lane width: fixed regardless of d
@@ -174,7 +207,7 @@ def fused_poisson_moments(seed, values: jax.Array, B: int,
         seed, n_valid, xp, Bp,
         block_b=bb, block_n=bn, block_d=bd,
         interpret=(backend != "pallas"),
-        use_tpu_prng=(backend == "pallas"))
+        use_tpu_prng=(backend == "pallas"), dtype=dtype)
     return w_tot[:B, 0], s1[:B, :d], s2[:B, :d]
 
 
@@ -191,8 +224,7 @@ def implicit_weights(seed, B: int, n: int, block_b: int = 128,
     its bits from the hardware PRNG (``use_tpu_prng=True``), which is
     distributionally identical but NOT bit-identical to this matrix.
     """
-    bb = min(block_b, max(8, B))
-    bn = min(block_n, max(128, n))
+    bb, bn = weight_tile_blocks(B, n, block_b, block_n)
     nb_b = (B + (-B) % bb) // bb
     nb_n = (n + (-n) % bn) // bn
     seed = jnp.asarray(seed, jnp.int32)

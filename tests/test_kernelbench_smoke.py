@@ -1,0 +1,35 @@
+"""Tier-1 kernel-dispatch gate: kernelbench --smoke must run clean.
+
+Every fused/materialized dispatch path the benchmarks exercise (weighted
+moments f32+bf16, fused Poisson moments/kmeans/histogram, Pallas interpret
+sketch, scatter paths) executes at tiny shapes with no timing — so a broken
+kernel wrapper fails HERE instead of only surfacing in a BENCH_*.json
+refresh.  Run in-process (the shapes are tiny) but asserted to leave the
+BENCH jsons untouched.
+"""
+import os
+import sys
+
+import pytest
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+@pytest.mark.filterwarnings("ignore")
+def test_kernelbench_smoke_runs_and_writes_nothing():
+    sys.path.insert(0, _ROOT)
+    try:
+        from benchmarks import kernelbench
+    finally:
+        sys.path.remove(_ROOT)
+
+    stamps = {}
+    for p in (kernelbench._BENCH_JSON, kernelbench._BENCH_KMEANS_JSON,
+              kernelbench._BENCH_QUANTILE_JSON):
+        stamps[p] = p.stat().st_mtime_ns if p.exists() else None
+
+    kernelbench.run(smoke=True)
+
+    for p, stamp in stamps.items():
+        now = p.stat().st_mtime_ns if p.exists() else None
+        assert now == stamp, f"smoke mode must not write {p.name}"
