@@ -1,0 +1,129 @@
+"""Per-kernel perf regression gate for the nightly kernelbench run.
+
+Compares freshly produced BENCH_*.json files against the checked-in
+baselines: each file's headline speedup must stay within ``--min-ratio``
+of its baseline (wall-clock microseconds are NOT compared — CI hardware
+differs run to run; speedup ratios are self-normalizing), must stay above
+its absolute floor (a structural win that stops being a win is a
+regression even if the baseline already drifted), and the structural
+invariants (zero weight-matrix bytes, shared-weight bitwise equality)
+must hold exactly.
+
+Usage:
+    python benchmarks/check_regression.py \
+        --baseline /tmp/bench-baseline --current . [--min-ratio 0.5]
+
+Exit code 1 (with a per-metric table) on any violation; missing current
+files fail, missing baseline files are skipped with a note (a new
+benchmark has no history yet).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+#: file -> headline speedup keys gated against min_ratio × baseline
+METRICS = {
+    "BENCH_bootstrap.json": ("speedup_fused_vs_materialized",
+                             "speedup_fused_vs_naive"),
+    "BENCH_kmeans.json": ("speedup_fused_vs_materialized",),
+    "BENCH_quantile.json": ("speedup_fused_vs_materialized",),
+    "BENCH_multi.json": ("speedup_group_vs_sequential",),
+}
+
+#: absolute floors: the fused paths must stay faster than their baselines
+#: at all (>= 1.0), and the k=3 group must keep its ISSUE-5 acceptance
+#: margin over sequential runs.
+FLOORS = {
+    "speedup_fused_vs_materialized": 1.0,
+    "speedup_fused_vs_naive": 1.0,
+    "speedup_group_vs_sequential": 1.5,
+}
+
+#: (file, dotted path) -> exact required value
+INVARIANTS = {
+    ("BENCH_bootstrap.json", "peak_weight_bytes.fused_rng"): 0,
+    ("BENCH_multi.json", "member_thetas_bitwise_equal_to_sequential"): True,
+    ("BENCH_multi.json", "weight_streams.group"): 1,
+}
+
+
+def _get(doc: dict, dotted: str):
+    cur = doc
+    for part in dotted.split("."):
+        cur = cur[part]
+    return cur
+
+
+def check(baseline_dir: pathlib.Path, current_dir: pathlib.Path,
+          min_ratio: float) -> list:
+    failures = []
+    for fname, keys in METRICS.items():
+        cur_path = current_dir / fname
+        if not cur_path.exists():
+            failures.append(f"{fname}: missing from current run")
+            continue
+        cur = json.loads(cur_path.read_text())
+        base_path = baseline_dir / fname
+        base = (json.loads(base_path.read_text())
+                if base_path.exists() else None)
+        if base is None:
+            print(f"NOTE  {fname}: no baseline (new benchmark) — "
+                  f"floor checks only")
+        for key in keys:
+            val = float(cur[key])
+            floor = FLOORS.get(key, 1.0)
+            status = "ok"
+            if val < floor:
+                status = f"BELOW FLOOR {floor}"
+                failures.append(f"{fname}:{key} = {val:.2f} < floor {floor}")
+            elif base is not None:
+                ref = float(base[key])
+                if val < min_ratio * ref:
+                    status = f"REGRESSED vs {ref:.2f}"
+                    failures.append(
+                        f"{fname}:{key} = {val:.2f} < "
+                        f"{min_ratio} x baseline {ref:.2f}")
+            ref_s = f"{float(base[key]):8.2f}" if base is not None else \
+                "     new"
+            print(f"{'FAIL' if status != 'ok' else ' ok '} {fname}:{key}"
+                  f"  current={val:8.2f}  baseline={ref_s}  [{status}]")
+
+    for (fname, dotted), want in INVARIANTS.items():
+        cur_path = current_dir / fname
+        if not cur_path.exists():
+            continue                      # already failed above
+        got = _get(json.loads(cur_path.read_text()), dotted)
+        if got != want:
+            failures.append(f"{fname}:{dotted} = {got!r}, expected {want!r}")
+            print(f"FAIL {fname}:{dotted} = {got!r} != {want!r}")
+        else:
+            print(f" ok  {fname}:{dotted} = {got!r}")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", type=pathlib.Path, required=True,
+                    help="directory holding the checked-in BENCH_*.json")
+    ap.add_argument("--current", type=pathlib.Path, default=pathlib.Path("."),
+                    help="directory holding the fresh BENCH_*.json")
+    ap.add_argument("--min-ratio", type=float, default=0.5,
+                    help="current speedup must be >= this fraction of the "
+                         "baseline speedup (default 0.5 — timing on shared "
+                         "CI is noisy; floors catch structural losses)")
+    args = ap.parse_args(argv)
+    failures = check(args.baseline, args.current, args.min_ratio)
+    if failures:
+        print("\nREGRESSIONS:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("\nall kernel benchmarks within thresholds")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

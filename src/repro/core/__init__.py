@@ -5,8 +5,9 @@ bootstrap-based online accuracy estimation over incrementally grown uniform
 samples, with SSABE parameter estimation and delta-maintained resampling.
 See DESIGN.md for the Hadoop→TPU adaptation map.
 """
-from repro.core.accuracy import (AccuracyReport, coefficient_of_variation,
-                                 percentile_ci, relative_halfwidth,
+from repro.core.accuracy import (AccuracyReport, GroupAccuracyReport,
+                                 coefficient_of_variation, percentile_ci,
+                                 relative_halfwidth, report_for,
                                  standard_error,
                                  theoretical_num_bootstraps,
                                  theoretical_sample_size)
@@ -23,14 +24,15 @@ from repro.core.distributed import (DistributedEarl, build_bootstrap_step,
                                     shard_values)
 from repro.core.reduce_api import (Count, KMeansState, KMeansStep, Mean,
                                    MeanLoss, Median, MomentState, Quantile,
-                                   Statistic, Std, Sum, Var, kmeans_fit)
+                                   Statistic, StatisticGroup, Std, Sum,
+                                   Var, kmeans_fit)
 from repro.core.session import EarlSession, EarlyResult
 from repro.core.ssabe import SSABEResult, ssabe
 
 __all__ = [
-    "AccuracyReport", "coefficient_of_variation", "percentile_ci",
-    "relative_halfwidth", "standard_error", "theoretical_num_bootstraps",
-    "theoretical_sample_size",
+    "AccuracyReport", "GroupAccuracyReport", "coefficient_of_variation",
+    "percentile_ci", "relative_halfwidth", "report_for", "standard_error",
+    "theoretical_num_bootstraps", "theoretical_sample_size",
     "BootstrapResult", "bootstrap", "bootstrap_chunked", "bootstrap_thetas",
     "multinomial_counts", "poisson_weights", "sharded_fused_states",
     "weights_for",
@@ -39,7 +41,7 @@ __all__ = [
     "poisson_delta_result", "shared_base_bootstrap", "work_saved",
     "DistributedEarl", "build_bootstrap_step", "shard_values",
     "Count", "KMeansState", "KMeansStep", "Mean", "MeanLoss", "Median",
-    "MomentState", "Quantile", "Statistic", "Std", "Sum", "Var",
-    "kmeans_fit",
+    "MomentState", "Quantile", "Statistic", "StatisticGroup", "Std",
+    "Sum", "Var", "kmeans_fit",
     "EarlSession", "EarlyResult", "SSABEResult", "ssabe",
 ]

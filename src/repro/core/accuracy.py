@@ -86,6 +86,57 @@ class AccuracyReport:
         )
 
 
+@dataclasses.dataclass(frozen=True)
+class GroupAccuracyReport:
+    """Per-member AccuracyReports for a ``StatisticGroup`` bootstrap run.
+
+    The scalar gates (cv / se / rel_halfwidth) expose the WORST member, so
+    every driver's existing ``report.cv <= sigma`` stop condition reads
+    "stop when ALL members meet the target" without changing a line; the
+    per-member reports stay available on ``members``.  Because the group
+    shares one Poisson weight stream, the member CIs here are JOINT —
+    computed from the same resamples, so comparisons across members are
+    consistent rather than independently randomized."""
+    members: Tuple["AccuracyReport", ...]
+
+    @property
+    def cv(self) -> float:
+        return max(m.cv for m in self.members)
+
+    @property
+    def se(self) -> float:
+        return max(m.se for m in self.members)
+
+    @property
+    def rel_halfwidth(self) -> float:
+        return max(m.rel_halfwidth for m in self.members)
+
+    @property
+    def ci_lo(self):
+        return tuple(m.ci_lo for m in self.members)
+
+    @property
+    def ci_hi(self):
+        return tuple(m.ci_hi for m in self.members)
+
+    @property
+    def boot_mean(self):
+        return tuple(m.boot_mean for m in self.members)
+
+    @property
+    def cvs(self) -> Tuple[float, ...]:
+        return tuple(m.cv for m in self.members)
+
+
+def report_for(thetas, alpha: float = 0.05):
+    """AccuracyReport for a (B, ...) theta array, or a GroupAccuracyReport
+    for the tuple of per-member thetas a StatisticGroup produces."""
+    if isinstance(thetas, (tuple, list)):
+        return GroupAccuracyReport(tuple(
+            AccuracyReport.from_thetas(t, alpha) for t in thetas))
+    return AccuracyReport.from_thetas(thetas, alpha)
+
+
 def theoretical_num_bootstraps(eps0: float) -> int:
     """Paper §3: theory suggests B = 0.5 * eps0^-2 [Efron '87]."""
     return int(round(0.5 * eps0 ** (-2)))

@@ -31,7 +31,10 @@ Backends (``backend=`` on ``bootstrap``/``bootstrap_chunked``):
   custom statistics without a fused path fall back to materializing the
   same implicit weights per chunk.  The PRNG seed derives deterministically
   from ``key``, so the fold-in discipline (delta maintenance, common random
-  numbers) carries over unchanged.
+  numbers) carries over unchanged.  A ``StatisticGroup`` routes through
+  kernels/fused_multi: ONE shared weight stream and one pass over x feeds
+  every member's accumulator, so a k-statistic session costs ~1× (not k×)
+  the RNG and memory traffic — and all members see the same resamples.
 
 Multi-device (``mesh=`` + ``data_axis=`` on the fused backend): the n axis
 is sharded over the mesh's data axis with shard_map; each shard runs the
@@ -357,7 +360,7 @@ def bootstrap(values: jax.Array, stat: Statistic, B: int, key: jax.Array,
     return BootstrapResult(
         estimate=estimate,
         thetas=thetas,
-        report=accuracy.AccuracyReport.from_thetas(thetas, alpha=alpha),
+        report=accuracy.report_for(thetas, alpha=alpha),
         B=int(B),
         n=int(values.shape[0]),
     )
@@ -426,6 +429,6 @@ def bootstrap_chunked(values: jax.Array, stat: Statistic, B: int,
     estimate = stat.correct(stat(values), p)
     return BootstrapResult(
         estimate=estimate, thetas=thetas,
-        report=accuracy.AccuracyReport.from_thetas(thetas),
+        report=accuracy.report_for(thetas),
         B=int(B), n=int(n),
     )

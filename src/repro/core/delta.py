@@ -35,8 +35,8 @@ from repro.core import accuracy
 from repro.core.bootstrap import (BootstrapResult, fused_resample_states,
                                   offset_seed, poisson_weights,
                                   seed_from_key, sharded_fused_states)
-from repro.core.reduce_api import Statistic, _as_2d, bind_params, \
-    split_params
+from repro.core.reduce_api import (Statistic, StatisticGroup, _as_2d,
+                                   bind_params, split_params)
 
 
 # ============================================================================
@@ -120,7 +120,7 @@ def poisson_delta_result(pd: PoissonDelta, estimate: Any = None,
         estimate = pd.stat.finalize(pd.est_state)
     return BootstrapResult(
         estimate=pd.stat.correct(estimate, p), thetas=thetas,
-        report=accuracy.AccuracyReport.from_thetas(thetas),
+        report=accuracy.report_for(thetas),
         B=pd.B, n=pd.n,
     )
 
@@ -175,6 +175,11 @@ class MultinomialDeltaBootstrap:
     def __init__(self, stat: Statistic, B: int, seed: int = 0,
                  c: float = 4.0, use_sketch: bool = True,
                  use_gaussian: bool = True):
+        if isinstance(stat, StatisticGroup):
+            raise TypeError(
+                "MultinomialDeltaBootstrap is the host/NumPy fig10 baseline"
+                " and stacks scalar thetas — run StatisticGroup through the"
+                " Poisson delta path (poisson_delta_init) instead")
         self.stat = stat
         self.B = B
         self.rng = np.random.default_rng(seed)
@@ -262,7 +267,7 @@ class MultinomialDeltaBootstrap:
         est = self.stat.correct(self.stat(jnp.asarray(self.sample)), p)
         return BootstrapResult(
             estimate=est, thetas=thetas,
-            report=accuracy.AccuracyReport.from_thetas(thetas),
+            report=accuracy.report_for(thetas),
             B=self.B, n=self.n,
         )
 
@@ -328,6 +333,6 @@ def shared_base_bootstrap(values: jax.Array, stat: Statistic, B: int,
     est = stat.correct(stat(values), p)
     return BootstrapResult(
         estimate=est, thetas=thetas,
-        report=accuracy.AccuracyReport.from_thetas(thetas),
+        report=accuracy.report_for(thetas),
         B=B, n=n,
     )

@@ -172,7 +172,7 @@ class DistributedEarl:
         est = self.stat.correct(est, p)
         return BootstrapResult(
             estimate=est, thetas=thetas,
-            report=accuracy.AccuracyReport.from_thetas(thetas),
+            report=accuracy.report_for(thetas),
             B=self.B, n=int(_as_2d(values).shape[0]))
 
     def estimate_with_loss_mask(self, values: jax.Array, mask: jax.Array,
@@ -193,5 +193,5 @@ class DistributedEarl:
         n_eff = int(jnp.sum(mask))
         return BootstrapResult(
             estimate=est, thetas=thetas,
-            report=accuracy.AccuracyReport.from_thetas(thetas),
+            report=accuracy.report_for(thetas),
             B=self.B, n=n_eff)

@@ -46,7 +46,19 @@ def split_params(stat: "Statistic") -> Tuple["Statistic", dict]:
     The spec carries ``_ArrayParam(shape, dtype)`` markers in place of the
     arrays, so e.g. every ``KMeansStep(cent)`` of a Lloyd loop maps to ONE
     jit cache entry; ``bind_params`` re-attaches the (possibly traced)
-    arrays inside the jitted function."""
+    arrays inside the jitted function.  ``StatisticGroup`` splits
+    member-wise, so a group wrapping a fresh same-shaped ``KMeansStep`` per
+    Lloyd iteration still hits one cache entry."""
+    if isinstance(stat, StatisticGroup):
+        specs, params = [], {}
+        for i, m in enumerate(stat.members):
+            ms, mp = split_params(m)
+            specs.append(ms)
+            if mp:
+                params[f"m{i}"] = mp
+        if not params:
+            return stat, {}
+        return stat.with_members(tuple(specs)), params
     names = stat.array_params
     if not names:
         return stat, {}
@@ -64,6 +76,12 @@ def bind_params(stat: "Statistic", params: dict) -> "Statistic":
     """Inverse of ``split_params``: re-attach traced array parameters."""
     if not params:
         return stat
+    if isinstance(stat, StatisticGroup):
+        members = list(stat.members)
+        for k, mp in params.items():
+            i = int(k[1:])
+            members[i] = bind_params(members[i], mp)
+        return stat.with_members(tuple(members))
     bound = copy.copy(stat)
     for name, v in params.items():
         object.__setattr__(bound, name, v)
@@ -171,6 +189,36 @@ class Statistic:
         del seed, values, B, n_valid
         return None
 
+    def accumulator_key(self) -> Optional[Tuple]:
+        """Identity of this statistic's *accumulator* (state + update rule),
+        or ``None`` if it can never be shared.
+
+        ``StatisticGroup`` computes ONE state per distinct key: Mean/Var/Std
+        all reduce to the same three weighted moments, and two Quantiles
+        over the same bin range share one histogram sketch — so a
+        (mean, var, median) group accumulates two states, not three, and
+        each member ``finalize``s its own view of the shared state."""
+        return None
+
+    def tile_update(self, states: State, x_tile: jax.Array,
+                    w_tile: jax.Array) -> State:
+        """Advance B-leading per-resample ``states`` by one (n-tile, weight
+        tile) block — the single-pass contract behind ``StatisticGroup``:
+        the group draws each implicit Poisson(1) weight tile ONCE (shared
+        ``weight_tile_blocks`` discipline) and hands the same (B, block_n)
+        tile to every member's ``tile_update`` in turn, so k statistics pay
+        one PRNG stream and one read of ``x_tile`` instead of k.
+
+        ``x_tile`` is (block_n, d) with padding rows zeroed; ``w_tile`` is
+        (B, block_n) with padding columns already masked to 0.  The default
+        (a vmapped ``update`` over the weight rows — the per-tile callback
+        fallback for custom statistics) is always correct and materializes
+        nothing larger than the weight tile itself; built-ins override it
+        with the same tile math as their fused kernels so a 1-member group
+        is bit-identical to the dedicated fused path."""
+        return jax.vmap(lambda s, wr: self.update(s, x_tile, wr))(
+            states, w_tile)
+
     # convenience -----------------------------------------------------------
     def __call__(self, values: jax.Array,
                  weights: Optional[jax.Array] = None) -> Result:
@@ -210,6 +258,23 @@ class _MomentStatistic(Statistic):
         w_tot, s1, s2 = ws_ops.fused_poisson_moments(seed, values, B,
                                                      n_valid=n_valid)
         return jax.vmap(self.from_moments)(w_tot, s1, s2)
+
+    def accumulator_key(self):
+        # every moment statistic accumulates the identical (w, s1, s2)
+        # state — one shared accumulator serves Mean+Var+Std+... at once.
+        return ("moments",)
+
+    def tile_update(self, states: MomentState, x_tile, w_tile) -> MomentState:
+        """Same tile math as weighted_stats._fused_scan (dot accumulation,
+        f32), so group moments are bit-identical to the fused kernel."""
+        x = x_tile.astype(jnp.float32)
+        return MomentState(
+            w=states.w + jnp.sum(w_tile, axis=1),
+            s1=states.s1 + jax.lax.dot(w_tile, x,
+                                       preferred_element_type=jnp.float32),
+            s2=states.s2 + jax.lax.dot(w_tile, x * x,
+                                       preferred_element_type=jnp.float32),
+        )
 
 
 class Mean(_MomentStatistic):
@@ -342,6 +407,33 @@ class Quantile(Statistic):
             lo=jnp.full((B, d), self.lo, jnp.float32),
             hi=jnp.full((B, d), self.hi, jnp.float32))
 
+    def accumulator_key(self):
+        # Quantiles over the same bin range share ONE histogram sketch
+        # regardless of q (q only enters finalize): a (p25, median, p99)
+        # group accumulates a single (B, d, nbins) state.
+        return ("hist", self.nbins, self.lo, self.hi)
+
+    def tile_update(self, states: HistogramState, x_tile,
+                    w_tile) -> HistogramState:
+        """Same tile math as weighted_hist._fused_hist_scan (shared
+        ``_bin_indices`` + scatter-add), so group sketches are bit-identical
+        to the fused histogram path."""
+        from repro.kernels.weighted_hist.ref import (_bin_indices,
+                                                     finite_mass_mask)
+        x = x_tile.astype(jnp.float32)                  # (bn, d)
+        bn, d = x.shape
+        B = w_tile.shape[0]
+        lo = jnp.full((d,), self.lo, jnp.float32)
+        hi = jnp.full((d,), self.hi, jnp.float32)
+        idx = _bin_indices(x, lo[None, :], hi[None, :], self.nbins)
+        flat = (idx + jnp.arange(d, dtype=jnp.int32)[None, :]
+                * self.nbins).reshape(-1)               # (bn·d,)
+        wm = (w_tile[:, :, None] * finite_mass_mask(x)[None, :, :]
+              ).reshape(B, bn * d)
+        counts = states.counts.reshape(B, d * self.nbins)
+        counts = counts.at[:, flat].add(wm).reshape(B, d, self.nbins)
+        return HistogramState(counts=counts, lo=states.lo, hi=states.hi)
+
     def finalize(self, state: HistogramState):
         cdf = jnp.cumsum(state.counts, axis=-1)
         total = cdf[..., -1:]
@@ -455,6 +547,24 @@ class KMeansStep(Statistic):
             backend=backend)
         return KMeansState(sums=sums, counts=counts, inertia=inertia)
 
+    def tile_update(self, states: KMeansState, x_tile, w_tile) -> KMeansState:
+        """Same tile math as kmeans_assign._fused_kmeans_scan (shared
+        ``_assign_tile`` + one (B, bn) @ (bn, k·d) contraction), so a group
+        member consumes the shared weight tile without any (n, k) or (B, n)
+        intermediate."""
+        from repro.kernels.kmeans_assign.kernel import _assign_tile
+        x = x_tile.astype(jnp.float32)                  # (bn, d)
+        bn, d = x.shape
+        k = self.centroids.shape[0]
+        B = w_tile.shape[0]
+        assign, min_d2 = _assign_tile(x, self.centroids, k)   # (bn, k)
+        y = (assign[:, :, None] * x[:, None, :]).reshape(bn, k * d)
+        return KMeansState(
+            sums=states.sums + (w_tile @ y).reshape(B, k, d),
+            counts=states.counts + w_tile @ assign,
+            inertia=states.inertia + w_tile @ min_d2,
+        )
+
     def finalize(self, state: KMeansState):
         return state.sums / (state.counts[:, None] + _EPS)
 
@@ -495,6 +605,111 @@ def kmeans_fit(values: jax.Array, k: int, iters: int, key: jax.Array,
                          f"k={k}")
     return _kmeans_fit_jit(x, jnp.asarray(init, jnp.float32), weights,
                            int(iters), backend)
+
+
+class StatisticGroup(Statistic):
+    """A first-class composite Statistic: k member statistics answered from
+    ONE shared pass over the sample under ONE shared Poisson(1) resample
+    stream (paper §2.1 sessions ask several questions of the same sample;
+    BlinkDB's lesson is that the systems win is answering them off one
+    shared sample pass).
+
+    State is a tuple of *slot* states — one per distinct
+    ``accumulator_key()`` (Mean+Var+Std share one MomentState; same-range
+    Quantiles share one HistogramState; KMeansStep/custom statistics get
+    their own slot) — and ``merge``/``psum_state`` compose slot-wise, so
+    every driver (bootstrap, chunked, sharded, delta, SSABE, sessions)
+    composes member-wise for free.  ``finalize``/``correct`` return a tuple
+    with one entry per MEMBER (members indexing into shared slots).
+
+    The matrix-free hot path ``fused_poisson_states`` routes through
+    ``kernels/fused_multi``: each implicit weight tile is generated ONCE
+    (same ``(seed, b-tile, n-tile)`` keying as every fused path, bit-equal
+    to ``implicit_weights(seed, B, n)``) and feeds every slot's
+    ``tile_update`` in a single pass over x — a k-statistic group pays ~1×
+    the RNG and x traffic of a 1-statistic run instead of k×.  Shared
+    weights are also a correctness upgrade: every member sees the SAME
+    resamples, so joint / compared CIs are consistent rather than
+    independently randomized.
+
+    ``backend``: None = auto (Pallas multi-kernel on TPU when every slot is
+    a moment/histogram accumulator, scan lowering elsewhere), "scan",
+    "pallas", "pallas_interpret" (kernel-eligible groups only).
+    """
+
+    _BACKENDS = (None, "scan", "pallas", "pallas_interpret")
+
+    def __init__(self, members, backend: Optional[str] = None):
+        members = tuple(members)
+        if not members:
+            raise ValueError("StatisticGroup needs at least one member")
+        for m in members:
+            if isinstance(m, StatisticGroup):
+                raise TypeError("StatisticGroup members cannot be groups "
+                                "themselves — flatten the member list")
+            if not isinstance(m, Statistic):
+                raise TypeError(f"group member {m!r} is not a Statistic")
+        if backend not in self._BACKENDS:
+            raise ValueError(f"unknown group backend: {backend!r}")
+        self.members = members
+        self.backend = backend
+        slots, keys, member_slot = [], {}, []
+        for m in members:
+            k = m.accumulator_key()
+            if k is None:
+                member_slot.append(len(slots))
+                slots.append(m)
+            elif k in keys:
+                member_slot.append(keys[k])
+            else:
+                keys[k] = len(slots)
+                member_slot.append(len(slots))
+                slots.append(m)
+        #: one representative Statistic per shared accumulator
+        self.slots = tuple(slots)
+        #: member i finalizes slot state ``self.member_slot[i]``
+        self.member_slot = tuple(member_slot)
+
+    def with_members(self, members) -> "StatisticGroup":
+        """Rebuild the group around new member instances (same length) —
+        used by split_params/bind_params to thread traced array params."""
+        return StatisticGroup(members, backend=self.backend)
+
+    # -- reducer protocol: slot-wise states, member-wise results ----------
+    def init_state(self, dim: int) -> Tuple:
+        return tuple(s.init_state(dim) for s in self.slots)
+
+    def update(self, state, values, weights=None):
+        return tuple(s.update(st, values, weights)
+                     for s, st in zip(self.slots, state))
+
+    def merge(self, a, b):
+        return tuple(s.merge(ai, bi)
+                     for s, ai, bi in zip(self.slots, a, b))
+
+    def psum_state(self, state, axis_names):
+        return tuple(s.psum_state(st, axis_names)
+                     for s, st in zip(self.slots, state))
+
+    def tile_update(self, states, x_tile, w_tile):
+        """The group IS the shared-tile consumer: one weight tile in, every
+        slot advanced — also what makes groups nest inside the chunked /
+        sharded scan bodies unchanged."""
+        return tuple(s.tile_update(st, x_tile, w_tile)
+                     for s, st in zip(self.slots, states))
+
+    def finalize(self, state) -> Tuple:
+        return tuple(m.finalize(state[slot])
+                     for m, slot in zip(self.members, self.member_slot))
+
+    def correct(self, result, p: float) -> Tuple:
+        return tuple(m.correct(r, p) for m, r in zip(self.members, result))
+
+    def fused_poisson_states(self, seed, values, B, n_valid=None):
+        from repro.kernels.fused_multi import ops as fm_ops
+        return fm_ops.fused_poisson_multi(self, seed, values, B,
+                                          n_valid=n_valid,
+                                          backend=self.backend)
 
 
 class MeanLoss(Mean):

@@ -25,8 +25,8 @@ from repro.core.reduce_api import Statistic, _as_2d
 
 @dataclasses.dataclass
 class EarlyResult:
-    result: Any                 # corrected estimate
-    cv: float                   # achieved error
+    result: Any                 # corrected estimate (tuple for groups)
+    cv: float                   # achieved error (worst member for groups)
     ci_lo: Any
     ci_hi: Any
     n_used: int
@@ -38,6 +38,9 @@ class EarlyResult:
     history: List[dict]
     wall_time_s: float
     ssabe: Optional[ssabe_mod.SSABEResult]
+    #: StatisticGroup runs: one AccuracyReport per member, all derived from
+    #: the SAME shared resamples (joint CIs); None otherwise / on fallback.
+    reports: Optional[tuple] = None
 
 
 class EarlSession:
@@ -86,11 +89,21 @@ class EarlSession:
         N = self.sampler.N
         values = self.sampler.take(0, N)
         res = self.stat(values)
+        # groups always get per-member reports, even on the exact-job
+        # fallback (degenerate: cv 0, CI collapsed onto the exact answer),
+        # so consumers can iterate EarlyResult.reports unconditionally.
+        reports = None
+        if isinstance(res, tuple):
+            from repro.core.accuracy import AccuracyReport
+            reports = tuple(
+                AccuracyReport(cv=0.0, se=0.0, rel_halfwidth=0.0,
+                               ci_lo=r, ci_hi=r, boot_mean=r)
+                for r in res)
         return EarlyResult(
             result=res, cv=0.0, ci_lo=res, ci_hi=res, n_used=N, N=N,
             fraction=1.0, B=1, iterations=len(history), fell_back=True,
             history=history, wall_time_s=time.perf_counter() - t0,
-            ssabe=None)
+            ssabe=None, reports=reports)
 
     def run(self, key: jax.Array) -> EarlyResult:
         t0 = time.perf_counter()
@@ -130,9 +143,16 @@ class EarlSession:
             # extend folds Δs in, O(Δn)); recomputing stat(take(0, n_have))
             # here would re-read the whole prefix every round, O(n).
             res: BootstrapResult = poisson_delta_result(pd, p=p)
-            history.append(dict(iteration=iterations, n=n_have, B=B,
-                                cv=res.cv,
-                                t=time.perf_counter() - t0))
+            # for a StatisticGroup, res.cv is the WORST member's c_v
+            # (GroupAccuracyReport), so the sigma gate below stops only
+            # when ALL members meet the target; the per-member trace is
+            # recorded so sessions can see who the straggler was.
+            entry = dict(iteration=iterations, n=n_have, B=B, cv=res.cv,
+                         t=time.perf_counter() - t0)
+            member_reports = getattr(res.report, "members", None)
+            if member_reports is not None:
+                entry["member_cvs"] = tuple(r.cv for r in member_reports)
+            history.append(entry)
             if res.cv <= self.sigma or n_have >= self.max_fraction * N:
                 return EarlyResult(
                     result=res.estimate, cv=res.cv,
@@ -140,7 +160,8 @@ class EarlSession:
                     n_used=n_have, N=N, fraction=p, B=B,
                     iterations=iterations, fell_back=False,
                     history=history,
-                    wall_time_s=time.perf_counter() - t0, ssabe=est)
+                    wall_time_s=time.perf_counter() - t0, ssabe=est,
+                    reports=member_reports)
             if n_have >= N:
                 return self._full_job(t0, history)
             n_target = min(N, int(n_have * self.growth))

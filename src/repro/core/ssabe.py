@@ -32,6 +32,16 @@ from repro.core.delta import poisson_delta_extend, poisson_delta_init, \
 from repro.core.reduce_api import Statistic, _as_2d
 
 
+def _cv_of(thetas) -> float:
+    """c_v of a theta distribution — for a StatisticGroup's tuple of
+    per-member thetas this is the WORST member, so phase A/B converge only
+    once every member of the group is stable (the group's AES contract)."""
+    if isinstance(thetas, (tuple, list)):
+        return max(float(accuracy.coefficient_of_variation(t))
+                   for t in thetas)
+    return float(accuracy.coefficient_of_variation(thetas))
+
+
 @dataclasses.dataclass
 class SSABEResult:
     B: int                      # estimated number of bootstraps
@@ -103,7 +113,7 @@ def estimate_B(values: jax.Array, stat: Statistic, tau: float,
     prev_cv = None
     chosen = B_max
     for B in candidates:
-        cv = float(accuracy.coefficient_of_variation(thetas_full[:B]))
+        cv = _cv_of(jax.tree_util.tree_map(lambda t: t[:B], thetas_full))
         history.append((B, cv))
         if prev_cv is not None and abs(cv - prev_cv) < tau:
             chosen = B

@@ -1,0 +1,140 @@
+"""Public wrapper for the fused multi-statistic bootstrap pass.
+
+``fused_poisson_multi`` computes, for every slot accumulator of a
+``StatisticGroup``, the B per-resample states under ONE shared implicit
+Poisson(1) weight stream and ONE pass over x: each (block_b, block_n)
+weight tile is generated once — same ``weight_tile_blocks`` clamp and
+``(seed, b-tile, n-tile)`` threefry keying as every other fused path, so
+the implicit matrix is bit-identical to
+``weighted_stats.ops.implicit_weights(seed, B, n)`` — and handed to every
+slot's per-tile accumulator in turn.
+
+Lowerings (``backend``):
+
+* ``"scan"`` (CPU default) — a single ``lax.scan`` over n-tiles whose body
+  draws the weight tile via the shared ``implicit_weight_tile`` and calls
+  each slot's ``Statistic.tile_update``: moment slots run the
+  weighted_stats dot math, histogram slots the weighted_hist scatter math,
+  KMeansStep the kmeans_assign tile math, and custom statistics fall back
+  to a vmapped ``update`` over the SAME cached tile — nothing ever
+  regenerates or re-reads.
+* ``"pallas"`` / ``"pallas_interpret"`` — kernels/fused_multi/kernel.py,
+  available when every slot is a moment or histogram accumulator (the MXU
+  shapes); groups with KMeansStep/custom slots use the scan lowering.
+* ``None`` — auto: pallas on TPU when kernel-eligible, scan elsewhere.
+
+NOT internally jitted: the callers (``_bootstrap_jit``, ``_pd_extend_jit``,
+the chunked/sharded scan bodies) already trace it inside their jits, and a
+StatisticGroup carrying traced member parameters (KMeansStep centroids)
+must not be captured as a jit-static argument.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_multi.kernel import fused_poisson_multi_kernel
+from repro.kernels.weighted_stats.ops import (_pad_to, implicit_weight_tile,
+                                              weight_tile_blocks)
+
+
+def _kernel_slots(group) -> Tuple[bool, tuple]:
+    """(eligible, hist slot list) — the Pallas kernel handles at most one
+    moment slot plus histogram slots."""
+    from repro.core.reduce_api import Quantile, _MomentStatistic
+    hists = tuple(s for s in group.slots if isinstance(s, Quantile))
+    ok = all(isinstance(s, (Quantile, _MomentStatistic))
+             for s in group.slots)
+    return ok, hists
+
+
+def _multi_scan(slots, seed, n_valid, xp, B: int, block_b: int,
+                block_n: int):
+    """CPU lowering: one scan, one weight tile per step, every slot fed."""
+    n, d = xp.shape
+    nt = n // block_n
+    xc = xp.reshape(nt, block_n, d)
+    init = tuple(jax.vmap(lambda _, s=s: s.init_state(d))(jnp.arange(B))
+                 for s in slots)
+
+    def body(states, t):
+        w = implicit_weight_tile(seed, n_valid, t, B, block_b, block_n)
+        xt = xc[t]
+        return tuple(s.tile_update(st, xt, w)
+                     for s, st in zip(slots, states)), None
+
+    states, _ = jax.lax.scan(body, init, jnp.arange(nt, dtype=jnp.int32))
+    return states
+
+
+def fused_poisson_multi(group, seed, values: jax.Array, B: int,
+                        n_valid=None, backend: str | None = None,
+                        block_b: int = 128, block_n: int = 512) -> Tuple:
+    """Slot-ordered tuple of B-leading per-resample states for ``group``
+    under one shared in-kernel Poisson(1) weight stream.
+
+    ``n_valid`` (traced scalar, default n) masks weight columns >= n_valid
+    to zero, exactly as in every other fused path.  The result is what
+    ``StatisticGroup.fused_poisson_states`` returns — its state pytree.
+    """
+    from repro.core.reduce_api import HistogramState, _MomentStatistic
+    if values.ndim == 1:
+        values = values[:, None]
+    n, d = values.shape
+    eligible, hist_slots = _kernel_slots(group)
+    if backend is None:
+        backend = ("pallas" if jax.default_backend() == "tpu" and eligible
+                   else "scan")
+    if backend not in ("scan", "pallas", "pallas_interpret"):
+        raise ValueError(f"unknown fused_poisson_multi backend: {backend!r}")
+    if backend != "scan" and not eligible:
+        raise ValueError(
+            "the fused_multi Pallas kernel covers moment/histogram slots "
+            "only; groups with KMeansStep or custom statistics use "
+            "backend='scan' (same shared weight tiles, via tile_update)")
+    if n_valid is None:
+        n_valid = n
+
+    bb, bn = weight_tile_blocks(B, n, block_b, block_n)
+    Bp = B + (-B) % bb
+    seed = jnp.asarray(seed, jnp.int32)
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+    xp = _pad_to(values.astype(jnp.float32), bn, 0)
+
+    if backend == "scan":
+        states = _multi_scan(group.slots, seed, n_valid, xp, Bp, bb, bn)
+        return jax.tree_util.tree_map(lambda a: a[:B], states)
+
+    # ---- Pallas kernel path: moments + hist slots only ------------------
+    kinds = tuple("moments" if isinstance(s, _MomentStatistic) else "hist"
+                  for s in group.slots)
+    xpp = _pad_to(xp, 128, 1)
+    los = tuple(_pad_to(jnp.full((1, d), s.lo, jnp.float32), 128, 1)
+                for s in hist_slots)
+    his = tuple(_pad_to(jnp.full((1, d), s.hi, jnp.float32), 128, 1,
+                        value=1.0)              # nonzero padding span
+                for s in hist_slots)
+    outs = fused_poisson_multi_kernel(
+        seed, n_valid, xpp, los, his, Bp, kinds=kinds,
+        hist_nbins=tuple(s.nbins for s in hist_slots), d_valid=d,
+        block_b=bb, block_n=bn, interpret=(backend != "pallas"),
+        use_tpu_prng=(backend == "pallas"))
+
+    states, oi = [], 0
+    for slot, kind in zip(group.slots, kinds):
+        if kind == "moments":
+            wt, s1, s2 = outs[oi:oi + 3]
+            oi += 3
+            states.append(jax.vmap(slot.from_moments)(
+                wt[:B, 0], s1[:B, :d], s2[:B, :d]))
+        else:
+            ob = slot.nbins + (-slot.nbins) % 128
+            counts = outs[oi].reshape(Bp, d, ob)[:B, :, :slot.nbins]
+            oi += 1
+            states.append(HistogramState(
+                counts=counts,
+                lo=jnp.full((B, d), slot.lo, jnp.float32),
+                hi=jnp.full((B, d), slot.hi, jnp.float32)))
+    return tuple(states)

@@ -136,6 +136,100 @@ def _fph_kernel(scal_ref, x_ref, lo_ref, hi_ref, out_ref, *, nbins: int,
             w, onehot, preferred_element_type=jnp.float32)
 
 
+def _fph_binblocked_kernel(scal_ref, xt_ref, lo_ref, hi_ref, out_ref, *,
+                           nbins: int, nb_j: int, block_bins: int,
+                           block_b: int, block_n: int, use_tpu_prng: bool):
+    """Output-tiled variant of ``_fph_kernel``: grid axis 1 enumerates
+    (dimension, bin-block) pairs ``cj = c·nb_j + j`` so each kernel
+    instance holds only a (block_b, block_bins) slice of the output in
+    VMEM instead of the whole (block_b, d·out_bins) row block — the
+    ROADMAP "TPU tiling of the fused hist kernel's output" knob for large
+    d·nbins.
+
+    The weight tile is keyed by (seed, i, t) only — regenerating it per
+    (c, j) cell trades PRNG recompute for VMEM residency, and keeps the
+    implicit weight matrix bit-identical to every other fused path.  x
+    arrives TRANSPOSED as (dp, n) so the value row for dimension c is
+    selected by the BlockSpec (no traced lane slicing in-kernel); lo/hi
+    arrive as (dp, 1) blocks selected the same way.
+    """
+    i = pl.program_id(0)        # B-tile index
+    cj = pl.program_id(1)       # flattened (dim, bin-block) index
+    t = pl.program_id(2)        # n-tile index (contraction)
+    j = cj % nb_j               # bin-block within the dimension
+
+    w = _poisson_tile(scal_ref[0], i, t, (block_b, block_n), scal_ref[1],
+                      block_n, use_tpu_prng)                  # (bB, bn)
+    x = xt_ref[...].astype(jnp.float32)                       # (1, bn)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.zeros(out_ref.shape, out_ref.dtype)
+
+    # bin against the TRUE nbins, then localize into this block's window
+    idx = _bin_indices(x, lo_ref[...], hi_ref[...], nbins)    # (1, bn)
+    mass = finite_mass_mask(x)                                # (1, bn)
+    bn = x.shape[1]
+    local = (idx - j * block_bins).reshape(bn, 1)
+    bins = jax.lax.broadcasted_iota(jnp.int32, (bn, block_bins), 1)
+    onehot = (local == bins).astype(jnp.float32) * mass.reshape(bn, 1)
+    out_ref[...] += jax.lax.dot(w, onehot,
+                                preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("B", "nbins", "d_valid", "block_b",
+                                    "block_n", "block_bins", "interpret",
+                                    "use_tpu_prng"))
+def fused_poisson_hist_binblocked_kernel(seed: jax.Array, n_valid: jax.Array,
+                                         values_t: jax.Array, lo: jax.Array,
+                                         hi: jax.Array, B: int, nbins: int,
+                                         d_valid: int, block_bins: int,
+                                         block_b: int = 128,
+                                         block_n: int = 512,
+                                         interpret: bool = True,
+                                         use_tpu_prng: bool = False
+                                         ) -> jax.Array:
+    """Raw entry for the output-tiled fused hist kernel.
+
+    values_t is the TRANSPOSED (dp, n) value matrix (n pre-padded to
+    block_n, dp the lane-padded dimension count); lo/hi are (dp, 1).
+    ``block_bins`` (a 128 multiple) is the per-instance output window —
+    out_bins = nbins padded up to a block_bins multiple, nb_j = out_bins /
+    block_bins output blocks per dimension (>= 2 is the interesting
+    regime).  Returns (B, d_valid·out_bins) f32; callers reshape to
+    (B, d_valid, out_bins) and slice [..., :nbins] (bins past the true
+    nbins stay empty: binning is against the true nbins).
+    """
+    dp, n = values_t.shape
+    assert B % block_b == 0 and n % block_n == 0, ((B, n), (block_b, block_n))
+    assert block_bins % 128 == 0 and block_bins > 0, block_bins
+    assert d_valid <= dp, (d_valid, dp)
+    out_bins = nbins + (-nbins) % block_bins
+    nb_j = out_bins // block_bins
+
+    kern = functools.partial(_fph_binblocked_kernel, nbins=nbins, nb_j=nb_j,
+                             block_bins=block_bins, block_b=block_b,
+                             block_n=block_n, use_tpu_prng=use_tpu_prng)
+    scal = jnp.stack([jnp.asarray(seed, jnp.int32),
+                      jnp.asarray(n_valid, jnp.int32)])
+    grid = (B // block_b, d_valid * nb_j, n // block_n)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, block_n), lambda i, cj, t: (cj // nb_j, t)),
+            pl.BlockSpec((1, 1), lambda i, cj, t: (cj // nb_j, 0)),
+            pl.BlockSpec((1, 1), lambda i, cj, t: (cj // nb_j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_bins),
+                               lambda i, cj, t: (i, cj)),
+        out_shape=jax.ShapeDtypeStruct((B, d_valid * out_bins), jnp.float32),
+        interpret=interpret,
+    )(scal, values_t, lo, hi)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("B", "nbins", "d_valid", "block_b",
                                     "block_n", "interpret", "use_tpu_prng"))

@@ -20,8 +20,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.weighted_hist.kernel import (fused_poisson_hist_kernel,
-                                                weighted_hist_kernel)
+from repro.kernels.weighted_hist.kernel import (
+    fused_poisson_hist_binblocked_kernel, fused_poisson_hist_kernel,
+    weighted_hist_kernel)
 from repro.kernels.weighted_hist.ref import (_bin_indices, finite_mass_mask,
                                              weighted_hist_scatter_ref)
 from repro.kernels.weighted_stats.ops import (_pad_to, implicit_weight_tile,
@@ -100,7 +101,8 @@ def _fused_hist_scan(seed, n_valid, xp, lo, hi, B, nbins, block_b, block_n):
 def fused_poisson_hist(seed, values: jax.Array, lo, hi, nbins: int, B: int,
                        backend: str | None = None,
                        block_b: int = 128, block_n: int = 512,
-                       n_valid=None) -> jax.Array:
+                       n_valid=None,
+                       block_bins: int | None = None) -> jax.Array:
     """Matrix-free bootstrap histogram sketch from an int32 seed.
 
     values (n, d) or (n,), lo/hi scalar or (d,) -> (B, d, nbins) f32 counts
@@ -113,6 +115,15 @@ def fused_poisson_hist(seed, values: jax.Array, lo, hi, nbins: int, B: int,
     ``n_valid`` (traced scalar, default n) masks weight columns >= n_valid
     to zero — without it the zero-padded tail would land real mass in each
     dimension's bin 0.
+
+    ``block_bins`` (Pallas backends only; a 128 multiple) tiles the
+    d·nbins OUTPUT axis: each kernel instance keeps only a
+    (block_b, block_bins) output window in VMEM instead of the whole
+    (block_b, d·out_bins) row block — the knob for large d·nbins where the
+    default kernel's output block would not fit VMEM.  The weight tile is
+    regenerated per output window from the same (seed, b-tile, n-tile)
+    keying, so results are identical; the trade is PRNG recompute for
+    output residency.  ``None`` (default) keeps the single-block kernel.
 
     backend: None = auto (pallas on TPU, scan elsewhere), "pallas",
     "pallas_interpret", "scan".
@@ -142,6 +153,16 @@ def fused_poisson_hist(seed, values: jax.Array, lo, hi, nbins: int, B: int,
 
     # lane-width discipline (same as the other fused kernels): x/lo/hi are
     # padded to 128 lanes; only the d real columns are ever contracted.
+    if block_bins is not None:
+        # output-tiled variant: x transposed so the BlockSpec (not a traced
+        # lane slice) selects each dimension's value row.
+        counts = fused_poisson_hist_binblocked_kernel(
+            seed, n_valid, xp.T, lo[:, None], hi[:, None], Bp, nbins,
+            d_valid=d, block_bins=block_bins, block_b=bb, block_n=bn,
+            interpret=(backend != "pallas"),
+            use_tpu_prng=(backend == "pallas"))
+        out_bins = nbins + (-nbins) % block_bins
+        return counts.reshape(Bp, d, out_bins)[:B, :, :nbins]
     xpp = _pad_to(xp, 128, 1)
     lop = _pad_to(lo[None, :], 128, 1)
     hip = _pad_to(hi[None, :], 128, 1, value=1.0)  # nonzero padding span

@@ -143,3 +143,53 @@ def test_shard_map_moe_matches_gspmd(subproc_result):
     """Group-local routing (H2) == global routing in the no-drop regime."""
     r = subproc_result
     assert abs(r["moe_gspmd_loss"] - r["moe_shard_map_loss"]) < 2e-3
+
+
+class TestFusedPrefixMaskGuard:
+    """ROADMAP "known modeling limits" regression: the fused backend
+    expresses masking as an n_valid prefix count, so an arbitrary interior
+    mask would silently weight the WRONG rows — DistributedEarl must refuse
+    loudly instead of computing wrong states (runs in-process on a 1-device
+    mesh; the 8-device behavior is identical since the check is host-side
+    per shard slice)."""
+
+    @staticmethod
+    def _earl(backend):
+        import jax
+        import numpy as np
+        from jax.sharding import Mesh
+
+        from repro.core import DistributedEarl, Mean
+        mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+        return DistributedEarl(mesh, Mean(), B=8, backend=backend)
+
+    def test_interior_mask_raises_with_named_limitation(self):
+        import jax
+        import jax.numpy as jnp
+        earl = self._earl("fused_rng")
+        x = jnp.arange(16.0)
+        mask = jnp.ones((16,)).at[3].set(0.0)          # interior zero
+        with pytest.raises(ValueError, match="prefix mask"):
+            earl.estimate_with_loss_mask(x, mask, jax.random.PRNGKey(0))
+
+    def test_prefix_mask_accepted(self):
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        earl = self._earl("fused_rng")
+        x = jnp.arange(16.0) + 1.0
+        mask = (jnp.arange(16) < 10).astype(jnp.float32)
+        res = earl.estimate_with_loss_mask(x, mask, jax.random.PRNGKey(0))
+        ref = float(jnp.mean(x[:10]))
+        assert abs(float(np.ravel(res.estimate)[0]) - ref) < 1e-5
+
+    def test_default_backend_still_handles_interior_masks(self):
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        earl = self._earl(None)
+        x = jnp.arange(16.0) + 1.0
+        mask = jnp.ones((16,)).at[3].set(0.0)
+        res = earl.estimate_with_loss_mask(x, mask, jax.random.PRNGKey(0))
+        ref = float(jnp.sum(x * mask) / jnp.sum(mask))
+        assert abs(float(np.ravel(res.estimate)[0]) - ref) < 1e-5

@@ -25,7 +25,8 @@ def test_kernelbench_smoke_runs_and_writes_nothing():
 
     stamps = {}
     for p in (kernelbench._BENCH_JSON, kernelbench._BENCH_KMEANS_JSON,
-              kernelbench._BENCH_QUANTILE_JSON):
+              kernelbench._BENCH_QUANTILE_JSON,
+              kernelbench._BENCH_MULTI_JSON):
         stamps[p] = p.stat().st_mtime_ns if p.exists() else None
 
     kernelbench.run(smoke=True)
@@ -33,3 +34,31 @@ def test_kernelbench_smoke_runs_and_writes_nothing():
     for p, stamp in stamps.items():
         now = p.stat().st_mtime_ns if p.exists() else None
         assert now == stamp, f"smoke mode must not write {p.name}"
+
+
+def test_check_regression_gate(tmp_path):
+    """The nightly regression checker passes on identical BENCH jsons and
+    fails when a headline speedup drops below its floor/ratio."""
+    import json
+    import pathlib
+    import shutil
+
+    sys.path.insert(0, _ROOT)
+    try:
+        from benchmarks import check_regression
+    finally:
+        sys.path.remove(_ROOT)
+
+    root = pathlib.Path(_ROOT)
+    base, cur = tmp_path / "base", tmp_path / "cur"
+    base.mkdir()
+    cur.mkdir()
+    for p in root.glob("BENCH_*.json"):
+        shutil.copy(p, base / p.name)
+        shutil.copy(p, cur / p.name)
+    assert check_regression.check(base, cur, 0.5) == []
+
+    d = json.loads((cur / "BENCH_multi.json").read_text())
+    d["speedup_group_vs_sequential"] = 0.9      # below the 1.5 floor
+    (cur / "BENCH_multi.json").write_text(json.dumps(d))
+    assert check_regression.check(base, cur, 0.5)

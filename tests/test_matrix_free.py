@@ -447,6 +447,45 @@ class TestFusedQuantile:
                                    rtol=1e-5, atol=1e-4)
 
 
+class TestBinBlockedHist:
+    """ROADMAP TPU-tiling knob: ``block_bins`` tiles the d·nbins OUTPUT
+    axis of the fused hist kernel so one (block_b, block_bins) window is
+    VMEM-resident per grid cell instead of the whole (block_b, d·out_bins)
+    block.  Results must be identical to the untiled kernel and the scan
+    lowering — the weight tile keying is (seed, b-tile, n-tile) only."""
+
+    @pytest.mark.parametrize("n,d,nbins,block_bins", [
+        (700, 2, 256, 128),    # 2 output blocks per dim
+        (513, 3, 300, 128),    # nbins not a block multiple: 3 blocks
+        (1000, 1, 512, 256),   # d=1 (dim-blocking alone could not tile)
+    ])
+    def test_interpret_matches_scan_with_multiple_output_blocks(
+            self, key, n, d, nbins, block_bins):
+        out_bins = nbins + (-nbins) % block_bins
+        assert out_bins // block_bins >= 2, "shape must exercise >=2 blocks"
+        x = jax.random.uniform(key, (n, d)) * 0.9 + 0.05
+        ref = wh_ops.fused_poisson_hist(42, x, 0.0, 1.0, nbins, 16,
+                                        backend="scan")
+        out = wh_ops.fused_poisson_hist(42, x, 0.0, 1.0, nbins, 16,
+                                        backend="pallas_interpret",
+                                        block_bins=block_bins)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-4)
+
+    def test_matches_untiled_kernel_and_masks_padding(self, key):
+        n, pad = 700, 1024 - 700
+        x = jax.random.uniform(key, (n, 1)) * 0.9 + 0.05
+        xp = jnp.pad(x, ((0, pad), (0, 0)))
+        untiled = wh_ops.fused_poisson_hist(3, x, 0.0, 1.0, 256, 16,
+                                            backend="pallas_interpret")
+        tiled = wh_ops.fused_poisson_hist(3, xp, 0.0, 1.0, 256, 16,
+                                          n_valid=n,
+                                          backend="pallas_interpret",
+                                          block_bins=128)
+        np.testing.assert_allclose(np.asarray(tiled), np.asarray(untiled),
+                                   rtol=1e-6)
+
+
 class TestHistEdgePolicy:
     """Out-of-range/NaN policy (clip into edge bins, drop NaN), identical
     across scatter ref, one-hot oracle, Pallas sketch and fused paths."""

@@ -38,7 +38,8 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.core import (DistributedEarl, KMeansStep, Mean, Quantile,
-                        bootstrap, bootstrap_chunked, sharded_fused_states)
+                        StatisticGroup, Var, bootstrap, bootstrap_chunked,
+                        sharded_fused_states)
 from repro.core.bootstrap import (fused_resample_states, offset_seed,
                                   seed_from_key)
 from repro.core.delta import (poisson_delta_extend, poisson_delta_init,
@@ -68,6 +69,21 @@ for name, stat in stats.items():
     s_mesh = sharded_fused_states(stat, 77, jnp.asarray(x), 32, mesh=mesh)
     s_one = sharded_fused_states(stat, 77, jnp.asarray(x), 32, nshards=8)
     out[f"bitwise_{name}"] = leaves_equal(s_mesh, s_one)
+
+# --- StatisticGroup: bitwise under mesh sharding (ISSUE-5) --------------
+grp = StatisticGroup((Mean(), Var(),
+                      Quantile(0.5, nbins=256, lo=0.0, hi=20.0),
+                      KMeansStep(jnp.array([[9.0, 9.0], [11.0, 11.0]]))))
+g_mesh = sharded_fused_states(grp, 77, jnp.asarray(x), 32, mesh=mesh)
+g_one = sharded_fused_states(grp, 77, jnp.asarray(x), 32, nshards=8)
+out["bitwise_group"] = leaves_equal(g_mesh, g_one)
+# and the sharded group's member states equal each member's own sharded
+# run (one shared stream -> same resamples, even across the mesh)
+g_fin = jax.vmap(grp.finalize)(g_mesh)
+for i, m in enumerate(grp.members):
+    m_mesh = sharded_fused_states(m, 77, jnp.asarray(x), 32, mesh=mesh)
+    out[f"bitwise_group_member{i}"] = leaves_equal(
+        jax.vmap(m.finalize)(m_mesh), g_fin[i])
 
 # --- bitwise: chunked sharded (streams keyed (base, shard, chunk)) ------
 st_m = sharded_fused_states(Mean(), 77, jnp.asarray(x), 32, mesh=mesh,
@@ -170,6 +186,15 @@ def test_sharded_states_bitwise_equal_single_device(subproc_result, fam):
 
 def test_chunked_sharded_bitwise_equal(subproc_result):
     assert subproc_result["bitwise_chunked"]
+
+
+def test_group_bitwise_under_mesh(subproc_result):
+    """ISSUE-5: a StatisticGroup's sharded states equal the single-device
+    oracle bitwise, and every member's finalized thetas equal the member's
+    own sharded run (one shared stream across the mesh)."""
+    assert subproc_result["bitwise_group"]
+    for i in range(4):
+        assert subproc_result[f"bitwise_group_member{i}"], f"member {i}"
 
 
 def test_single_shard_mesh_matches_unsharded_path(subproc_result):
