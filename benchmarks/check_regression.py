@@ -31,6 +31,7 @@ METRICS = {
     "BENCH_kmeans.json": ("speedup_fused_vs_materialized",),
     "BENCH_quantile.json": ("speedup_fused_vs_materialized",),
     "BENCH_multi.json": ("speedup_group_vs_sequential",),
+    "BENCH_stream.json": ("speedup_stream_vs_serial",),
 }
 
 #: absolute floors: the fused paths must stay faster than their baselines
@@ -40,6 +41,9 @@ FLOORS = {
     "speedup_fused_vs_materialized": 1.0,
     "speedup_fused_vs_naive": 1.0,
     "speedup_group_vs_sequential": 1.5,
+    # ISSUE-6: streaming must beat the non-overlapped serial
+    # transfer+compute pipeline by 30% even on a 1-core host
+    "speedup_stream_vs_serial": 1.3,
 }
 
 #: (file, dotted path) -> exact required value
@@ -47,6 +51,7 @@ INVARIANTS = {
     ("BENCH_bootstrap.json", "peak_weight_bytes.fused_rng"): 0,
     ("BENCH_multi.json", "member_thetas_bitwise_equal_to_sequential"): True,
     ("BENCH_multi.json", "weight_streams.group"): 1,
+    ("BENCH_stream.json", "thetas_bitwise_equal_to_chunked"): True,
 }
 
 

@@ -28,6 +28,8 @@ from repro.core.reduce_api import (Count, KMeansState, KMeansStep, Mean,
                                    Var, kmeans_fit)
 from repro.core.session import EarlSession, EarlyResult
 from repro.core.ssabe import SSABEResult, ssabe
+from repro.core.streaming import (StreamingBootstrapResult, StreamReport,
+                                  bootstrap_streaming)
 
 __all__ = [
     "AccuracyReport", "GroupAccuracyReport", "coefficient_of_variation",
@@ -44,4 +46,5 @@ __all__ = [
     "MomentState", "Quantile", "Statistic", "StatisticGroup", "Std",
     "Sum", "Var", "kmeans_fit",
     "EarlSession", "EarlyResult", "SSABEResult", "ssabe",
+    "StreamingBootstrapResult", "StreamReport", "bootstrap_streaming",
 ]

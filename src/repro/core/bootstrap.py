@@ -52,6 +52,7 @@ reduce in the same shard order) — the single-device path stays the oracle.
 from __future__ import annotations
 
 import dataclasses
+import inspect
 from functools import partial
 from typing import Optional
 
@@ -109,7 +110,7 @@ def offset_seed(base_seed, i):
 
 
 def fused_resample_states(stat: Statistic, seed, x2: jax.Array, B: int,
-                          n_valid=None):
+                          n_valid=None, valid_mask=None):
     """B-leading pytree of per-resample states for ``x2`` under implicit
     in-kernel Poisson(1) weights (the matrix-free hot path).
 
@@ -118,14 +119,29 @@ def fused_resample_states(stat: Statistic, seed, x2: jax.Array, B: int,
     statistics fall back to materializing the same implicit weights.  The
     result is a *delta* state: ``merge`` it into running states
     (delta/chunked) or ``finalize`` it directly (one-shot bootstrap).
+
+    ``valid_mask`` (traced (n,) f32 of exact 0.0/1.0) multiplies the
+    implicit weights — arbitrary interior validity holes.  Custom
+    statistics whose ``fused_poisson_states`` predates the kwarg are
+    detected by signature and routed to the materialized fallback (same
+    implicit weights, mask applied to the matrix) rather than crashing.
     """
-    states = stat.fused_poisson_states(seed, x2, B, n_valid=n_valid)
+    if valid_mask is None:
+        states = stat.fused_poisson_states(seed, x2, B, n_valid=n_valid)
+    elif "valid_mask" in inspect.signature(
+            stat.fused_poisson_states).parameters:
+        states = stat.fused_poisson_states(seed, x2, B, n_valid=n_valid,
+                                           valid_mask=valid_mask)
+    else:
+        states = None
     if states is not None:
         return states
     from repro.kernels.weighted_stats import ops as ws_ops
     w = ws_ops.implicit_weights(seed, B, x2.shape[0])
     if n_valid is not None:
         w = w * (jnp.arange(x2.shape[0]) < n_valid).astype(w.dtype)[None, :]
+    if valid_mask is not None:
+        w = w * jnp.asarray(valid_mask, w.dtype).reshape(1, -1)
     dim = x2.shape[1]
     return jax.vmap(lambda wr: stat.update(stat.init_state(dim), x2, wr))(w)
 
@@ -135,7 +151,8 @@ def fused_resample_states(stat: Statistic, seed, x2: jax.Array, B: int,
 # ----------------------------------------------------------------------------
 def _shard_local_states(stat: Statistic, base_seed, x_local: jax.Array,
                         B: int, shard_idx, nshards: int, n_valid_local,
-                        chunk: Optional[int] = None, step=0):
+                        chunk: Optional[int] = None, step=0,
+                        with_estimate: bool = False):
     """Fused states for ONE shard's local rows.
 
     The shard's stream seed for local chunk c is
@@ -147,33 +164,49 @@ def _shard_local_states(stat: Statistic, base_seed, x_local: jax.Array,
     exclusive (enforced by ``sharded_fused_states``): combining them would
     alias step s's chunk c+1 stream with step s+1's chunk c stream.
     ``chunk=None`` processes the local rows in one fused call.
+
+    ``with_estimate=True`` additionally folds the shard's rows into ONE
+    unweighted (all-ones within n_valid) estimate state in the same pass,
+    returning ``(states, est_state)`` — the chunked/streaming drivers'
+    single-read estimate (no second pass over the data).
     """
+    n_local, dim = x_local.shape
     if chunk is None:
         seed = offset_seed(base_seed, step * nshards + shard_idx)
-        return fused_resample_states(stat, seed, x_local, B,
-                                     n_valid=n_valid_local)
-    n_local, dim = x_local.shape
+        states = fused_resample_states(stat, seed, x_local, B,
+                                       n_valid=n_valid_local)
+        if not with_estimate:
+            return states
+        vi = (jnp.arange(n_local) < n_valid_local).astype(jnp.float32)
+        est = stat.update(stat.init_state(dim), x_local, vi)
+        return states, est
     pad = (-n_local) % chunk
     xp = jnp.pad(x_local, ((0, pad), (0, 0)))
     nchunks = xp.shape[0] // chunk
     xc = xp.reshape(nchunks, chunk, dim)
     init = jax.vmap(lambda _: stat.init_state(dim))(jnp.arange(B))
+    init_est = stat.init_state(dim)
 
-    def body(states, c):
+    def body(carry, c):
+        states, est = carry
         nv = jnp.clip(n_valid_local - c * chunk, 0, chunk)
         seed = offset_seed(base_seed, (step + c) * nshards + shard_idx)
         delta = fused_resample_states(stat, seed, xc[c], B, n_valid=nv)
-        return jax.vmap(stat.merge)(states, delta), None
+        if with_estimate:
+            vi = (jnp.arange(chunk) < nv).astype(jnp.float32)
+            est = stat.update(est, xc[c], vi)
+        return (jax.vmap(stat.merge)(states, delta), est), None
 
-    states, _ = jax.lax.scan(body, init,
-                             jnp.arange(nchunks, dtype=jnp.int32))
-    return states
+    (states, est), _ = jax.lax.scan(body, (init, init_est),
+                                    jnp.arange(nchunks, dtype=jnp.int32))
+    return (states, est) if with_estimate else states
 
 
 def sharded_fused_states(stat: Statistic, base_seed, x2: jax.Array, B: int,
                          mesh=None, data_axis: str = "data",
                          nshards: Optional[int] = None,
-                         chunk: Optional[int] = None, step=0):
+                         chunk: Optional[int] = None, step=0,
+                         with_estimate: bool = False):
     """B-leading pytree of fused per-resample states for ``x2``, sharded
     over ``mesh``'s ``data_axis`` (the multi-device matrix-free hot path).
 
@@ -192,6 +225,12 @@ def sharded_fused_states(stat: Statistic, base_seed, x2: jax.Array, B: int,
     fresh streams per extension.  They are mutually exclusive: the stream
     index (step + c)·nshards + shard would alias across (step, chunk)
     pairs, silently correlating resamples between extensions.
+
+    ``with_estimate=True`` returns ``(states, est_state)`` where
+    ``est_state`` is the unweighted full-sample estimate state accumulated
+    in the SAME pass (shard-wise merge / psum mirrors the resample states,
+    so mesh and sequential stay bitwise consistent) — the single-read
+    estimate for the chunked and streaming drivers.
     """
     if mesh is not None:
         nshards = int(mesh.shape[data_axis])
@@ -205,15 +244,18 @@ def sharded_fused_states(stat: Statistic, base_seed, x2: jax.Array, B: int,
     xp = jnp.pad(x2, ((0, nshards * m - n), (0, 0)))
 
     if mesh is None:
-        states = None
+        states, est = None, None
         for i in range(nshards):
             nv = min(max(n - i * m, 0), m)
             si = _shard_local_states(stat, base_seed, xp[i * m:(i + 1) * m],
                                      B, i, nshards, nv, chunk=chunk,
-                                     step=step)
+                                     step=step, with_estimate=with_estimate)
+            if with_estimate:
+                si, ei = si
+                est = ei if est is None else stat.merge(est, ei)
             states = si if states is None else \
                 jax.vmap(stat.merge)(states, si)
-        return states
+        return (states, est) if with_estimate else states
 
     from jax.sharding import PartitionSpec as P
     from repro.compat import shard_map_compat
@@ -223,12 +265,17 @@ def sharded_fused_states(stat: Statistic, base_seed, x2: jax.Array, B: int,
         i = jax.lax.axis_index(data_axis)
         nv = jnp.clip(n - i * m, 0, m)
         st = _shard_local_states(stat, seed, x_local, B, i, nshards, nv,
-                                 chunk=chunk, step=step_)
+                                 chunk=chunk, step=step_,
+                                 with_estimate=with_estimate)
+        if with_estimate:
+            st, est = st
+            return (stat.psum_state(st, data_axis),
+                    stat.psum_state(est, data_axis))
         return stat.psum_state(st, data_axis)
 
     fn = shard_map(shard_fn, mesh=mesh,
                    in_specs=(P(data_axis, None), P(), P()),
-                   out_specs=P(), **sm_kw)
+                   out_specs=(P(), P()) if with_estimate else P(), **sm_kw)
     return fn(xp, jnp.asarray(base_seed, jnp.int32),
               jnp.asarray(step, jnp.int32))
 
@@ -397,9 +444,9 @@ def bootstrap_chunked(values: jax.Array, stat: Statistic, B: int,
     n, dim = x.shape
 
     if mesh is not None:
-        states = sharded_fused_states(stat, seed_from_key(key), x, B,
-                                      mesh=mesh, data_axis=data_axis,
-                                      chunk=chunk)
+        states, est = sharded_fused_states(stat, seed_from_key(key), x, B,
+                                           mesh=mesh, data_axis=data_axis,
+                                           chunk=chunk, with_estimate=True)
     else:
         pad = (-n) % chunk
         xp = jnp.pad(x, ((0, pad), (0, 0)))
@@ -407,26 +454,31 @@ def bootstrap_chunked(values: jax.Array, stat: Statistic, B: int,
         xc = xp.reshape(nchunks, chunk, dim)
 
         init = jax.vmap(lambda _: stat.init_state(dim))(jnp.arange(B))
+        init_est = stat.init_state(dim)
         base_seed = seed_from_key(key)  # one base; chunks offset by counter
 
-        def body(states, inp):
+        def body(carry, inp):
+            states, est = carry
             i, xi = inp
             n_valid = jnp.minimum(chunk, n - i * chunk)  # last-chunk suffix
+            # unweighted estimate rides the SAME pass over xi (the old
+            # ``stat(values)`` was a second full read of the sample).
+            vi = (jnp.arange(chunk) < n_valid).astype(jnp.float32)
+            est = stat.update(est, xi, vi)
             if backend == "fused_rng":
                 delta = fused_resample_states(
                     stat, offset_seed(base_seed, i), xi, B, n_valid=n_valid)
-                return jax.vmap(stat.merge)(states, delta), None
-            vi = (jnp.arange(chunk) < n_valid).astype(jnp.float32)
+                return (jax.vmap(stat.merge)(states, delta), est), None
             w = poisson_weights(jax.random.fold_in(key, i), B, chunk) \
                 * vi[None, :]
             new = jax.vmap(lambda s, wr: stat.update(s, xi, wr))(states, w)
-            return new, None
+            return (new, est), None
 
-        states, _ = jax.lax.scan(body, init,
-                                 (jnp.arange(nchunks), xc))
+        (states, est), _ = jax.lax.scan(body, (init, init_est),
+                                        (jnp.arange(nchunks), xc))
     thetas = jax.vmap(stat.finalize)(states)
     thetas = stat.correct(thetas, p)
-    estimate = stat.correct(stat(values), p)
+    estimate = stat.correct(stat.finalize(est), p)
     return BootstrapResult(
         estimate=estimate, thetas=thetas,
         report=accuracy.report_for(thetas),

@@ -49,9 +49,11 @@ def build_bootstrap_step(mesh: Mesh, stat: Statistic, B: int,
     ``backend="fused_rng"`` generates each shard's Poisson(1) weights
     inside the fused kernels (stream keyed by (seed_from_key(key), shard)
     via ``offset_seed``) instead of materializing the (B, n_local) matrix;
-    the shard's mask must then be a prefix mask (all-ones then all-zeros —
-    what ``pad_to_shards`` produces, and what ft/ whole-shard loss zeroes),
-    since the fused paths express masking as an n_valid column count.
+    the shard's mask slice multiplies the implicit weight tiles
+    (``valid_mask``), so ARBITRARY masks work — interior holes from ft/
+    failed-shard loss included — and a prefix mask (what
+    ``pad_to_shards`` produces) reproduces the historical n_valid-based
+    masking bit for bit.
 
     Cross-shard reduction goes through ``Statistic.psum_state`` (NOT a raw
     tree-psum: Quantile's HistogramState carries non-additive lo/hi leaves
@@ -72,10 +74,9 @@ def build_bootstrap_step(mesh: Mesh, stat: Statistic, B: int,
             idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
         n_local, dim = values.shape
         if backend == "fused_rng":
-            n_valid = jnp.sum(mask).astype(jnp.int32)   # prefix mask
             states = fused_resample_states(
                 stat, offset_seed(seed_from_key(key), idx), values, B,
-                n_valid=n_valid)
+                valid_mask=mask)
         else:
             w = _poisson_for_shard(key, idx, B, n_local) * mask[None, :]
 
@@ -144,26 +145,6 @@ class DistributedEarl:
                                           self.data_axes, donate=False,
                                           backend=self.backend)
 
-    def _check_prefix_mask(self, mask) -> None:
-        """Loud failure for the fused backend's documented precondition:
-        each shard's mask slice must be a PREFIX mask (ones then zeros) —
-        the fused kernels express masking as an n_valid column count, so an
-        interior zero would silently weight the wrong rows (the default
-        backend handles arbitrary masks; use it for those)."""
-        import numpy as np
-        m = np.asarray(mask)
-        nshards = 1
-        for a in self.data_axes:
-            nshards *= self.mesh.shape[a]
-        for i, part in enumerate(np.array_split(m, nshards)):
-            k = int(part.sum())
-            if not np.array_equal(part, (np.arange(part.shape[0]) < k)
-                                  .astype(part.dtype)):
-                raise ValueError(
-                    f"backend='fused_rng' needs a prefix mask per shard "
-                    f"(ones then zeros); shard {i} has interior zeros — "
-                    f"use backend=None for arbitrary masks")
-
     def estimate(self, values: jax.Array, key: jax.Array,
                  p: float = 1.0) -> BootstrapResult:
         xs, ms = shard_values(self.mesh, values, self.data_axes)
@@ -178,9 +159,12 @@ class DistributedEarl:
     def estimate_with_loss_mask(self, values: jax.Array, mask: jax.Array,
                                 key: jax.Array, p: float = 1.0
                                 ) -> BootstrapResult:
-        """ft/ path: ``mask`` already encodes lost shards (zeros)."""
-        if self.backend == "fused_rng":
-            self._check_prefix_mask(mask)
+        """ft/ path: ``mask`` already encodes lost shards (zeros).
+
+        Works on every backend: the fused backend multiplies its implicit
+        weight tiles by the mask slice (interior holes included), the
+        default backend multiplies the materialized matrix — same
+        estimator either way."""
         xs = jax.device_put(_as_2d(values),
                             NamedSharding(self.mesh,
                                           P(tuple(self.data_axes), None)))

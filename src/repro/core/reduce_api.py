@@ -172,7 +172,8 @@ class Statistic:
         return result
 
     def fused_poisson_states(self, seed, values: jax.Array, B: int,
-                             n_valid=None) -> Optional[State]:
+                             n_valid=None,
+                             valid_mask=None) -> Optional[State]:
         """Matrix-free hook for ``backend="fused_rng"``: B per-resample
         states under implicit in-kernel Poisson(1) weights, WITHOUT
         materializing the (B, n) weight matrix.
@@ -185,8 +186,13 @@ class Statistic:
         keys the counter-based PRNG tile discipline, so implementations
         must draw weights identical to
         ``weighted_stats.ops.implicit_weights(seed, B, n)``.
+
+        ``valid_mask`` (traced (n,) f32 of exact 0.0/1.0) multiplies the
+        implicit weight tiles — arbitrary interior validity holes (failed
+        shards, dropped rows); a prefix-shaped mask reproduces the
+        ``n_valid`` result bit for bit.
         """
-        del seed, values, B, n_valid
+        del seed, values, B, n_valid, valid_mask
         return None
 
     def accumulator_key(self) -> Optional[Tuple]:
@@ -253,10 +259,12 @@ class _MomentStatistic(Statistic):
     def from_moments(self, w, s1, s2) -> MomentState:
         return MomentState(w=w, s1=s1, s2=s2)
 
-    def fused_poisson_states(self, seed, values, B, n_valid=None):
+    def fused_poisson_states(self, seed, values, B, n_valid=None,
+                             valid_mask=None):
         from repro.kernels.weighted_stats import ops as ws_ops
         w_tot, s1, s2 = ws_ops.fused_poisson_moments(seed, values, B,
-                                                     n_valid=n_valid)
+                                                     n_valid=n_valid,
+                                                     valid_mask=valid_mask)
         return jax.vmap(self.from_moments)(w_tot, s1, s2)
 
     def accumulator_key(self):
@@ -387,7 +395,8 @@ class Quantile(Statistic):
             counts=jax.lax.psum(state.counts, axis_names),
             lo=state.lo, hi=state.hi)
 
-    def fused_poisson_states(self, seed, values, B, n_valid=None):
+    def fused_poisson_states(self, seed, values, B, n_valid=None,
+                             valid_mask=None):
         """Matrix-free bootstrap sketch: B per-resample histogram states
         from in-kernel Poisson(1) weights (kernels/weighted_hist.
         fused_poisson_hist) — the last built-in statistic fallback is gone;
@@ -401,7 +410,8 @@ class Quantile(Statistic):
         d = values.shape[1]
         counts = wh_ops.fused_poisson_hist(seed, values, self.lo, self.hi,
                                            self.nbins, B, backend=backend,
-                                           n_valid=n_valid)
+                                           n_valid=n_valid,
+                                           valid_mask=valid_mask)
         return HistogramState(
             counts=counts,
             lo=jnp.full((B, d), self.lo, jnp.float32),
@@ -538,13 +548,14 @@ class KMeansStep(Statistic):
             inertia=state.inertia + jnp.sum(w * jnp.min(d2, -1)),
         )
 
-    def fused_poisson_states(self, seed, values, B, n_valid=None):
+    def fused_poisson_states(self, seed, values, B, n_valid=None,
+                             valid_mask=None):
         from repro.kernels.kmeans_assign import ops as ka_ops
         backend = self.backend if self.backend in (
             "scan", "pallas", "pallas_interpret") else None
         sums, counts, inertia = ka_ops.fused_poisson_kmeans(
             seed, values, self.centroids, B, n_valid=n_valid,
-            backend=backend)
+            valid_mask=valid_mask, backend=backend)
         return KMeansState(sums=sums, counts=counts, inertia=inertia)
 
     def tile_update(self, states: KMeansState, x_tile, w_tile) -> KMeansState:
@@ -705,10 +716,12 @@ class StatisticGroup(Statistic):
     def correct(self, result, p: float) -> Tuple:
         return tuple(m.correct(r, p) for m, r in zip(self.members, result))
 
-    def fused_poisson_states(self, seed, values, B, n_valid=None):
+    def fused_poisson_states(self, seed, values, B, n_valid=None,
+                             valid_mask=None):
         from repro.kernels.fused_multi import ops as fm_ops
         return fm_ops.fused_poisson_multi(self, seed, values, B,
                                           n_valid=n_valid,
+                                          valid_mask=valid_mask,
                                           backend=self.backend)
 
 

@@ -1,0 +1,210 @@
+"""Double-buffered streaming bootstrap over a ShardedStore.
+
+``bootstrap_chunked`` assumes the sample is already device-resident; real
+EARL runs start from a sharded on-disk store whose rows must cross the
+host-to-device boundary first.  Done naively that serializes into
+``transfer(chunk i) -> compute(chunk i) -> transfer(chunk i+1) -> ...``
+and the wall time is the SUM of transfer and compute.  This driver
+overlaps them:
+
+* a host *prefetch thread* pulls fixed-size batches from
+  ``ShardedStore.iter_batches(chunk)``, pads the ragged tail, and stages
+  each one onto the device with ``jax.device_put`` (an async enqueue on
+  the transfer stream) — by the time the main thread wants chunk i+1 its
+  H2D copy has been running behind chunk i's compute;
+* a bounded hand-off queue (depth 2) gives classic double buffering: one
+  chunk in compute, one staged/in flight, and the producer blocks rather
+  than staging the whole dataset;
+* the main thread folds each staged chunk into the running per-resample
+  states with ONE donated jitted update per chunk, so XLA reuses the
+  state buffers in place and never blocks on the result until the
+  trailing edge (``block_until_ready`` once, after the last dispatch).
+
+The per-chunk update is the SAME math as ``bootstrap_chunked``'s scan
+body — chunk i draws its implicit Poisson(1) weights from
+``offset_seed(seed_from_key(key), i)`` and the unweighted estimate rides
+the same pass — so the streamed result is bitwise identical to
+``bootstrap_chunked(store.read_all(), ...)`` under the same
+``(key, chunk)`` while peak device residency stays
+O(B·d + chunk·d + queue_depth·chunk·d), independent of n.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue as queue_mod
+import threading
+import time
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import accuracy
+from repro.core.bootstrap import (BootstrapResult, fused_resample_states,
+                                  offset_seed, seed_from_key)
+from repro.core.reduce_api import Statistic, bind_params, split_params
+
+
+@dataclasses.dataclass
+class StreamReport:
+    """Where the streamed run's wall time went (host-side view).
+
+    ``stage_s`` is the prefetch thread's cumulative batch-preparation +
+    ``device_put`` enqueue time; ``wait_s`` is how long the main thread
+    sat idle on the hand-off queue (transfer-bound when large);
+    ``dispatch_s`` is the main thread's per-chunk dispatch time plus the
+    single trailing-edge ``block_until_ready`` (compute-bound when
+    large).  Perfect overlap drives ``wall_s`` toward
+    max(stage, compute) instead of their sum.
+    """
+    wall_s: float
+    stage_s: float
+    wait_s: float
+    dispatch_s: float
+    n_chunks: int
+    rows: int
+
+
+@dataclasses.dataclass
+class StreamingBootstrapResult(BootstrapResult):
+    stream: StreamReport = None
+
+
+@partial(jax.jit, static_argnames=("spec", "B", "chunk"),
+         donate_argnums=(0, 1))
+def _stream_chunk_jit(states, est, xi, base_seed, i, n_valid, params, spec,
+                      B, chunk):
+    """Fold ONE staged chunk into the running (states, est) carry.
+
+    Identical math, operand layout and seed derivation as the
+    ``bootstrap_chunked`` fused scan body (bitwise-equality contract);
+    ``states``/``est`` are donated so the carry is updated in place and
+    the device never holds two copies.
+    """
+    stat = bind_params(spec, params)
+    vi = (jnp.arange(chunk) < n_valid).astype(jnp.float32)
+    est = stat.update(est, xi, vi)
+    delta = fused_resample_states(stat, offset_seed(base_seed, i), xi, B,
+                                  n_valid=n_valid)
+    return jax.vmap(stat.merge)(states, delta), est
+
+
+def _stage_batches(store, chunk: int, out_q, timings: dict) -> None:
+    """Prefetch-thread body: read → pad → ``device_put`` → enqueue.
+
+    ``device_put`` returns as soon as the H2D copy is enqueued, so the
+    transfer of chunk i+1 proceeds while the consumer computes on chunk
+    i.  Batches from ``iter_batches`` can be zero-copy views of a split;
+    the ``np.ascontiguousarray``/pad copy here also shields the store's
+    buffers from the transfer machinery.  Exceptions are forwarded to
+    the consumer rather than dying silently on this thread.
+    """
+    stage_s = 0.0
+    try:
+        for batch in store.iter_batches(chunk):
+            t0 = time.perf_counter()
+            xb = np.asarray(batch, np.float32)
+            if xb.ndim == 1:
+                xb = xb[:, None]
+            nb = len(xb)
+            if nb < chunk:
+                xb = np.concatenate(
+                    [xb, np.zeros((chunk - nb,) + xb.shape[1:], xb.dtype)])
+            else:
+                xb = np.ascontiguousarray(xb)
+            xd = jax.device_put(xb)
+            stage_s += time.perf_counter() - t0
+            out_q.put((xd, nb))
+        out_q.put(None)
+    except BaseException as exc:                # noqa: BLE001 — forwarded
+        out_q.put(exc)
+    finally:
+        timings["stage_s"] = stage_s
+
+
+def bootstrap_streaming(store, stat: Statistic, B: int, key: jax.Array,
+                        chunk: int = 65536, p: float = 1.0,
+                        alpha: float = 0.05,
+                        backend: Optional[str] = "fused_rng",
+                        queue_depth: int = 2) -> StreamingBootstrapResult:
+    """Streamed bootstrap over ``store`` (module docstring for the how).
+
+    Matrix-free only: the point of streaming is that nothing of size n
+    ever exists on either side of the PCIe link, which needs the
+    ``backend="fused_rng"`` in-kernel weight generation.  Returns the
+    usual ``BootstrapResult`` fields plus a ``StreamReport``; the result
+    is bitwise equal to
+    ``bootstrap_chunked(store.read_all(), stat, B, key, chunk=chunk,
+    backend="fused_rng")``.
+    """
+    if not isinstance(stat, Statistic):
+        raise TypeError("stat must be a reduce_api.Statistic")
+    if backend != "fused_rng":
+        raise ValueError("bootstrap_streaming is matrix-free only: "
+                         "backend='fused_rng' (a materialized (B, chunk) "
+                         "weight matrix would defeat the streaming memory "
+                         "contract)")
+    if store.N == 0:
+        raise ValueError("bootstrap_streaming needs a non-empty store")
+    if queue_depth < 1:
+        raise ValueError(f"queue_depth must be >= 1, got {queue_depth}")
+    head = store.splits[0]
+    dim = int(np.prod(head.shape[1:])) if head.ndim > 1 else 1
+
+    spec, params = split_params(stat)
+    base_seed = seed_from_key(key)
+    # Fresh, UNALIASED device buffers for the donated carry: jnp's constant
+    # cache can hand several identical-zeros leaves the same buffer, which
+    # trips "attempt to donate the same buffer twice" on the first call.
+    def _fresh(tree):
+        return jax.tree_util.tree_map(
+            lambda a: jax.device_put(np.asarray(a)), tree)
+    states = _fresh(jax.vmap(lambda _: stat.init_state(dim))(jnp.arange(B)))
+    est = _fresh(stat.init_state(dim))
+
+    q = queue_mod.Queue(maxsize=queue_depth)
+    timings: dict = {}
+    producer = threading.Thread(target=_stage_batches,
+                                args=(store, chunk, q, timings),
+                                name="earl-stream-prefetch", daemon=True)
+    t_start = time.perf_counter()
+    producer.start()
+
+    wait_s = dispatch_s = 0.0
+    i = 0
+    while True:
+        t0 = time.perf_counter()
+        item = q.get()
+        wait_s += time.perf_counter() - t0
+        if item is None:
+            break
+        if isinstance(item, BaseException):
+            raise item
+        xd, nb = item
+        t0 = time.perf_counter()
+        states, est = _stream_chunk_jit(
+            states, est, xd, base_seed, jnp.asarray(i, jnp.int32),
+            jnp.asarray(nb, jnp.int32), params, spec, int(B), int(chunk))
+        dispatch_s += time.perf_counter() - t0
+        i += 1
+
+    t0 = time.perf_counter()
+    (states, est) = jax.block_until_ready((states, est))   # trailing edge
+    dispatch_s += time.perf_counter() - t0
+    wall_s = time.perf_counter() - t_start
+    producer.join()
+
+    stat = bind_params(spec, params)
+    thetas = stat.correct(jax.vmap(stat.finalize)(states), p)
+    estimate = stat.correct(stat.finalize(est), p)
+    return StreamingBootstrapResult(
+        estimate=estimate, thetas=thetas,
+        report=accuracy.report_for(thetas, alpha=alpha),
+        B=int(B), n=int(store.N),
+        stream=StreamReport(wall_s=wall_s,
+                            stage_s=timings.get("stage_s", 0.0),
+                            wait_s=wait_s, dispatch_s=dispatch_s,
+                            n_chunks=i, rows=int(store.N)),
+    )

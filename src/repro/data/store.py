@@ -14,19 +14,34 @@ checks this with a chi-square bound).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+import threading
+from typing import Iterator, List, Optional
 
 import numpy as np
 
 
 @dataclasses.dataclass
 class ReadStats:
+    """Counted-read totals.  Thread-safe: the streaming driver's prefetch
+    thread and the main thread both touch the counters (core/streaming.py),
+    so all mutation goes through ``add``/``reset`` under a lock.  Reading
+    the plain int attributes without the lock stays safe (int loads are
+    atomic under the GIL); only read-modify-write needed guarding."""
     splits_opened: int = 0
     rows_read: int = 0
 
+    def __post_init__(self) -> None:
+        self._lock = threading.Lock()
+
+    def add(self, splits: int = 0, rows: int = 0) -> None:
+        with self._lock:
+            self.splits_opened += splits
+            self.rows_read += rows
+
     def reset(self) -> None:
-        self.splits_opened = 0
-        self.rows_read = 0
+        with self._lock:
+            self.splits_opened = 0
+            self.rows_read = 0
 
 
 class ShardedStore:
@@ -56,19 +71,57 @@ class ShardedStore:
 
     # -- counted reads ---------------------------------------------------
     def read_split(self, i: int) -> np.ndarray:
-        self.stats.splits_opened += 1
-        self.stats.rows_read += self.split_sizes[i]
+        self.stats.add(splits=1, rows=self.split_sizes[i])
         return self.splits[i]
 
     def read_rows(self, split: int, rows: np.ndarray) -> np.ndarray:
         """Pre-map style row-granular read (the LineRecordReader analogue)."""
-        self.stats.splits_opened += 1
-        self.stats.rows_read += len(rows)
+        self.stats.add(splits=1, rows=len(rows))
         return self.splits[split][rows]
 
+    def iter_batches(self, chunk: int) -> Iterator[np.ndarray]:
+        """Counted sequential read as fixed-size ``chunk``-row batches.
+
+        Yields ``ceil(N / chunk)`` arrays of ``chunk`` rows each (the last
+        one ragged), crossing split boundaries — the disk-order stream the
+        streaming bootstrap driver (core/streaming.py) consumes.  Each
+        split is opened exactly once, so ``stats`` records one full pass.
+        Batches that fall inside a single split are zero-copy views of it;
+        treat them as read-only.
+        """
+        if chunk <= 0:
+            raise ValueError(f"chunk must be positive, got {chunk}")
+        parts: List[np.ndarray] = []
+        have = 0
+        for i in range(len(self.splits)):
+            s = self.read_split(i)
+            pos = 0
+            while pos < len(s):
+                take = min(chunk - have, len(s) - pos)
+                parts.append(s[pos:pos + take])
+                have += take
+                pos += take
+                if have == chunk:
+                    yield (parts[0] if len(parts) == 1
+                           else np.concatenate(parts, axis=0))
+                    parts, have = [], 0
+        if have:
+            yield (parts[0] if len(parts) == 1
+                   else np.concatenate(parts, axis=0))
+
     def read_all(self) -> np.ndarray:
-        return np.concatenate([self.read_split(i)
-                               for i in range(len(self.splits))], axis=0)
+        """Everything, in store order — one preallocated buffer filled from
+        ``iter_batches`` (the old ``np.concatenate`` of all splits held two
+        full copies live at the peak)."""
+        if not self.splits:
+            return np.empty((0,), np.float32)
+        head = self.splits[0]
+        out = np.empty((self.N,) + head.shape[1:], head.dtype)
+        pos = 0
+        for b in self.iter_batches(max(self.split_sizes)):
+            out[pos:pos + len(b)] = b
+            pos += len(b)
+        return out
 
     def locate(self, global_rows: np.ndarray):
         """global row ids -> (split ids, local rows)."""

@@ -5,6 +5,11 @@ have been lost, a reasonable result can still be provided" — the surviving
 shards are a uniform sample of the data (uniform because the store
 hash-interleaves at ingest), so the AES machinery bounds the error of the
 survivors-only result, and correct(·, p) rescales count-like statistics.
+
+``failure_mask`` zeroes interior row blocks, so this path runs on EVERY
+``DistributedEarl`` backend: ``backend="fused_rng"`` multiplies its
+implicit weight tiles by the mask (``valid_mask``) instead of refusing
+non-prefix masks.
 """
 from __future__ import annotations
 

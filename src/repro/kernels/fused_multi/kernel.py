@@ -40,17 +40,20 @@ from repro.kernels.weighted_stats.kernel import _poisson_tile
 
 
 def _fm_kernel(scal_ref, x_ref, *refs, kinds, hist_nbins, hist_out_bins,
-               d: int, block_b: int, block_n: int, use_tpu_prng: bool):
+               d: int, block_b: int, block_n: int, use_tpu_prng: bool,
+               has_mask: bool = False):
     i = pl.program_id(0)        # B-tile index
     t = pl.program_id(1)        # n-tile index (contraction)
 
     n_hist = sum(1 for k in kinds if k == "hist")
     in_refs = refs[:2 * n_hist]             # (lo, hi) per hist slot
-    out_refs = refs[2 * n_hist:]
+    m_ref = refs[2 * n_hist] if has_mask else None
+    out_refs = refs[2 * n_hist + (1 if has_mask else 0):]
 
     # ONE weight tile for every slot below — the whole point of the kernel.
     w = _poisson_tile(scal_ref[0], i, t, (block_b, block_n), scal_ref[1],
-                      block_n, use_tpu_prng)                  # (bB, bn)
+                      block_n, use_tpu_prng,
+                      valid=None if m_ref is None else m_ref[...])  # (bB, bn)
     x = x_ref[...].astype(jnp.float32)                        # (bn, dp)
     bn = x.shape[0]
 
@@ -106,7 +109,8 @@ def fused_poisson_multi_kernel(seed: jax.Array, n_valid: jax.Array,
                                kinds, hist_nbins, d_valid: int,
                                block_b: int = 128, block_n: int = 512,
                                interpret: bool = True,
-                               use_tpu_prng: bool = False):
+                               use_tpu_prng: bool = False,
+                               mask=None):
     """Raw kernel entry: shapes must already be padded (ops.py does this).
 
     values (n, dp) f32 with dp the 128-lane-padded dimension; ``hist_lo``/
@@ -137,6 +141,9 @@ def fused_poisson_multi_kernel(seed: jax.Array, n_valid: jax.Array,
         in_specs.append(pl.BlockSpec((1, dp), lambda i, t: (0, 0)))
         in_specs.append(pl.BlockSpec((1, dp), lambda i, t: (0, 0)))
         operands.extend([lo, hi])
+    if mask is not None:
+        in_specs.append(pl.BlockSpec((1, block_n), lambda i, t: (0, t)))
+        operands.append(mask)
 
     out_specs, out_shape = [], []
     hidx = 0
@@ -164,7 +171,8 @@ def fused_poisson_multi_kernel(seed: jax.Array, n_valid: jax.Array,
                              hist_nbins=tuple(hist_nbins),
                              hist_out_bins=hist_out_bins, d=d_valid,
                              block_b=block_b, block_n=block_n,
-                             use_tpu_prng=use_tpu_prng)
+                             use_tpu_prng=use_tpu_prng,
+                             has_mask=mask is not None)
     outs = pl.pallas_call(
         kern,
         grid=(B // block_b, n // block_n),

@@ -51,16 +51,18 @@ def _kernel_slots(group) -> Tuple[bool, tuple]:
 
 
 def _multi_scan(slots, seed, n_valid, xp, B: int, block_b: int,
-                block_n: int):
+                block_n: int, maskp=None):
     """CPU lowering: one scan, one weight tile per step, every slot fed."""
     n, d = xp.shape
     nt = n // block_n
     xc = xp.reshape(nt, block_n, d)
+    maskc = None if maskp is None else maskp.reshape(nt, block_n)
     init = tuple(jax.vmap(lambda _, s=s: s.init_state(d))(jnp.arange(B))
                  for s in slots)
 
     def body(states, t):
-        w = implicit_weight_tile(seed, n_valid, t, B, block_b, block_n)
+        w = implicit_weight_tile(seed, n_valid, t, B, block_b, block_n,
+                                 valid=None if maskc is None else maskc[t])
         xt = xc[t]
         return tuple(s.tile_update(st, xt, w)
                      for s, st in zip(slots, states)), None
@@ -70,14 +72,19 @@ def _multi_scan(slots, seed, n_valid, xp, B: int, block_b: int,
 
 
 def fused_poisson_multi(group, seed, values: jax.Array, B: int,
-                        n_valid=None, backend: str | None = None,
+                        n_valid=None, valid_mask=None,
+                        backend: str | None = None,
                         block_b: int = 128, block_n: int = 512) -> Tuple:
     """Slot-ordered tuple of B-leading per-resample states for ``group``
     under one shared in-kernel Poisson(1) weight stream.
 
     ``n_valid`` (traced scalar, default n) masks weight columns >= n_valid
-    to zero, exactly as in every other fused path.  The result is what
-    ``StatisticGroup.fused_poisson_states`` returns — its state pytree.
+    to zero, exactly as in every other fused path.  ``valid_mask`` (traced
+    (n,) f32 of exact 0.0/1.0) multiplies the shared weight tiles —
+    arbitrary interior validity holes; a prefix-shaped mask reproduces the
+    ``n_valid`` result bit for bit (see ``implicit_weight_tile``).  The
+    result is what ``StatisticGroup.fused_poisson_states`` returns — its
+    state pytree.
     """
     from repro.core.reduce_api import HistogramState, _MomentStatistic
     if values.ndim == 1:
@@ -102,9 +109,13 @@ def fused_poisson_multi(group, seed, values: jax.Array, B: int,
     seed = jnp.asarray(seed, jnp.int32)
     n_valid = jnp.asarray(n_valid, jnp.int32)
     xp = _pad_to(values.astype(jnp.float32), bn, 0)
+    mp = None
+    if valid_mask is not None:
+        mp = _pad_to(jnp.asarray(valid_mask, jnp.float32).reshape(n), bn, 0)
 
     if backend == "scan":
-        states = _multi_scan(group.slots, seed, n_valid, xp, Bp, bb, bn)
+        states = _multi_scan(group.slots, seed, n_valid, xp, Bp, bb, bn,
+                             maskp=mp)
         return jax.tree_util.tree_map(lambda a: a[:B], states)
 
     # ---- Pallas kernel path: moments + hist slots only ------------------
@@ -120,7 +131,8 @@ def fused_poisson_multi(group, seed, values: jax.Array, B: int,
         seed, n_valid, xpp, los, his, Bp, kinds=kinds,
         hist_nbins=tuple(s.nbins for s in hist_slots), d_valid=d,
         block_b=bb, block_n=bn, interpret=(backend != "pallas"),
-        use_tpu_prng=(backend == "pallas"))
+        use_tpu_prng=(backend == "pallas"),
+        mask=None if mp is None else mp[None, :])
 
     states, oi = [], 0
     for slot, kind in zip(group.slots, kinds):

@@ -130,14 +130,19 @@ def kmeans_assign_kernel(values: jax.Array, weights: jax.Array,
 # ============================================================================
 # matrix-free bootstrap path: in-kernel weight generation + assignment
 # ============================================================================
-def _fpk_kernel(scal_ref, x_ref, c_ref, sums_ref, counts_ref, inertia_ref, *,
+def _fpk_kernel(scal_ref, x_ref, c_ref, *refs,
                 k_valid: int, block_b: int, block_n: int, dp: int,
-                use_tpu_prng: bool):
+                use_tpu_prng: bool, has_mask: bool = False):
+    if has_mask:
+        m_ref, (sums_ref, counts_ref, inertia_ref) = refs[0], refs[1:]
+    else:
+        m_ref, (sums_ref, counts_ref, inertia_ref) = None, refs
     i = pl.program_id(0)        # B-tile index
     t = pl.program_id(1)        # n-tile index (contraction)
 
     w = _poisson_tile(scal_ref[0], i, t, (block_b, block_n), scal_ref[1],
-                      block_n, use_tpu_prng)                 # (bB, bn)
+                      block_n, use_tpu_prng,
+                      valid=None if m_ref is None else m_ref[...])  # (bB, bn)
     x = x_ref[...].astype(jnp.float32)                       # (bn, dp)
     assign, min_d2 = _assign_tile(x, c_ref[...], k_valid)    # (bn, kp)
 
@@ -167,7 +172,8 @@ def fused_poisson_kmeans_kernel(seed: jax.Array, n_valid: jax.Array,
                                 B: int, k_valid: int,
                                 block_b: int = 128, block_n: int = 512,
                                 interpret: bool = True,
-                                use_tpu_prng: bool = False):
+                                use_tpu_prng: bool = False,
+                                mask=None):
     """Matrix-free bootstrap-over-k-means: B per-resample (sums, counts,
     inertia) states under implicit in-kernel Poisson(1) weights.
 
@@ -184,18 +190,24 @@ def fused_poisson_kmeans_kernel(seed: jax.Array, n_valid: jax.Array,
 
     kern = functools.partial(_fpk_kernel, k_valid=k_valid, block_b=block_b,
                              block_n=block_n, dp=dp,
-                             use_tpu_prng=use_tpu_prng)
+                             use_tpu_prng=use_tpu_prng,
+                             has_mask=mask is not None)
     scal = jnp.stack([jnp.asarray(seed, jnp.int32),
                       jnp.asarray(n_valid, jnp.int32)])
     grid = (B // block_b, n // block_n)
+    in_specs = [
+        pl.BlockSpec(memory_space=pltpu.SMEM),
+        pl.BlockSpec((block_n, dp), lambda i, t: (t, 0)),
+        pl.BlockSpec((kp, dp), lambda i, t: (0, 0)),
+    ]
+    operands = [scal, values, centroids]
+    if mask is not None:
+        in_specs.append(pl.BlockSpec((1, block_n), lambda i, t: (0, t)))
+        operands.append(mask)
     return pl.pallas_call(
         kern,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),
-            pl.BlockSpec((block_n, dp), lambda i, t: (t, 0)),
-            pl.BlockSpec((kp, dp), lambda i, t: (0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((block_b, kp * dp), lambda i, t: (i, 0)),
             pl.BlockSpec((block_b, kp), lambda i, t: (i, 0)),
@@ -207,4 +219,4 @@ def fused_poisson_kmeans_kernel(seed: jax.Array, n_valid: jax.Array,
             jax.ShapeDtypeStruct((B, 1), jnp.float32),
         ],
         interpret=interpret,
-    )(scal, values, centroids)
+    )(*operands)

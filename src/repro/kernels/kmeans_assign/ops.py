@@ -106,7 +106,8 @@ def kmeans_assign(values: jax.Array, weights: Optional[jax.Array],
 # matrix-free bootstrap path
 # ============================================================================
 @functools.partial(jax.jit, static_argnames=("B", "block_b", "block_n"))
-def _fused_kmeans_scan(seed, n_valid, xp, cent, B, block_b, block_n):
+def _fused_kmeans_scan(seed, n_valid, xp, cent, B, block_b, block_n,
+                       maskp=None):
     """CPU lowering of the fused kernel: weights come from the SHARED
     ``weighted_stats.ops.implicit_weight_tile`` (same per-tile threefry
     bits and CDF ladder as every fused path), assignment from the shared
@@ -116,11 +117,14 @@ def _fused_kmeans_scan(seed, n_valid, xp, cent, B, block_b, block_n):
     k = cent.shape[0]
     nb_n = n // block_n
     xc = xp.reshape(nb_n, block_n, d)
+    maskc = None if maskp is None else maskp.reshape(nb_n, block_n)
 
     def body(carry, t):
         sums, counts, inertia = carry
         w = implicit_weight_tile(seed, n_valid, t, B,
-                                 block_b, block_n)       # (B, bn)
+                                 block_b, block_n,
+                                 valid=None if maskc is None
+                                 else maskc[t])          # (B, bn)
         xt = xc[t]
         assign, min_d2 = _assign_tile(xt, cent, k)       # (bn, k)
         # cluster-masked moments as ONE (B, bn) @ (bn, k·d) contraction
@@ -140,8 +144,9 @@ def _fused_kmeans_scan(seed, n_valid, xp, cent, B, block_b, block_n):
 def fused_poisson_kmeans(seed, values: jax.Array, centroids: jax.Array,
                          B: int, backend: str | None = None,
                          block_b: int = 128, block_n: int = 512,
-                         n_valid=None) -> Tuple[jax.Array, jax.Array,
-                                                jax.Array]:
+                         n_valid=None,
+                         valid_mask=None) -> Tuple[jax.Array, jax.Array,
+                                                   jax.Array]:
     """Matrix-free bootstrap-over-k-means from an int32 seed.
 
     values (n, d) or (n,) × centroids (k, d) ->
@@ -152,7 +157,10 @@ def fused_poisson_kmeans(seed, values: jax.Array, centroids: jax.Array,
 
     ``n_valid`` (traced scalar, default n) masks weight columns >= n_valid
     to zero, so pre-padded callers (the chunked bootstrap's ragged tail)
-    contribute nothing for padding rows.
+    contribute nothing for padding rows.  ``valid_mask`` (traced (n,) f32
+    of exact 0.0/1.0) multiplies the weight tiles — arbitrary interior
+    validity holes; a prefix-shaped mask reproduces the ``n_valid`` result
+    bit for bit (see ``implicit_weight_tile``).
 
     backend: None = auto (pallas on TPU, scan elsewhere), "pallas",
     "pallas_interpret", "scan".
@@ -172,10 +180,13 @@ def fused_poisson_kmeans(seed, values: jax.Array, centroids: jax.Array,
     n_valid = jnp.asarray(n_valid, jnp.int32)
     xp = _pad_to(values.astype(jnp.float32), bn, 0)
     cent = jnp.asarray(centroids, jnp.float32)
+    mp = None
+    if valid_mask is not None:
+        mp = _pad_to(jnp.asarray(valid_mask, jnp.float32).reshape(n), bn, 0)
 
     if backend == "scan":
         sums, counts, inertia = _fused_kmeans_scan(seed, n_valid, xp, cent,
-                                                   Bp, bb, bn)
+                                                   Bp, bb, bn, maskp=mp)
         return sums[:B], counts[:B], inertia[:B]
 
     cp = _pad_to(_pad_to(cent, 8, 0), 128, 1)
@@ -185,6 +196,7 @@ def fused_poisson_kmeans(seed, values: jax.Array, centroids: jax.Array,
         seed, n_valid, xpp, cp, Bp, k_valid=k,
         block_b=bb, block_n=bn,
         interpret=(backend != "pallas"),
-        use_tpu_prng=(backend == "pallas"))
+        use_tpu_prng=(backend == "pallas"),
+        mask=None if mp is None else mp[None, :])
     sums = sums.reshape(Bp, kp, dp)
     return sums[:B, :k, :d], counts[:B, :k], inertia[:B, 0]

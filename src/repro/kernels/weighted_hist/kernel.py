@@ -106,14 +106,19 @@ def weighted_hist_kernel(values: jax.Array, weights: jax.Array,
 # ============================================================================
 # matrix-free bootstrap path: in-kernel weight generation + binning
 # ============================================================================
-def _fph_kernel(scal_ref, x_ref, lo_ref, hi_ref, out_ref, *, nbins: int,
+def _fph_kernel(scal_ref, x_ref, lo_ref, hi_ref, *refs, nbins: int,
                 out_bins: int, d: int, block_b: int, block_n: int,
-                use_tpu_prng: bool):
+                use_tpu_prng: bool, has_mask: bool = False):
+    if has_mask:
+        m_ref, out_ref = refs
+    else:
+        m_ref, (out_ref,) = None, refs
     i = pl.program_id(0)        # B-tile index
     t = pl.program_id(1)        # n-tile index (contraction)
 
     w = _poisson_tile(scal_ref[0], i, t, (block_b, block_n), scal_ref[1],
-                      block_n, use_tpu_prng)                 # (bB, bn)
+                      block_n, use_tpu_prng,
+                      valid=None if m_ref is None else m_ref[...])  # (bB, bn)
     x = x_ref[...].astype(jnp.float32)                       # (bn, dp)
     idx = _bin_indices(x, lo_ref[...], hi_ref[...], nbins)   # (bn, dp)
     mass = finite_mass_mask(x)                               # (bn, dp)
@@ -136,9 +141,10 @@ def _fph_kernel(scal_ref, x_ref, lo_ref, hi_ref, out_ref, *, nbins: int,
             w, onehot, preferred_element_type=jnp.float32)
 
 
-def _fph_binblocked_kernel(scal_ref, xt_ref, lo_ref, hi_ref, out_ref, *,
+def _fph_binblocked_kernel(scal_ref, xt_ref, lo_ref, hi_ref, *refs,
                            nbins: int, nb_j: int, block_bins: int,
-                           block_b: int, block_n: int, use_tpu_prng: bool):
+                           block_b: int, block_n: int, use_tpu_prng: bool,
+                           has_mask: bool = False):
     """Output-tiled variant of ``_fph_kernel``: grid axis 1 enumerates
     (dimension, bin-block) pairs ``cj = c·nb_j + j`` so each kernel
     instance holds only a (block_b, block_bins) slice of the output in
@@ -153,13 +159,18 @@ def _fph_binblocked_kernel(scal_ref, xt_ref, lo_ref, hi_ref, out_ref, *,
     selected by the BlockSpec (no traced lane slicing in-kernel); lo/hi
     arrive as (dp, 1) blocks selected the same way.
     """
+    if has_mask:
+        m_ref, out_ref = refs
+    else:
+        m_ref, (out_ref,) = None, refs
     i = pl.program_id(0)        # B-tile index
     cj = pl.program_id(1)       # flattened (dim, bin-block) index
     t = pl.program_id(2)        # n-tile index (contraction)
     j = cj % nb_j               # bin-block within the dimension
 
     w = _poisson_tile(scal_ref[0], i, t, (block_b, block_n), scal_ref[1],
-                      block_n, use_tpu_prng)                  # (bB, bn)
+                      block_n, use_tpu_prng,
+                      valid=None if m_ref is None else m_ref[...])  # (bB, bn)
     x = xt_ref[...].astype(jnp.float32)                       # (1, bn)
 
     @pl.when(t == 0)
@@ -188,8 +199,8 @@ def fused_poisson_hist_binblocked_kernel(seed: jax.Array, n_valid: jax.Array,
                                          block_b: int = 128,
                                          block_n: int = 512,
                                          interpret: bool = True,
-                                         use_tpu_prng: bool = False
-                                         ) -> jax.Array:
+                                         use_tpu_prng: bool = False,
+                                         mask=None) -> jax.Array:
     """Raw entry for the output-tiled fused hist kernel.
 
     values_t is the TRANSPOSED (dp, n) value matrix (n pre-padded to
@@ -210,24 +221,30 @@ def fused_poisson_hist_binblocked_kernel(seed: jax.Array, n_valid: jax.Array,
 
     kern = functools.partial(_fph_binblocked_kernel, nbins=nbins, nb_j=nb_j,
                              block_bins=block_bins, block_b=block_b,
-                             block_n=block_n, use_tpu_prng=use_tpu_prng)
+                             block_n=block_n, use_tpu_prng=use_tpu_prng,
+                             has_mask=mask is not None)
     scal = jnp.stack([jnp.asarray(seed, jnp.int32),
                       jnp.asarray(n_valid, jnp.int32)])
     grid = (B // block_b, d_valid * nb_j, n // block_n)
+    in_specs = [
+        pl.BlockSpec(memory_space=pltpu.SMEM),
+        pl.BlockSpec((1, block_n), lambda i, cj, t: (cj // nb_j, t)),
+        pl.BlockSpec((1, 1), lambda i, cj, t: (cj // nb_j, 0)),
+        pl.BlockSpec((1, 1), lambda i, cj, t: (cj // nb_j, 0)),
+    ]
+    operands = [scal, values_t, lo, hi]
+    if mask is not None:
+        in_specs.append(pl.BlockSpec((1, block_n), lambda i, cj, t: (0, t)))
+        operands.append(mask)
     return pl.pallas_call(
         kern,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),
-            pl.BlockSpec((1, block_n), lambda i, cj, t: (cj // nb_j, t)),
-            pl.BlockSpec((1, 1), lambda i, cj, t: (cj // nb_j, 0)),
-            pl.BlockSpec((1, 1), lambda i, cj, t: (cj // nb_j, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((block_b, block_bins),
                                lambda i, cj, t: (i, cj)),
         out_shape=jax.ShapeDtypeStruct((B, d_valid * out_bins), jnp.float32),
         interpret=interpret,
-    )(scal, values_t, lo, hi)
+    )(*operands)
 
 
 @functools.partial(jax.jit,
@@ -239,7 +256,8 @@ def fused_poisson_hist_kernel(seed: jax.Array, n_valid: jax.Array,
                               d_valid: int,
                               block_b: int = 128, block_n: int = 512,
                               interpret: bool = True,
-                              use_tpu_prng: bool = False) -> jax.Array:
+                              use_tpu_prng: bool = False,
+                              mask=None) -> jax.Array:
     """Matrix-free bootstrap histogram sketch: B per-resample (d, nbins)
     count states under implicit in-kernel Poisson(1) weights.
 
@@ -260,21 +278,27 @@ def fused_poisson_hist_kernel(seed: jax.Array, n_valid: jax.Array,
 
     kern = functools.partial(_fph_kernel, nbins=nbins, out_bins=out_bins,
                              d=d_valid, block_b=block_b, block_n=block_n,
-                             use_tpu_prng=use_tpu_prng)
+                             use_tpu_prng=use_tpu_prng,
+                             has_mask=mask is not None)
     scal = jnp.stack([jnp.asarray(seed, jnp.int32),
                       jnp.asarray(n_valid, jnp.int32)])
     grid = (B // block_b, n // block_n)
+    in_specs = [
+        pl.BlockSpec(memory_space=pltpu.SMEM),
+        pl.BlockSpec((block_n, dp), lambda i, t: (t, 0)),
+        pl.BlockSpec((1, dp), lambda i, t: (0, 0)),
+        pl.BlockSpec((1, dp), lambda i, t: (0, 0)),
+    ]
+    operands = [scal, values, lo, hi]
+    if mask is not None:
+        in_specs.append(pl.BlockSpec((1, block_n), lambda i, t: (0, t)))
+        operands.append(mask)
     return pl.pallas_call(
         kern,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),
-            pl.BlockSpec((block_n, dp), lambda i, t: (t, 0)),
-            pl.BlockSpec((1, dp), lambda i, t: (0, 0)),
-            pl.BlockSpec((1, dp), lambda i, t: (0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((block_b, d_valid * out_bins),
                                lambda i, t: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((B, d_valid * out_bins), jnp.float32),
         interpret=interpret,
-    )(scal, values, lo, hi)
+    )(*operands)

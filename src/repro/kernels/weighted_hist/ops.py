@@ -66,7 +66,8 @@ def weighted_histogram(values: jax.Array, weights: jax.Array,
 # ============================================================================
 @functools.partial(jax.jit, static_argnames=("B", "nbins", "block_b",
                                              "block_n"))
-def _fused_hist_scan(seed, n_valid, xp, lo, hi, B, nbins, block_b, block_n):
+def _fused_hist_scan(seed, n_valid, xp, lo, hi, B, nbins, block_b, block_n,
+                     maskp=None):
     """CPU lowering of the fused kernel: scan over n-tiles, weights from the
     SHARED ``implicit_weight_tile`` (same per-tile threefry bits and CDF
     ladder as every fused path), binning from the shared ref rule.
@@ -81,10 +82,13 @@ def _fused_hist_scan(seed, n_valid, xp, lo, hi, B, nbins, block_b, block_n):
     n, d = xp.shape
     nt = n // block_n
     xc = xp.reshape(nt, block_n, d)
+    maskc = None if maskp is None else maskp.reshape(nt, block_n)
 
     def body(counts, t):
         w = implicit_weight_tile(seed, n_valid, t, B,
-                                 block_b, block_n)           # (B, bn)
+                                 block_b, block_n,
+                                 valid=None if maskc is None
+                                 else maskc[t])              # (B, bn)
         xt = xc[t]
         idx = _bin_indices(xt, lo[None, :], hi[None, :], nbins)  # (bn, d)
         flat = (idx + jnp.arange(d, dtype=jnp.int32)[None, :]
@@ -101,7 +105,7 @@ def _fused_hist_scan(seed, n_valid, xp, lo, hi, B, nbins, block_b, block_n):
 def fused_poisson_hist(seed, values: jax.Array, lo, hi, nbins: int, B: int,
                        backend: str | None = None,
                        block_b: int = 128, block_n: int = 512,
-                       n_valid=None,
+                       n_valid=None, valid_mask=None,
                        block_bins: int | None = None) -> jax.Array:
     """Matrix-free bootstrap histogram sketch from an int32 seed.
 
@@ -114,7 +118,10 @@ def fused_poisson_hist(seed, values: jax.Array, lo, hi, nbins: int, B: int,
 
     ``n_valid`` (traced scalar, default n) masks weight columns >= n_valid
     to zero — without it the zero-padded tail would land real mass in each
-    dimension's bin 0.
+    dimension's bin 0.  ``valid_mask`` (traced (n,) f32 of exact 0.0/1.0)
+    multiplies the weight tiles — arbitrary interior validity holes; a
+    prefix-shaped mask reproduces the ``n_valid`` result bit for bit
+    (see ``implicit_weight_tile``).
 
     ``block_bins`` (Pallas backends only; a 128 multiple) tiles the
     d·nbins OUTPUT axis: each kernel instance keeps only a
@@ -145,12 +152,16 @@ def fused_poisson_hist(seed, values: jax.Array, lo, hi, nbins: int, B: int,
     lo = jnp.broadcast_to(jnp.asarray(lo, jnp.float32), (d,))
     hi = jnp.broadcast_to(jnp.asarray(hi, jnp.float32), (d,))
     xp = _pad_to(values.astype(jnp.float32), bn, 0)
+    mp = None
+    if valid_mask is not None:
+        mp = _pad_to(jnp.asarray(valid_mask, jnp.float32).reshape(n), bn, 0)
 
     if backend == "scan":
         counts = _fused_hist_scan(seed, n_valid, xp, lo, hi, Bp, nbins,
-                                  bb, bn)
+                                  bb, bn, maskp=mp)
         return counts[:B]
 
+    mp2 = None if mp is None else mp[None, :]
     # lane-width discipline (same as the other fused kernels): x/lo/hi are
     # padded to 128 lanes; only the d real columns are ever contracted.
     if block_bins is not None:
@@ -160,7 +171,7 @@ def fused_poisson_hist(seed, values: jax.Array, lo, hi, nbins: int, B: int,
             seed, n_valid, xp.T, lo[:, None], hi[:, None], Bp, nbins,
             d_valid=d, block_bins=block_bins, block_b=bb, block_n=bn,
             interpret=(backend != "pallas"),
-            use_tpu_prng=(backend == "pallas"))
+            use_tpu_prng=(backend == "pallas"), mask=mp2)
         out_bins = nbins + (-nbins) % block_bins
         return counts.reshape(Bp, d, out_bins)[:B, :, :nbins]
     xpp = _pad_to(xp, 128, 1)
@@ -170,6 +181,6 @@ def fused_poisson_hist(seed, values: jax.Array, lo, hi, nbins: int, B: int,
         seed, n_valid, xpp, lop, hip, Bp, nbins, d_valid=d,
         block_b=bb, block_n=bn,
         interpret=(backend != "pallas"),
-        use_tpu_prng=(backend == "pallas"))
+        use_tpu_prng=(backend == "pallas"), mask=mp2)
     out_bins = nbins + (-nbins) % 128
     return counts.reshape(Bp, d, out_bins)[:B, :, :nbins]

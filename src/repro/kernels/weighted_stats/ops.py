@@ -22,8 +22,9 @@ import jax.numpy as jnp
 
 from repro.kernels.poisson_counts.kernel import (_poisson_from_bits,
                                                  _threefry_bits)
-from repro.kernels.weighted_stats.kernel import (fused_poisson_moments_kernel,
-                                                 weighted_moments_kernel)
+from repro.kernels.weighted_stats.kernel import (
+    fused_poisson_moments_kernel, fused_poisson_moments_stream_kernel,
+    weighted_moments_kernel)
 from repro.kernels.weighted_stats.ref import weighted_moments_ref
 
 
@@ -98,11 +99,17 @@ def weighted_moments(weights: jax.Array, values: jax.Array,
 # matrix-free path
 # ============================================================================
 def implicit_weight_tile(seed, n_valid, t, B: int, block_b: int,
-                         block_n: int) -> jax.Array:
+                         block_n: int, valid=None) -> jax.Array:
     """The (B, block_n) implicit Poisson(1) weight tile at n-tile ``t``:
     the scan-lowering analogue of the kernels' in-VMEM per-tile draw (same
     threefry fold-in order, same CDF ladder, columns >= ``n_valid`` masked
     to 0).
+
+    ``valid`` (optional (block_n,) f32 of exact 0.0/1.0) is this tile's
+    slice of an arbitrary validity mask — interior holes from failed
+    shards, not just a prefix.  The tile is multiplied by it AFTER the
+    prefix mask; since w·1.0 == w and w·0.0 == 0.0 exactly in f32, a
+    prefix-shaped ``valid`` reproduces the ``n_valid`` masking bit for bit.
 
     EVERY matrix-free scan lowering (fused moments here,
     kernels/kmeans_assign's fused bootstrap) must draw its weights through
@@ -115,13 +122,16 @@ def implicit_weight_tile(seed, n_valid, t, B: int, block_b: int,
     w = jax.vmap(one)(jnp.arange(B // block_b)).reshape(B, block_n)
     cols = jnp.arange(block_n, dtype=jnp.int32)
     mask = (t * block_n + cols) < n_valid
-    return jnp.where(mask[None, :], w, 0.0)
+    w = jnp.where(mask[None, :], w, 0.0)
+    if valid is not None:
+        w = w * valid[None, :]
+    return w
 
 
 @functools.partial(jax.jit, static_argnames=("B", "block_b", "block_n",
                                              "dtype"))
 def _fused_scan(seed, n_valid, xp, B, block_b, block_n,
-                dtype=jnp.float32):
+                dtype=jnp.float32, maskp=None):
     """CPU/matrix-free oracle of the fused kernel: same tile decomposition,
     same per-tile threefry bits and CDF ladder, same k-sequential f32
     accumulation — but expressed as a jnp scan so XLA:CPU runs it at full
@@ -136,10 +146,14 @@ def _fused_scan(seed, n_valid, xp, B, block_b, block_n,
     n, d = xp.shape
     nb_n = n // block_n
     xc = xp.reshape(nb_n, block_n, d)
+    # ``maskp=None`` keeps the pre-mask jaxpr byte-identical (None is a
+    # valid empty-pytree jit operand, so one jitted function serves both).
+    maskc = None if maskp is None else maskp.reshape(nb_n, block_n)
 
     def body(carry, k):
         w_tot, s1, s2 = carry
-        w = implicit_weight_tile(seed, n_valid, k, B, block_b, block_n)
+        w = implicit_weight_tile(seed, n_valid, k, B, block_b, block_n,
+                                 valid=None if maskc is None else maskc[k])
         xk = xc[k]
         return (w_tot + jnp.sum(w, axis=1, keepdims=True),
                 s1 + jax.lax.dot(w.astype(dtype), xk.astype(dtype),
@@ -159,7 +173,8 @@ def _fused_scan(seed, n_valid, xp, B, block_b, block_n,
 def fused_poisson_moments(seed, values: jax.Array, B: int,
                           backend: str | None = None,
                           block_b: int = 128, block_n: int = 512,
-                          n_valid=None, dtype=jnp.float32):
+                          n_valid=None, dtype=jnp.float32,
+                          valid_mask=None, stream: bool = False):
     """Matrix-free bootstrap moments from an int32 seed (no weight matrix).
 
     values (n, d) or (n,) -> (w_tot (B,), s1 (B,d), s2 (B,d)) where the
@@ -171,6 +186,19 @@ def fused_poisson_moments(seed, values: jax.Array, B: int,
     ``n_valid`` (traced scalar, default n) masks weight columns >= n_valid
     to zero — callers that pass pre-padded values (e.g. the chunked
     bootstrap's ragged tail) use it so ``w_tot`` ignores padding.
+
+    ``valid_mask`` (traced (n,) f32 of exact 0.0/1.0, default all-valid)
+    is the ARBITRARY-mask generalization: the implicit weight tile is
+    multiplied by the matching mask slice, so interior holes (failed
+    shards, ft/) run on the fused path.  A prefix-shaped mask is bitwise
+    identical to the equivalent ``n_valid`` (multiplying f32 by exactly
+    1.0/0.0 is exact); both may be combined.
+
+    ``stream=True`` (Pallas backends) routes through the double-buffered
+    DMA kernel: x stays in HBM/ANY memory and each (block_n, d) tile is
+    async-copied into a 2-slot VMEM scratch while the previous tile is
+    contracted — emit_pipeline-style overlap of the n-axis loads, same
+    (seed, b-tile, n-tile) weight keying, bit-identical outputs.
 
     ``dtype`` is the contraction input precision (ROADMAP bf16 study):
     ``jnp.bfloat16`` feeds w and x to the dots in bf16 with f32
@@ -195,19 +223,25 @@ def fused_poisson_moments(seed, values: jax.Array, B: int,
     n_valid = jnp.asarray(n_valid, jnp.int32)
     dtype = jnp.dtype(dtype)
     xp = _pad_to(values.astype(jnp.float32), bn, 0)
+    mp = None
+    if valid_mask is not None:
+        mp = _pad_to(jnp.asarray(valid_mask, jnp.float32).reshape(n), bn, 0)
 
     if backend == "scan":
         w_tot, s1, s2 = _fused_scan(seed, n_valid, xp, Bp, bb, bn,
-                                    dtype=dtype)
+                                    dtype=dtype, maskp=mp)
         return w_tot[:B, 0], s1[:B], s2[:B]
 
     bd = 128                    # lane width: fixed regardless of d
     xp = _pad_to(xp, bd, 1)
-    w_tot, s1, s2 = fused_poisson_moments_kernel(
+    kern = (fused_poisson_moments_stream_kernel if stream
+            else fused_poisson_moments_kernel)
+    w_tot, s1, s2 = kern(
         seed, n_valid, xp, Bp,
         block_b=bb, block_n=bn, block_d=bd,
         interpret=(backend != "pallas"),
-        use_tpu_prng=(backend == "pallas"), dtype=dtype)
+        use_tpu_prng=(backend == "pallas"), dtype=dtype,
+        mask=None if mp is None else mp[None, :])
     return w_tot[:B, 0], s1[:B, :d], s2[:B, :d]
 
 

@@ -146,12 +146,12 @@ def test_shard_map_moe_matches_gspmd(subproc_result):
 
 
 class TestFusedPrefixMaskGuard:
-    """ROADMAP "known modeling limits" regression: the fused backend
-    expresses masking as an n_valid prefix count, so an arbitrary interior
-    mask would silently weight the WRONG rows — DistributedEarl must refuse
-    loudly instead of computing wrong states (runs in-process on a 1-device
-    mesh; the 8-device behavior is identical since the check is host-side
-    per shard slice)."""
+    """The fused backend used to express masking as an n_valid prefix
+    count and REFUSE interior masks (the old ROADMAP "known modeling
+    limits" entry).  Masks now multiply the implicit weight tiles, so
+    interior holes (ft/ failed shards) run on the fused backend and must
+    MATCH the default-backend oracle (runs in-process on a 1-device mesh;
+    the 8-device behavior is identical since the mask rides shard-local)."""
 
     @staticmethod
     def _earl(backend):
@@ -163,14 +163,24 @@ class TestFusedPrefixMaskGuard:
         mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
         return DistributedEarl(mesh, Mean(), B=8, backend=backend)
 
-    def test_interior_mask_raises_with_named_limitation(self):
+    def test_interior_mask_accepted_and_matches_oracle(self):
         import jax
         import jax.numpy as jnp
+        import numpy as np
         earl = self._earl("fused_rng")
-        x = jnp.arange(16.0)
+        oracle = self._earl(None)
+        x = jnp.arange(16.0) + 1.0
         mask = jnp.ones((16,)).at[3].set(0.0)          # interior zero
-        with pytest.raises(ValueError, match="prefix mask"):
-            earl.estimate_with_loss_mask(x, mask, jax.random.PRNGKey(0))
+        res = earl.estimate_with_loss_mask(x, mask, jax.random.PRNGKey(0))
+        ref = oracle.estimate_with_loss_mask(x, mask, jax.random.PRNGKey(0))
+        exp = float(jnp.sum(x * mask) / jnp.sum(mask))
+        assert abs(float(np.ravel(res.estimate)[0]) - exp) < 1e-5
+        # same estimator as the default backend (estimates agree exactly:
+        # both are the mask-weighted statistic of the same rows)
+        np.testing.assert_allclose(np.ravel(res.estimate),
+                                   np.ravel(ref.estimate), rtol=1e-6)
+        assert res.n == ref.n == 15
+        assert np.isfinite(np.asarray(res.thetas)).all()
 
     def test_prefix_mask_accepted(self):
         import jax

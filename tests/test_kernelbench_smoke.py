@@ -26,7 +26,7 @@ def test_kernelbench_smoke_runs_and_writes_nothing():
     stamps = {}
     for p in (kernelbench._BENCH_JSON, kernelbench._BENCH_KMEANS_JSON,
               kernelbench._BENCH_QUANTILE_JSON,
-              kernelbench._BENCH_MULTI_JSON):
+              kernelbench._BENCH_MULTI_JSON, kernelbench._BENCH_STREAM_JSON):
         stamps[p] = p.stat().st_mtime_ns if p.exists() else None
 
     kernelbench.run(smoke=True)
