@@ -31,6 +31,7 @@ METRICS = {
     "BENCH_kmeans.json": ("speedup_fused_vs_materialized",),
     "BENCH_quantile.json": ("speedup_fused_vs_materialized",),
     "BENCH_multi.json": ("speedup_group_vs_sequential",),
+    "BENCH_grouped.json": ("speedup_grouped_vs_sequential",),
     "BENCH_stream.json": ("speedup_stream_vs_serial",),
 }
 
@@ -41,6 +42,9 @@ FLOORS = {
     "speedup_fused_vs_materialized": 1.0,
     "speedup_fused_vs_naive": 1.0,
     "speedup_group_vs_sequential": 1.5,
+    # ISSUE-7: G=8 grouped means share ONE weight stream and one data
+    # pass vs 8 sequential per-key fused runs
+    "speedup_grouped_vs_sequential": 2.0,
     # ISSUE-6: streaming must beat the non-overlapped serial
     # transfer+compute pipeline by 30% even on a 1-core host
     "speedup_stream_vs_serial": 1.3,
@@ -51,6 +55,9 @@ INVARIANTS = {
     ("BENCH_bootstrap.json", "peak_weight_bytes.fused_rng"): 0,
     ("BENCH_multi.json", "member_thetas_bitwise_equal_to_sequential"): True,
     ("BENCH_multi.json", "weight_streams.group"): 1,
+    ("BENCH_grouped.json",
+     "per_key_thetas_bitwise_equal_to_sequential"): True,
+    ("BENCH_grouped.json", "weight_streams.grouped"): 1,
     ("BENCH_stream.json", "thetas_bitwise_equal_to_chunked"): True,
 }
 

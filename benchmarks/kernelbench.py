@@ -45,6 +45,7 @@ _BENCH_KMEANS_JSON = _ROOT / "BENCH_kmeans.json"
 _BENCH_QUANTILE_JSON = _ROOT / "BENCH_quantile.json"
 _BENCH_MULTI_JSON = _ROOT / "BENCH_multi.json"
 _BENCH_STREAM_JSON = _ROOT / "BENCH_stream.json"
+_BENCH_GROUPED_JSON = _ROOT / "BENCH_grouped.json"
 
 
 def _timer(smoke: bool):
@@ -99,6 +100,7 @@ def run(smoke: bool = False) -> None:
     run_quantile(smoke=smoke)
     run_kmeans(smoke=smoke)
     run_multi(smoke=smoke)
+    run_grouped(smoke=smoke)
     run_stream(smoke=smoke)
 
 
@@ -393,6 +395,93 @@ def run_multi(smoke: bool = False) -> None:
         "speedup_group_vs_sequential": speedup,
         "member_thetas_bitwise_equal_to_sequential": same,
         "weight_streams": {"group": 1, "sequential": len(members)},
+    }, indent=2) + "\n")
+
+
+def run_grouped(smoke: bool = False) -> None:
+    """GROUP BY bootstrap (GroupedStatistic) vs G sequential per-key runs.
+
+    The grouped path pays ONE implicit Poisson(1) weight stream and one
+    pass over x, routing each weight tile into G per-key accumulator
+    slots by exact 0/1 key masks; the sequential baseline reruns the
+    fused kernel per key with ``valid_mask = (key == g)`` — G threefry
+    streams of identical cost and G passes over x.  Each per-key run is
+    its own jitted dispatch (the pre-GROUP-BY workflow); the PRNG + data
+    pass dominate on CPU, so grouped should approach G×/(1 + small
+    per-key dot overhead) — the regression gate floors the ratio at 2×
+    for G=8 means.
+    """
+    time = _timer(smoke)
+    from repro.core.reduce_api import GroupedStatistic
+    B, n, d, G = (8, 512, 2, 4) if smoke else (256, 1 << 16, 4, 8)
+    key = jax.random.PRNGKey(19)
+    x = jax.random.normal(key, (n, d))
+    gid = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, G)
+    vals = jnp.concatenate([x, gid[:, None].astype(jnp.float32)], axis=1)
+    stat = GroupedStatistic(Mean(), G)
+    inner = Mean()
+
+    @jax.jit
+    def grouped(vals):
+        return jax.vmap(stat.finalize)(
+            fused_resample_states(stat, 7, vals, B))
+
+    seqs = [jax.jit(lambda x, g=g: jax.vmap(inner.finalize)(
+        fused_resample_states(inner, 7, x, B,
+                              valid_mask=(gid == g).astype(jnp.float32))))
+        for g in range(G)]
+
+    if smoke:
+        us_grp = time(lambda: grouped(vals))
+        us_seq = time(lambda: [f(x) for f in seqs])
+        speedup = us_seq / max(us_grp, 1e-9)
+    else:
+        # interleaved paired-ratio discipline (see run_multi): the ratio
+        # is an acceptance gate, so each rep times both sides back to
+        # back and the gate takes the median of per-pair ratios.
+        import time as _time
+        jax.block_until_ready(grouped(vals))
+        [jax.block_until_ready(f(x)) for f in seqs]
+        tg, ts = [], []
+        for _ in range(7):
+            t0 = _time.perf_counter()
+            jax.block_until_ready(grouped(vals))
+            tg.append(_time.perf_counter() - t0)
+            t0 = _time.perf_counter()
+            [jax.block_until_ready(f(x)) for f in seqs]
+            ts.append(_time.perf_counter() - t0)
+        ratios = sorted(b / a for a, b in zip(tg, ts))
+        speedup = ratios[len(ratios) // 2]
+        us_grp = sorted(tg)[len(tg) // 2] * 1e6
+        us_seq = sorted(ts)[len(ts) // 2] * 1e6
+    emit("grouped_bootstrap", us_grp,
+         f"B={B};n={n};d={d};G={G};weight_streams=1")
+    emit("grouped_bootstrap_sequential", us_seq,
+         f"grouped_speedup={speedup:.2f}x;weight_streams={G}")
+
+    # common random numbers => key g's thetas identical to the dedicated
+    # per-key fused run under valid_mask=(key==g); record the invariant.
+    tgv = grouped(vals)
+    same = all(bool(jnp.array_equal(tgv[:, g], f(x)))
+               for g, f in enumerate(seqs))
+    emit("grouped_bootstrap_per_key", 0.0, f"per_key_bitwise={same}")
+
+    if smoke:
+        # exercise the grouped Pallas moments kernel (interpret on CPU)
+        jax.block_until_ready(ws_ops.fused_poisson_moments(
+            7, x, B, backend="pallas_interpret", group_ids=gid,
+            num_groups=G)[0])
+        return
+    _BENCH_GROUPED_JSON.write_text(json.dumps({
+        "config": {"B": B, "n": n, "d": d, "G": G,
+                   "backend": jax.default_backend(),
+                   "fused_lowering": ("pallas"
+                                      if jax.default_backend() == "tpu"
+                                      else "scan")},
+        "us_per_call": {"grouped": us_grp, "sequential": us_seq},
+        "speedup_grouped_vs_sequential": speedup,
+        "per_key_thetas_bitwise_equal_to_sequential": same,
+        "weight_streams": {"grouped": 1, "sequential": G},
     }, indent=2) + "\n")
 
 

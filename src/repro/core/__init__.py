@@ -6,6 +6,7 @@ samples, with SSABE parameter estimation and delta-maintained resampling.
 See DESIGN.md for the Hadoop→TPU adaptation map.
 """
 from repro.core.accuracy import (AccuracyReport, GroupAccuracyReport,
+                                 KeyedAccuracyReport,
                                  coefficient_of_variation, percentile_ci,
                                  relative_halfwidth, report_for,
                                  standard_error,
@@ -22,17 +23,18 @@ from repro.core.delta import (MultinomialDeltaBootstrap, PoissonDelta,
                               work_saved)
 from repro.core.distributed import (DistributedEarl, build_bootstrap_step,
                                     shard_values)
-from repro.core.reduce_api import (Count, KMeansState, KMeansStep, Mean,
-                                   MeanLoss, Median, MomentState, Quantile,
-                                   Statistic, StatisticGroup, Std, Sum,
-                                   Var, kmeans_fit)
+from repro.core.reduce_api import (Count, GroupedStatistic, KMeansState,
+                                   KMeansStep, Mean, MeanLoss, Median,
+                                   MomentState, Quantile, Statistic,
+                                   StatisticGroup, Std, Sum, Var, kmeans_fit)
 from repro.core.session import EarlSession, EarlyResult
 from repro.core.ssabe import SSABEResult, ssabe
 from repro.core.streaming import (StreamingBootstrapResult, StreamReport,
                                   bootstrap_streaming)
 
 __all__ = [
-    "AccuracyReport", "GroupAccuracyReport", "coefficient_of_variation",
+    "AccuracyReport", "GroupAccuracyReport", "KeyedAccuracyReport",
+    "coefficient_of_variation",
     "percentile_ci", "relative_halfwidth", "report_for", "standard_error",
     "theoretical_num_bootstraps", "theoretical_sample_size",
     "BootstrapResult", "bootstrap", "bootstrap_chunked", "bootstrap_thetas",
@@ -42,9 +44,9 @@ __all__ = [
     "p_shared", "poisson_delta_extend", "poisson_delta_init",
     "poisson_delta_result", "shared_base_bootstrap", "work_saved",
     "DistributedEarl", "build_bootstrap_step", "shard_values",
-    "Count", "KMeansState", "KMeansStep", "Mean", "MeanLoss", "Median",
-    "MomentState", "Quantile", "Statistic", "StatisticGroup", "Std",
-    "Sum", "Var", "kmeans_fit",
+    "Count", "GroupedStatistic", "KMeansState", "KMeansStep", "Mean",
+    "MeanLoss", "Median", "MomentState", "Quantile", "Statistic",
+    "StatisticGroup", "Std", "Sum", "Var", "kmeans_fit",
     "EarlSession", "EarlyResult", "SSABEResult", "ssabe",
     "StreamingBootstrapResult", "StreamReport", "bootstrap_streaming",
 ]

@@ -128,12 +128,39 @@ class GroupAccuracyReport:
         return tuple(m.cv for m in self.members)
 
 
-def report_for(thetas, alpha: float = 0.05):
-    """AccuracyReport for a (B, ...) theta array, or a GroupAccuracyReport
-    for the tuple of per-member thetas a StatisticGroup produces."""
+@dataclasses.dataclass(frozen=True)
+class KeyedAccuracyReport(GroupAccuracyReport):
+    """Per-KEY AccuracyReports for a ``GroupedStatistic`` bootstrap run
+    (one entry per group key, in key order 0..G-1).
+
+    Inherits the worst-member scalar gates from ``GroupAccuracyReport`` —
+    here worst-KEY: ``report.cv <= sigma`` reads "stop when EVERY key
+    meets the target", which is the BlinkDB-style per-key guarantee (a
+    rare key's wide CI cannot hide behind a heavy hitter's tight one).
+    All keys share one Poisson weight stream (common random numbers), so
+    cross-key comparisons of these CIs are consistent."""
+
+    @property
+    def worst_key(self) -> int:
+        """The key whose cv gates the stop — where more rows are needed."""
+        cvs = self.cvs
+        return max(range(len(cvs)), key=lambda g: cvs[g])
+
+
+def report_for(thetas, alpha: float = 0.05, num_groups=None):
+    """AccuracyReport for a (B, ...) theta array, a GroupAccuracyReport
+    for the tuple of per-member thetas a StatisticGroup produces, or — when
+    ``num_groups`` is set (drivers read it off ``stat.num_groups`` for a
+    GroupedStatistic) — a KeyedAccuracyReport splitting the (B, G, ...)
+    thetas into per-key reports along axis 1."""
     if isinstance(thetas, (tuple, list)):
         return GroupAccuracyReport(tuple(
             AccuracyReport.from_thetas(t, alpha) for t in thetas))
+    if num_groups is not None:
+        thetas = jnp.asarray(thetas)
+        return KeyedAccuracyReport(tuple(
+            AccuracyReport.from_thetas(thetas[:, g], alpha)
+            for g in range(int(num_groups))))
     return AccuracyReport.from_thetas(thetas, alpha)
 
 

@@ -232,6 +232,16 @@ def sharded_fused_states(stat: Statistic, base_seed, x2: jax.Array, B: int,
     so mesh and sequential stay bitwise consistent) — the single-read
     estimate for the chunked and streaming drivers.
     """
+    # Fail actionably BEFORE tracing: a non-mergeable statistic would
+    # otherwise die deep inside shard_map/scan with a shape error (or,
+    # worse, silently mis-combine per-shard states).
+    if not getattr(stat, "mergeable", True):
+        raise ValueError(
+            f"sharded_fused_states requires a mergeable statistic, but "
+            f"{type(stat).__name__} sets mergeable=False — its per-shard "
+            "states cannot be merge/psum-combined.  Use the single-device "
+            "bootstrap (backend='fused_rng' without mesh=/nshards=), or "
+            "implement an associative merge and set mergeable=True")
     if mesh is not None:
         nshards = int(mesh.shape[data_axis])
     if nshards is None:
@@ -407,7 +417,9 @@ def bootstrap(values: jax.Array, stat: Statistic, B: int, key: jax.Array,
     return BootstrapResult(
         estimate=estimate,
         thetas=thetas,
-        report=accuracy.report_for(thetas, alpha=alpha),
+        report=accuracy.report_for(thetas, alpha=alpha,
+                                   num_groups=getattr(stat, "num_groups",
+                                                      None)),
         B=int(B),
         n=int(values.shape[0]),
     )
@@ -481,6 +493,8 @@ def bootstrap_chunked(values: jax.Array, stat: Statistic, B: int,
     estimate = stat.correct(stat.finalize(est), p)
     return BootstrapResult(
         estimate=estimate, thetas=thetas,
-        report=accuracy.report_for(thetas),
+        report=accuracy.report_for(thetas,
+                                   num_groups=getattr(stat, "num_groups",
+                                                      None)),
         B=int(B), n=int(n),
     )

@@ -120,7 +120,9 @@ def poisson_delta_result(pd: PoissonDelta, estimate: Any = None,
         estimate = pd.stat.finalize(pd.est_state)
     return BootstrapResult(
         estimate=pd.stat.correct(estimate, p), thetas=thetas,
-        report=accuracy.report_for(thetas),
+        report=accuracy.report_for(thetas,
+                                   num_groups=getattr(pd.stat, "num_groups",
+                                                      None)),
         B=pd.B, n=pd.n,
     )
 
@@ -180,6 +182,11 @@ class MultinomialDeltaBootstrap:
                 "MultinomialDeltaBootstrap is the host/NumPy fig10 baseline"
                 " and stacks scalar thetas — run StatisticGroup through the"
                 " Poisson delta path (poisson_delta_init) instead")
+        if getattr(stat, "num_groups", None) is not None:
+            raise TypeError(
+                "MultinomialDeltaBootstrap does not produce per-key reports"
+                " — run GroupedStatistic through the Poisson delta path"
+                " (poisson_delta_init) instead")
         self.stat = stat
         self.B = B
         self.rng = np.random.default_rng(seed)

@@ -153,7 +153,8 @@ class DistributedEarl:
         est = self.stat.correct(est, p)
         return BootstrapResult(
             estimate=est, thetas=thetas,
-            report=accuracy.report_for(thetas),
+            report=accuracy.report_for(
+                thetas, num_groups=getattr(self.stat, "num_groups", None)),
             B=self.B, n=int(_as_2d(values).shape[0]))
 
     def estimate_with_loss_mask(self, values: jax.Array, mask: jax.Array,
@@ -177,5 +178,6 @@ class DistributedEarl:
         n_eff = int(jnp.sum(mask))
         return BootstrapResult(
             estimate=est, thetas=thetas,
-            report=accuracy.report_for(thetas),
+            report=accuracy.report_for(
+                thetas, num_groups=getattr(self.stat, "num_groups", None)),
             B=self.B, n=n_eff)

@@ -47,8 +47,14 @@ def split_params(stat: "Statistic") -> Tuple["Statistic", dict]:
     arrays, so e.g. every ``KMeansStep(cent)`` of a Lloyd loop maps to ONE
     jit cache entry; ``bind_params`` re-attaches the (possibly traced)
     arrays inside the jitted function.  ``StatisticGroup`` splits
-    member-wise, so a group wrapping a fresh same-shaped ``KMeansStep`` per
-    Lloyd iteration still hits one cache entry."""
+    member-wise and ``GroupedStatistic`` through its inner statistic, so a
+    group wrapping a fresh same-shaped ``KMeansStep`` per Lloyd iteration
+    still hits one cache entry."""
+    if isinstance(stat, GroupedStatistic):
+        ispec, iparams = split_params(stat.inner)
+        if not iparams:
+            return stat, {}
+        return stat.with_inner(ispec), {"inner": iparams}
     if isinstance(stat, StatisticGroup):
         specs, params = [], {}
         for i, m in enumerate(stat.members):
@@ -76,6 +82,8 @@ def bind_params(stat: "Statistic", params: dict) -> "Statistic":
     """Inverse of ``split_params``: re-attach traced array parameters."""
     if not params:
         return stat
+    if isinstance(stat, GroupedStatistic):
+        return stat.with_inner(bind_params(stat.inner, params["inner"]))
     if isinstance(stat, StatisticGroup):
         members = list(stat.members)
         for k, mp in params.items():
@@ -116,6 +124,14 @@ class Statistic:
     #: instances with same-shaped parameters share one compilation.
     array_params: Tuple[str, ...] = ()
 
+    #: whether ``merge`` is a true associative combinator over this
+    #: statistic's states.  Every built-in is mergeable; custom statistics
+    #: whose state is order-dependent (e.g. a reservoir keyed on arrival
+    #: order) set this False and the chunked/sharded/streaming drivers —
+    #: which all rely on merging partial states — reject them UP FRONT with
+    #: an actionable ValueError instead of failing deep inside a trace.
+    mergeable: bool = True
+
     # Structural hash/eq so jit caches keyed on a (static) Statistic hit
     # across instances: Mean() == Mean(); config'd stats compare by their
     # scalar attributes; ``split_params`` markers compare by (shape, dtype).
@@ -126,7 +142,12 @@ class Statistic:
         items = []
         for k in sorted(self.__dict__):
             v = self.__dict__[k]
-            if isinstance(v, (int, float, str, bool, tuple, type(None))):
+            if isinstance(v, Statistic):
+                # nested statistics (GroupedStatistic.inner) compare
+                # structurally — fresh GroupedStatistic(Mean(), G) instances
+                # hit one jit cache entry like fresh Mean()s do.
+                items.append((k, v._static_key()))
+            elif isinstance(v, (int, float, str, bool, tuple, type(None))):
                 items.append((k, v))
             else:
                 items.append((k, id(v)))
@@ -347,7 +368,8 @@ class Quantile(Statistic):
 
     def __init__(self, q: float, nbins: int = 2048,
                  lo: float = 0.0, hi: float = 1.0,
-                 backend: Optional[str] = None):
+                 backend: Optional[str] = None,
+                 block_bins: Optional[int] = None):
         if backend not in self._BACKENDS:
             raise ValueError(f"unknown quantile backend: {backend!r}")
         self.q = float(q)
@@ -355,11 +377,22 @@ class Quantile(Statistic):
         self.lo = float(lo)
         self.hi = float(hi)
         self.backend = backend
+        #: Pallas output-axis tiling for the fused sketch (VMEM escape
+        #: hatch when d·nbins — or G·nbins under GroupedStatistic — is too
+        #: big to keep resident); a lowering knob, NOT part of the
+        #: accumulator identity.
+        self.block_bins = None if block_bins is None else int(block_bins)
 
     def with_range(self, lo: float, hi: float) -> "Quantile":
+        """Re-range copy (pilot-scan margin added).  Preserves EVERY
+        constructor knob — ``backend``, ``nbins``, ``block_bins`` — so a
+        re-ranged quantile keeps its lowering config and two same-range
+        re-ranged quantiles still share one accumulator slot in a
+        StatisticGroup."""
         span = max(hi - lo, _EPS)
         return Quantile(self.q, self.nbins, lo - 0.01 * span,
-                        hi + 0.01 * span, backend=self.backend)
+                        hi + 0.01 * span, backend=self.backend,
+                        block_bins=self.block_bins)
 
     def init_state(self, dim: int) -> HistogramState:
         return HistogramState(
@@ -411,7 +444,8 @@ class Quantile(Statistic):
         counts = wh_ops.fused_poisson_hist(seed, values, self.lo, self.hi,
                                            self.nbins, B, backend=backend,
                                            n_valid=n_valid,
-                                           valid_mask=valid_mask)
+                                           valid_mask=valid_mask,
+                                           block_bins=self.block_bins)
         return HistogramState(
             counts=counts,
             lo=jnp.full((B, d), self.lo, jnp.float32),
@@ -469,11 +503,13 @@ class Quantile(Statistic):
 
 
 def Median(nbins: int = 2048, lo: float = 0.0, hi: float = 1.0,
-           backend: Optional[str] = None) -> Quantile:
+           backend: Optional[str] = None,
+           block_bins: Optional[int] = None) -> Quantile:
     """q=0.5 Quantile; forwards every constructor knob ``Quantile`` accepts
     (``backend`` was historically dropped here, silently downgrading Pallas
     users to the scatter path)."""
-    return Quantile(0.5, nbins=nbins, lo=lo, hi=hi, backend=backend)
+    return Quantile(0.5, nbins=nbins, lo=lo, hi=hi, backend=backend,
+                    block_bins=block_bins)
 
 
 @jax.tree_util.register_dataclass
@@ -664,6 +700,7 @@ class StatisticGroup(Statistic):
             raise ValueError(f"unknown group backend: {backend!r}")
         self.members = members
         self.backend = backend
+        self.mergeable = all(m.mergeable for m in members)
         slots, keys, member_slot = [], {}, []
         for m in members:
             k = m.accumulator_key()
@@ -723,6 +760,187 @@ class StatisticGroup(Statistic):
                                           n_valid=n_valid,
                                           valid_mask=valid_mask,
                                           backend=self.backend)
+
+
+def _tree_take(state, g, axis: int):
+    """Slice index ``g`` off ``axis`` of every leaf (one key's view of a
+    G-keyed state)."""
+    return jax.tree_util.tree_map(
+        lambda a: jax.lax.index_in_dim(a, g, axis, keepdims=False), state)
+
+
+def _tree_stack(states, axis: int):
+    """Inverse of ``_tree_take``: stack per-key states into a G axis."""
+    return jax.tree_util.tree_map(
+        lambda *ls: jnp.stack(ls, axis=axis), *states)
+
+
+class GroupedStatistic(Statistic):
+    """GROUP BY for the bootstrap: the inner statistic computed per key, in
+    one pass, under ONE shared Poisson(1) resample stream.
+
+    The key is the LAST column of ``values`` — small nonnegative integers
+    ``0..num_groups-1`` stored as floats (exact below 2^24); the remaining
+    columns are the inner statistic's data.  State is the inner state with
+    a leading ``(G, ...)`` key axis on every leaf (MomentState → (G,·)
+    moments, HistogramState → (G, d, nbins) counts, KMeansState likewise);
+    ``merge``/``psum_state`` delegate leaf-wise to the inner statistic
+    (both are shape-agnostic for every built-in), so keyed states stay
+    mergeable and mesh psum composes per-key for free.
+
+    The contract that makes per-key CIs trustworthy: under
+    ``backend="fused_rng"`` each implicit weight tile is drawn ONCE (the
+    same ``(seed, b-tile, n-tile)`` threefry discipline as every fused
+    path) and routed into each key's accumulator by an exact 0/1 key mask
+    multiply — so key g's thetas are BITWISE equal to running the inner
+    statistic alone with ``valid_mask = (key == g)``, i.e. on that key's
+    rows only, under the same seed.  Common random numbers across keys
+    mean cross-key comparisons are consistent, the same argument that
+    makes ``StatisticGroup`` members jointly comparable.
+
+    ``finalize``/``correct`` return the inner result with a leading G axis
+    (so bootstrap thetas are (B, G, ...)); drivers detect ``num_groups``
+    and build a ``KeyedAccuracyReport`` — per-key AccuracyReports with the
+    worst key gating the session's sigma stop.
+
+    ``backend``: None = auto (grouped Pallas kernel on TPU for moment
+    inners, grouped scan elsewhere), "scan", "pallas", "pallas_interpret"
+    (moment inners only — the grouped histogram / k-means lowerings are
+    scan-based; see ROADMAP's support matrix).
+    """
+
+    _BACKENDS = (None, "scan", "pallas", "pallas_interpret")
+
+    def __init__(self, inner: Statistic, num_groups: int,
+                 backend: Optional[str] = None):
+        if isinstance(inner, GroupedStatistic):
+            raise TypeError("GroupedStatistic cannot nest another "
+                            "GroupedStatistic — use a single key column "
+                            "with the product of the key spaces")
+        if isinstance(inner, StatisticGroup):
+            raise TypeError("GroupedStatistic over a StatisticGroup is not "
+                            "supported — group the keyed statistics "
+                            "instead: StatisticGroup([GroupedStatistic(m, "
+                            "G) for m in members])")
+        if not isinstance(inner, Statistic):
+            raise TypeError(f"inner statistic {inner!r} is not a Statistic")
+        if backend not in self._BACKENDS:
+            raise ValueError(f"unknown grouped backend: {backend!r}")
+        num_groups = int(num_groups)
+        if num_groups < 1:
+            raise ValueError(f"num_groups must be >= 1, got {num_groups}")
+        self.inner = inner
+        self.num_groups = num_groups
+        self.backend = backend
+        self.mergeable = bool(inner.mergeable)
+
+    def with_inner(self, inner: Statistic) -> "GroupedStatistic":
+        """Rebuild around a new inner instance — used by
+        split_params/bind_params to thread traced array params (KMeansStep
+        centroids) through the keyed wrapper."""
+        return GroupedStatistic(inner, self.num_groups, backend=self.backend)
+
+    @staticmethod
+    def _split_key(values: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        x = _as_2d(values)
+        if x.shape[1] < 2:
+            raise ValueError("GroupedStatistic needs at least 2 columns: "
+                             "data columns plus the key as the LAST column")
+        return x[:, :-1], x[:, -1]
+
+    # -- reducer protocol: every leaf gains a leading G axis --------------
+    def init_state(self, dim: int) -> State:
+        # ``dim`` counts the key column (drivers pass values.shape[1]);
+        # the inner statistic sees one fewer.
+        inner = self.inner
+        return jax.vmap(lambda _: inner.init_state(dim - 1))(
+            jnp.arange(self.num_groups))
+
+    def update(self, state, values, weights=None):
+        x, gid = self._split_key(values)
+        w = _w(x, weights)
+        # static per-key loop running the inner's EXACT update on
+        # key-masked weights — identical ops on identical values as
+        # updating each key alone (0/1 mask multiplies are exact).
+        outs = [self.inner.update(_tree_take(state, g, 0), x,
+                                  w * (gid == g).astype(jnp.float32))
+                for g in range(self.num_groups)]
+        return _tree_stack(outs, 0)
+
+    def merge(self, a, b):
+        return self.inner.merge(a, b)
+
+    def psum_state(self, state, axis_names):
+        return self.inner.psum_state(state, axis_names)
+
+    def finalize(self, state) -> Result:
+        outs = [self.inner.finalize(_tree_take(state, g, 0))
+                for g in range(self.num_groups)]
+        return _tree_stack(outs, 0)
+
+    def correct(self, result, p: float) -> Result:
+        return self.inner.correct(result, p)
+
+    def accumulator_key(self):
+        return None
+
+    def tile_update(self, states, x_tile, w_tile):
+        """Grouped segment-reduction of one shared weight tile: the key
+        column is split off ``x_tile`` and each key's slot advances by the
+        inner statistic's EXACT tile math under ``w_tile * (key == g)`` —
+        masks are exact 0/1 so ``(w·valid)·keymask ≡ w·(valid·keymask)``
+        bit for bit, which is what keeps every grouped fused path bitwise
+        equal to the per-key oracle.  ``states`` leaves are (B, G, ...)."""
+        x = x_tile[:, :-1]
+        gid = x_tile[:, -1]
+        outs = []
+        for g in range(self.num_groups):
+            m = (gid == g).astype(jnp.float32)
+            outs.append(self.inner.tile_update(
+                _tree_take(states, g, 1), x, w_tile * m[None, :]))
+        return _tree_stack(outs, 1)
+
+    def fused_poisson_states(self, seed, values, B, n_valid=None,
+                             valid_mask=None):
+        """Matrix-free keyed bootstrap: ONE implicit Poisson(1) stream,
+        segment-reduced per key inside the kernels — no (B, n) weight
+        matrix and no (n, G) one-hot ever materializes.  Dispatches to the
+        grouped weighted_stats / weighted_hist / kmeans_assign lowerings
+        for built-in inners; custom inners run the generic grouped tile
+        scan (kernels/fused_multi)."""
+        x, gid = self._split_key(values)
+        G = self.num_groups
+        inner = self.inner
+        if isinstance(inner, _MomentStatistic):
+            from repro.kernels.weighted_stats import ops as ws_ops
+            w_tot, s1, s2 = ws_ops.fused_poisson_moments(
+                seed, x, B, backend=self.backend, n_valid=n_valid,
+                valid_mask=valid_mask, group_ids=gid, num_groups=G)
+            return jax.vmap(jax.vmap(inner.from_moments))(w_tot, s1, s2)
+        if isinstance(inner, Quantile):
+            from repro.kernels.weighted_hist import ops as wh_ops
+            counts = wh_ops.fused_poisson_hist(
+                seed, x, inner.lo, inner.hi, inner.nbins, B,
+                backend=self.backend, n_valid=n_valid,
+                valid_mask=valid_mask, group_ids=gid, num_groups=G)
+            d = x.shape[1]
+            return HistogramState(
+                counts=counts,
+                lo=jnp.full((B, G, d), inner.lo, jnp.float32),
+                hi=jnp.full((B, G, d), inner.hi, jnp.float32))
+        if isinstance(inner, KMeansStep):
+            from repro.kernels.kmeans_assign import ops as ka_ops
+            sums, counts, inertia = ka_ops.fused_poisson_kmeans(
+                seed, x, inner.centroids, B, backend=self.backend,
+                n_valid=n_valid, valid_mask=valid_mask, group_ids=gid,
+                num_groups=G)
+            return KMeansState(sums=sums, counts=counts, inertia=inertia)
+        # custom inner: generic grouped tile scan over the shared stream
+        # (GroupedStatistic.tile_update does the key segmentation).
+        from repro.kernels.fused_multi import ops as fm_ops
+        return fm_ops.fused_poisson_tiled(self, seed, values, B,
+                                          n_valid=n_valid,
+                                          valid_mask=valid_mask)
 
 
 class MeanLoss(Mean):

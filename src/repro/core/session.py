@@ -99,6 +99,14 @@ class EarlSession:
                 AccuracyReport(cv=0.0, se=0.0, rel_halfwidth=0.0,
                                ci_lo=r, ci_hi=r, boot_mean=r)
                 for r in res)
+        elif getattr(self.stat, "num_groups", None) is not None:
+            # keyed runs get the same guarantee per KEY: a GroupedStatistic
+            # result is a (G, ...) array, one degenerate report per key.
+            from repro.core.accuracy import AccuracyReport
+            reports = tuple(
+                AccuracyReport(cv=0.0, se=0.0, rel_halfwidth=0.0,
+                               ci_lo=res[g], ci_hi=res[g], boot_mean=res[g])
+                for g in range(int(self.stat.num_groups)))
         return EarlyResult(
             result=res, cv=0.0, ci_lo=res, ci_hi=res, n_used=N, N=N,
             fraction=1.0, B=1, iterations=len(history), fell_back=True,

@@ -32,13 +32,18 @@ from repro.core.delta import poisson_delta_extend, poisson_delta_init, \
 from repro.core.reduce_api import Statistic, _as_2d
 
 
-def _cv_of(thetas) -> float:
+def _cv_of(thetas, num_groups=None) -> float:
     """c_v of a theta distribution — for a StatisticGroup's tuple of
     per-member thetas this is the WORST member, so phase A/B converge only
-    once every member of the group is stable (the group's AES contract)."""
+    once every member of the group is stable (the group's AES contract).
+    With ``num_groups`` (a GroupedStatistic's (B, G, ...) thetas) it is the
+    WORST KEY, the per-key analogue of the same contract."""
     if isinstance(thetas, (tuple, list)):
         return max(float(accuracy.coefficient_of_variation(t))
                    for t in thetas)
+    if num_groups is not None:
+        return max(float(accuracy.coefficient_of_variation(thetas[:, g]))
+                   for g in range(int(num_groups)))
     return float(accuracy.coefficient_of_variation(thetas))
 
 
@@ -113,7 +118,8 @@ def estimate_B(values: jax.Array, stat: Statistic, tau: float,
     prev_cv = None
     chosen = B_max
     for B in candidates:
-        cv = _cv_of(jax.tree_util.tree_map(lambda t: t[:B], thetas_full))
+        cv = _cv_of(jax.tree_util.tree_map(lambda t: t[:B], thetas_full),
+                    num_groups=getattr(stat, "num_groups", None))
         history.append((B, cv))
         if prev_cv is not None and abs(cv - prev_cv) < tau:
             chosen = B

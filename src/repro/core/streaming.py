@@ -142,10 +142,19 @@ def bootstrap_streaming(store, stat: Statistic, B: int, key: jax.Array,
     if not isinstance(stat, Statistic):
         raise TypeError("stat must be a reduce_api.Statistic")
     if backend != "fused_rng":
-        raise ValueError("bootstrap_streaming is matrix-free only: "
-                         "backend='fused_rng' (a materialized (B, chunk) "
-                         "weight matrix would defeat the streaming memory "
-                         "contract)")
+        raise ValueError(
+            f"bootstrap_streaming is matrix-free only and got "
+            f"backend={backend!r}; the only supported backend is "
+            "'fused_rng' (a materialized (B, chunk) weight matrix would "
+            "defeat the streaming memory contract)")
+    # Fail BEFORE the prefetch thread starts: a non-mergeable statistic
+    # cannot fold chunk i+1's delta states into chunk i's carry.
+    if not getattr(stat, "mergeable", True):
+        raise ValueError(
+            f"bootstrap_streaming folds per-chunk states with merge(), but "
+            f"{type(stat).__name__} sets mergeable=False — stream a "
+            "mergeable statistic, or run the single-pass bootstrap "
+            "(backend='fused_rng') on the materialized sample instead")
     if store.N == 0:
         raise ValueError("bootstrap_streaming needs a non-empty store")
     if queue_depth < 1:
@@ -201,7 +210,9 @@ def bootstrap_streaming(store, stat: Statistic, B: int, key: jax.Array,
     estimate = stat.correct(stat.finalize(est), p)
     return StreamingBootstrapResult(
         estimate=estimate, thetas=thetas,
-        report=accuracy.report_for(thetas, alpha=alpha),
+        report=accuracy.report_for(thetas, alpha=alpha,
+                                   num_groups=getattr(stat, "num_groups",
+                                                      None)),
         B=int(B), n=int(store.N),
         stream=StreamReport(wall_s=wall_s,
                             stage_s=timings.get("stage_s", 0.0),

@@ -1,13 +1,14 @@
 """Data substrate: sharded store (HDFS-splits analogue), samplers, pipeline."""
 from repro.data.store import ShardedStore
 from repro.data.sampler import (PermutationSampler, PostMapSampler,
-                                PreMapSampler)
+                                PreMapSampler, StratifiedSampler)
 from repro.data.pipeline import EvalSamplePipeline, TokenBatchPipeline
 from repro.data.synthetic import (synthetic_clusters, synthetic_numeric,
                                   synthetic_tokens)
 
 __all__ = [
     "ShardedStore", "PermutationSampler", "PostMapSampler", "PreMapSampler",
+    "StratifiedSampler",
     "EvalSamplePipeline", "TokenBatchPipeline",
     "synthetic_clusters", "synthetic_numeric", "synthetic_tokens",
 ]

@@ -67,6 +67,83 @@ class PermutationSampler:
         return jnp.asarray(out)
 
 
+class StratifiedSampler(PermutationSampler):
+    """Skew-aware prefix sampler for keyed (GROUP BY) sessions.
+
+    A uniform prefix of a skewed table starves rare keys: with key g at
+    frequency f_g, an n-row prefix holds ~f_g·n of its rows, so the
+    worst key's c_v — what a keyed ``EarlSession`` gates on via
+    ``KeyedAccuracyReport`` — is stuck at the rarest key's trickle and
+    the session grows the sample far past what the heavy hitters need.
+    This sampler reorders the base permutation by stride scheduling:
+    within each stratum rows keep the base permutation's order (so each
+    stratum's portion of any prefix is a uniform without-replacement
+    sample of that key), and across strata row i of stratum g is
+    scheduled at virtual time (i+1)/share_g, the global order being the
+    stable ascending sort of those times.  Every prefix then holds the
+    strata in ~share proportions — ``shares=None`` gives EQUAL shares,
+    surfacing rare keys at the same rate as heavy hitters — and a
+    stratum's budget being exhausted simply lets the others fill in.
+
+    The stratum is the integer KEY COLUMN (default: last), matching
+    ``GroupedStatistic``'s key-is-last-column convention.  Reading the
+    keys is one column scan over the store at construction — the exact
+    key accounting of the paper's post-map sampling, paid once.
+
+    Caveat (also in ROADMAP "Known modeling limits"): prefixes are
+    uniform WITHIN each key but deliberately non-uniform across keys, so
+    whole-table ``correct(p)`` fractions no longer describe any single
+    key — keyed sessions should correct per key with that key's own
+    sampled fraction (``stratum_counts`` / ``stratum_sizes`` expose the
+    numbers).
+    """
+
+    def __init__(self, store: ShardedStore, num_groups: int, seed: int = 0,
+                 shares=None, key_column: int = -1, mode: str = "pre_map"):
+        super().__init__(store, seed=seed, mode=mode)
+        self.num_groups = int(num_groups)
+        cols = []
+        for s in store.splits:
+            a = np.asarray(s)
+            if a.ndim < 2 or a.shape[1] < 2:
+                raise ValueError("StratifiedSampler needs keyed rows: data "
+                                 "columns plus an integer key column")
+            cols.append(a[:, key_column])
+        keys = np.concatenate(cols)
+        if np.any(keys != np.floor(keys)):
+            raise ValueError("key column must hold integers")
+        keys = keys.astype(np.int64)
+        if keys.min() < 0 or keys.max() >= self.num_groups:
+            raise ValueError(f"keys must lie in [0, {self.num_groups}); got "
+                             f"range [{keys.min()}, {keys.max()}]")
+        if shares is None:
+            shares = np.ones(self.num_groups)
+        shares = np.asarray(shares, np.float64)
+        if shares.shape != (self.num_groups,) or not np.all(shares > 0):
+            raise ValueError("shares must be positive, one per group")
+        self.shares = shares / shares.sum()
+        #: rows of key g in the whole store — the per-key N for correct(p).
+        self.stratum_sizes = np.bincount(keys, minlength=self.num_groups)
+
+        # stride-schedule the base permutation (see class docstring)
+        kperm = keys[self.perm]
+        order = np.argsort(kperm, kind="stable")
+        sorted_k = kperm[order]
+        starts = np.searchsorted(sorted_k, np.arange(self.num_groups))
+        ranks = np.empty(self.N, np.int64)
+        ranks[order] = np.arange(self.N) - starts[sorted_k]
+        vtime = (ranks + 1) / self.shares[kperm]
+        self.perm = self.perm[np.argsort(vtime, kind="stable")]
+        self._kperm = keys[self.perm]
+
+    def stratum_counts(self, stop: int) -> np.ndarray:
+        """Rows of each key inside the prefix [0, stop) — with
+        ``stratum_sizes`` this gives the per-key sampled fraction a keyed
+        ``correct`` should use."""
+        stop = min(int(stop), self.N)
+        return np.bincount(self._kperm[:stop], minlength=self.num_groups)
+
+
 class PreMapSampler(PermutationSampler):
     def __init__(self, store: ShardedStore, seed: int = 0):
         super().__init__(store, seed=seed, mode="pre_map")

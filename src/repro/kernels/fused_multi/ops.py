@@ -71,6 +71,35 @@ def _multi_scan(slots, seed, n_valid, xp, B: int, block_b: int,
     return states
 
 
+def fused_poisson_tiled(stat, seed, values: jax.Array, B: int,
+                        n_valid=None, valid_mask=None,
+                        block_b: int = 128, block_n: int = 512):
+    """Generic matrix-free tile scan for ONE statistic: draw each implicit
+    Poisson(1) weight tile once (shared ``weight_tile_blocks`` /
+    ``(seed, b-tile, n-tile)`` keying) and feed it to
+    ``stat.tile_update``.  This is the ``_multi_scan`` machinery without
+    the slot tuple — the fused path for statistics that segment or
+    transform the tile themselves, e.g. ``GroupedStatistic`` over a custom
+    inner (its ``tile_update`` splits the key column off ``x_tile`` and
+    key-masks the shared weight tile), so even custom keyed statistics
+    never materialize the (B, n) weight matrix."""
+    if values.ndim == 1:
+        values = values[:, None]
+    n, d = values.shape
+    if n_valid is None:
+        n_valid = n
+    bb, bn = weight_tile_blocks(B, n, block_b, block_n)
+    Bp = B + (-B) % bb
+    seed = jnp.asarray(seed, jnp.int32)
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+    xp = _pad_to(values.astype(jnp.float32), bn, 0)
+    mp = None
+    if valid_mask is not None:
+        mp = _pad_to(jnp.asarray(valid_mask, jnp.float32).reshape(n), bn, 0)
+    states = _multi_scan((stat,), seed, n_valid, xp, Bp, bb, bn, maskp=mp)[0]
+    return jax.tree_util.tree_map(lambda a: a[:B], states)
+
+
 def fused_poisson_multi(group, seed, values: jax.Array, B: int,
                         n_valid=None, valid_mask=None,
                         backend: str | None = None,

@@ -141,12 +141,58 @@ def _fused_kmeans_scan(seed, n_valid, xp, cent, B, block_b, block_n,
     return sums, counts, inertia
 
 
+@functools.partial(jax.jit, static_argnames=("B", "num_groups", "block_b",
+                                             "block_n"))
+def _grouped_fused_kmeans_scan(seed, n_valid, xp, gp, cent, B, block_b,
+                               block_n, num_groups, maskp=None):
+    """GROUP BY k-means lowering: the assignment tile (key-independent —
+    every key shares the centroids) is computed ONCE per n-tile, the
+    implicit weight tile is drawn ONCE, and each key's (sums, counts,
+    inertia) slot accumulates the SAME contractions as
+    ``_fused_kmeans_scan`` under ``w * (gid == g)`` — so slot g is bitwise
+    the ungrouped scan under ``maskp = (gid == g)`` (exact 0/1 mask
+    composition)."""
+    n, d = xp.shape
+    k = cent.shape[0]
+    nb_n = n // block_n
+    xc = xp.reshape(nb_n, block_n, d)
+    gc = gp.reshape(nb_n, block_n)
+    maskc = None if maskp is None else maskp.reshape(nb_n, block_n)
+
+    def body(carry, t):
+        sums, counts, inertia = carry
+        w = implicit_weight_tile(seed, n_valid, t, B,
+                                 block_b, block_n,
+                                 valid=None if maskc is None
+                                 else maskc[t])          # (B, bn)
+        xt = xc[t]
+        gid = gc[t]
+        assign, min_d2 = _assign_tile(xt, cent, k)       # (bn, k)
+        y = (assign[:, :, None] * xt[:, None, :]).reshape(block_n, k * d)
+        s_new, c_new, i_new = [], [], []
+        for g in range(num_groups):
+            wg = w * (gid == g).astype(jnp.float32)[None, :]
+            s_new.append(sums[:, g] + (wg @ y).reshape(B, k, d))
+            c_new.append(counts[:, g] + wg @ assign)
+            i_new.append(inertia[:, g] + wg @ min_d2)
+        return (jnp.stack(s_new, axis=1), jnp.stack(c_new, axis=1),
+                jnp.stack(i_new, axis=1)), None
+
+    init = (jnp.zeros((B, num_groups, k, d), jnp.float32),
+            jnp.zeros((B, num_groups, k), jnp.float32),
+            jnp.zeros((B, num_groups), jnp.float32))
+    (sums, counts, inertia), _ = jax.lax.scan(
+        body, init, jnp.arange(nb_n, dtype=jnp.int32))
+    return sums, counts, inertia
+
+
 def fused_poisson_kmeans(seed, values: jax.Array, centroids: jax.Array,
                          B: int, backend: str | None = None,
                          block_b: int = 128, block_n: int = 512,
-                         n_valid=None,
-                         valid_mask=None) -> Tuple[jax.Array, jax.Array,
-                                                   jax.Array]:
+                         n_valid=None, valid_mask=None,
+                         group_ids=None,
+                         num_groups: int | None = None
+                         ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Matrix-free bootstrap-over-k-means from an int32 seed.
 
     values (n, d) or (n,) × centroids (k, d) ->
@@ -162,6 +208,16 @@ def fused_poisson_kmeans(seed, values: jax.Array, centroids: jax.Array,
     validity holes; a prefix-shaped mask reproduces the ``n_valid`` result
     bit for bit (see ``implicit_weight_tile``).
 
+    ``group_ids`` (traced (n,) integer keys 0..num_groups-1) switches on
+    the GROUP BY path: every key shares the centroid assignment (computed
+    once per tile) and the SAME implicit weight stream, segment-reduced
+    into per-key states — outputs gain a G axis ((B, G, k, d), (B, G, k),
+    (B, G)) and slot g is BITWISE the ungrouped call under
+    ``valid_mask = (group_ids == g)``.  Scan-lowered only (the grouped
+    Pallas kernel would keep G·k·d accumulators VMEM-resident; see ROADMAP
+    Known modeling limits) — auto resolves to "scan", explicit Pallas
+    backends raise.
+
     backend: None = auto (pallas on TPU, scan elsewhere), "pallas",
     "pallas_interpret", "scan".
     """
@@ -170,7 +226,14 @@ def fused_poisson_kmeans(seed, values: jax.Array, centroids: jax.Array,
     n, d = values.shape
     k = centroids.shape[0]
     if backend is None:
-        backend = "pallas" if jax.default_backend() == "tpu" else "scan"
+        backend = ("scan" if group_ids is not None
+                   else "pallas" if jax.default_backend() == "tpu"
+                   else "scan")
+    if group_ids is not None and backend != "scan":
+        raise ValueError(
+            "fused_poisson_kmeans(group_ids=...) is scan-only: the grouped "
+            "kernel's G·k·d accumulators do not fit the Pallas VMEM "
+            f"residency model (use backend='scan', got backend={backend!r})")
     if n_valid is None:
         n_valid = n
 
@@ -183,6 +246,17 @@ def fused_poisson_kmeans(seed, values: jax.Array, centroids: jax.Array,
     mp = None
     if valid_mask is not None:
         mp = _pad_to(jnp.asarray(valid_mask, jnp.float32).reshape(n), bn, 0)
+
+    if group_ids is not None:
+        if num_groups is None or int(num_groups) < 1:
+            raise ValueError("group_ids requires num_groups >= 1, got "
+                             f"{num_groups!r}")
+        # padding columns keep key 0 — zero weight via n_valid/valid_mask.
+        gp = _pad_to(jnp.asarray(group_ids, jnp.float32).reshape(n), bn, 0)
+        sums, counts, inertia = _grouped_fused_kmeans_scan(
+            seed, n_valid, xp, gp, cent, Bp, bb, bn, int(num_groups),
+            maskp=mp)
+        return sums[:B], counts[:B], inertia[:B]
 
     if backend == "scan":
         sums, counts, inertia = _fused_kmeans_scan(seed, n_valid, xp, cent,

@@ -102,11 +102,54 @@ def _fused_hist_scan(seed, n_valid, xp, lo, hi, B, nbins, block_b, block_n,
     return counts.reshape(B, d, nbins)
 
 
+@functools.partial(jax.jit, static_argnames=("B", "nbins", "num_groups",
+                                             "block_b", "block_n"))
+def _grouped_fused_hist_scan(seed, n_valid, xp, gp, lo, hi, B, nbins,
+                             num_groups, block_b, block_n, maskp=None):
+    """GROUP BY sketch lowering: one implicit weight tile per step, keyed
+    into ``num_groups`` (d, nbins) sketch slots by exact 0/1 key-mask
+    multiplies — the accumulator is the ungrouped (B, d·nbins) scatter
+    target replicated per key (flattened to (B, G·d·nbins)), with each
+    key's scatter using the SAME bin indices and finite-mass mask on
+    ``w * (gid == g)``.  Counts are sums of small integer weights — exact
+    in f32 — so slot g is bitwise ``_fused_hist_scan`` under
+    ``maskp = (gid == g)``.  Neither the (n, G) one-hot nor any (B, n)
+    matrix materializes."""
+    n, d = xp.shape
+    nt = n // block_n
+    xc = xp.reshape(nt, block_n, d)
+    gc = gp.reshape(nt, block_n)
+    maskc = None if maskp is None else maskp.reshape(nt, block_n)
+
+    def body(counts, t):
+        w = implicit_weight_tile(seed, n_valid, t, B,
+                                 block_b, block_n,
+                                 valid=None if maskc is None
+                                 else maskc[t])              # (B, bn)
+        xt = xc[t]
+        gid = gc[t]
+        idx = _bin_indices(xt, lo[None, :], hi[None, :], nbins)  # (bn, d)
+        flat = (idx + jnp.arange(d, dtype=jnp.int32)[None, :]
+                * nbins).reshape(-1)                         # (bn·d,)
+        fm = finite_mass_mask(xt)                            # (bn, d)
+        for g in range(num_groups):
+            wg = w * (gid == g).astype(jnp.float32)[None, :]
+            wm = (wg[:, :, None] * fm[None, :, :]).reshape(B, block_n * d)
+            counts = counts.at[:, g * d * nbins + flat].add(wm)
+        return counts, None
+
+    init = jnp.zeros((B, num_groups * d * nbins), jnp.float32)
+    counts, _ = jax.lax.scan(body, init, jnp.arange(nt, dtype=jnp.int32))
+    return counts.reshape(B, num_groups, d, nbins)
+
+
 def fused_poisson_hist(seed, values: jax.Array, lo, hi, nbins: int, B: int,
                        backend: str | None = None,
                        block_b: int = 128, block_n: int = 512,
                        n_valid=None, valid_mask=None,
-                       block_bins: int | None = None) -> jax.Array:
+                       block_bins: int | None = None,
+                       group_ids=None,
+                       num_groups: int | None = None) -> jax.Array:
     """Matrix-free bootstrap histogram sketch from an int32 seed.
 
     values (n, d) or (n,), lo/hi scalar or (d,) -> (B, d, nbins) f32 counts
@@ -132,6 +175,16 @@ def fused_poisson_hist(seed, values: jax.Array, lo, hi, nbins: int, B: int,
     keying, so results are identical; the trade is PRNG recompute for
     output residency.  ``None`` (default) keeps the single-block kernel.
 
+    ``group_ids`` (traced (n,) integer keys 0..num_groups-1) switches on
+    the GROUP BY path: the SAME implicit weight stream feeds ``num_groups``
+    keyed sketch slots and the result gains a G axis —
+    (B, num_groups, d, nbins) — with slot g BITWISE equal to the ungrouped
+    call under ``valid_mask = (group_ids == g)``.  The grouped sketch is
+    scan-lowered (the G·d·nbins output would multiply the Pallas kernel's
+    VMEM-resident one-hot output block; see ROADMAP Known modeling
+    limits) — auto backend resolves to "scan" and an explicit Pallas
+    backend raises.
+
     backend: None = auto (pallas on TPU, scan elsewhere), "pallas",
     "pallas_interpret", "scan".
     """
@@ -139,9 +192,17 @@ def fused_poisson_hist(seed, values: jax.Array, lo, hi, nbins: int, B: int,
         values = values[:, None]
     n, d = values.shape
     if backend is None:
-        backend = "pallas" if jax.default_backend() == "tpu" else "scan"
+        backend = ("scan" if group_ids is not None
+                   else "pallas" if jax.default_backend() == "tpu"
+                   else "scan")
     if backend not in ("pallas", "pallas_interpret", "scan"):
         raise ValueError(f"unknown fused_poisson_hist backend: {backend!r}")
+    if group_ids is not None and backend != "scan":
+        raise ValueError(
+            "fused_poisson_hist(group_ids=...) is scan-only: the grouped "
+            "sketch's G·d·nbins output block does not fit the Pallas "
+            "kernel's VMEM residency model (tile the keys or use "
+            f"backend='scan', got backend={backend!r})")
     if n_valid is None:
         n_valid = n
 
@@ -155,6 +216,18 @@ def fused_poisson_hist(seed, values: jax.Array, lo, hi, nbins: int, B: int,
     mp = None
     if valid_mask is not None:
         mp = _pad_to(jnp.asarray(valid_mask, jnp.float32).reshape(n), bn, 0)
+
+    if group_ids is not None:
+        if num_groups is None or int(num_groups) < 1:
+            raise ValueError("group_ids requires num_groups >= 1, got "
+                             f"{num_groups!r}")
+        # padding columns keep key 0 — their weights are exactly zero via
+        # the n_valid prefix mask / zero-padded valid_mask.
+        gp = _pad_to(jnp.asarray(group_ids, jnp.float32).reshape(n), bn, 0)
+        counts = _grouped_fused_hist_scan(seed, n_valid, xp, gp, lo, hi,
+                                          Bp, nbins, int(num_groups),
+                                          bb, bn, maskp=mp)
+        return counts[:B]
 
     if backend == "scan":
         counts = _fused_hist_scan(seed, n_valid, xp, lo, hi, Bp, nbins,

@@ -223,6 +223,118 @@ def fused_poisson_moments_kernel(seed: jax.Array, n_valid: jax.Array,
 
 
 # ============================================================================
+# grouped (GROUP BY) variant: per-key accumulator slots, one weight stream
+# ============================================================================
+def _fpm_grouped_kernel(scal_ref, x_ref, g_ref, *refs, block_b: int,
+                        block_n: int, num_groups: int, use_tpu_prng: bool,
+                        dtype=jnp.float32, has_mask: bool = False):
+    """Keyed segment-reduction of the implicit weight tile: the tile is
+    drawn ONCE per grid step (same (seed, b-tile, n-tile) keying as
+    ``_fpm_kernel``) and routed into each key's accumulator slot by an
+    exact 0/1 key-mask multiply — a static per-key loop of the SAME dot /
+    row-sum ops as the ungrouped kernel, so key g's moments are bitwise
+    what the ungrouped kernel produces under ``mask = (key == g)``.  No
+    (block_b·n) weight tile is ever re-drawn per key and no (block_n,
+    num_groups) one-hot is built: the key mask is a (1, block_n) compare
+    broadcast into the weight multiply."""
+    if has_mask:
+        m_ref, (wtot_ref, s1_ref, s2_ref) = refs[0], refs[1:]
+    else:
+        m_ref, (wtot_ref, s1_ref, s2_ref) = None, refs
+    i = pl.program_id(0)        # B-tile index
+    k = pl.program_id(1)        # n-tile index (contraction)
+
+    w = _poisson_tile(scal_ref[0], i, k, (block_b, block_n), scal_ref[1],
+                      block_n, use_tpu_prng,
+                      valid=None if m_ref is None else m_ref[...])
+    gid = g_ref[...]                         # (1, block_n) f32 keys
+    x = x_ref[...].astype(jnp.float32)       # (bn, d)
+
+    @pl.when(k == 0)
+    def _init():
+        wtot_ref[...] = jnp.zeros(wtot_ref.shape, wtot_ref.dtype)
+        s1_ref[...] = jnp.zeros(s1_ref.shape, s1_ref.dtype)
+        s2_ref[...] = jnp.zeros(s2_ref.shape, s2_ref.dtype)
+
+    x2 = x * x
+    for g in range(num_groups):
+        wg = w * (gid == g).astype(jnp.float32)          # (bB, bn)
+        s1_ref[:, g, :] += jax.lax.dot(
+            wg.astype(dtype), x.astype(dtype),
+            preferred_element_type=jnp.float32)
+        s2_ref[:, g, :] += jax.lax.dot(
+            wg.astype(dtype), x2.astype(dtype),
+            preferred_element_type=jnp.float32)
+        wtot_ref[:, g] += jnp.sum(wg, axis=1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("B", "num_groups", "block_b", "block_n",
+                                    "block_d", "interpret", "use_tpu_prng",
+                                    "dtype"))
+def fused_poisson_moments_grouped_kernel(seed: jax.Array, n_valid: jax.Array,
+                                         values: jax.Array,
+                                         group_ids: jax.Array, B: int,
+                                         num_groups: int,
+                                         block_b: int = 128,
+                                         block_n: int = 512,
+                                         block_d: int = 128,
+                                         interpret: bool = True,
+                                         use_tpu_prng: bool = False,
+                                         dtype=jnp.float32, mask=None):
+    """GROUP BY bootstrap moments: one implicit Poisson(1) stream, G keyed
+    accumulator slots.
+
+    values: (n, d) f32, pre-padded to block multiples; ``group_ids``
+    (1, n) f32 of integer keys 0..num_groups-1 (zero-padded — padding
+    columns carry zero weight via ``n_valid``/``mask`` so their key is
+    irrelevant).  Returns (w_tot (B, G), s1 (B, G, d), s2 (B, G, d)).
+
+    VMEM note: the s1/s2 accumulator blocks are (block_b, G, d) — G scales
+    the resident accumulators, so large G·d wants a smaller ``block_b``
+    (same escape hatch as weighted_hist's ``block_bins``; see ROADMAP
+    Known modeling limits)."""
+    n, d = values.shape
+    assert B % block_b == 0 and n % block_n == 0 and d % block_d == 0, (
+        (B, n, d), (block_b, block_n, block_d))
+    assert group_ids.shape == (1, n), group_ids.shape
+
+    grid = (B // block_b, n // block_n)
+    G = num_groups
+    kern = functools.partial(_fpm_grouped_kernel, block_b=block_b,
+                             block_n=block_n, num_groups=G,
+                             use_tpu_prng=use_tpu_prng, dtype=dtype,
+                             has_mask=mask is not None)
+    scal = jnp.stack([jnp.asarray(seed, jnp.int32),
+                      jnp.asarray(n_valid, jnp.int32)])
+    in_specs = [
+        pl.BlockSpec(memory_space=pltpu.SMEM),
+        pl.BlockSpec((block_n, d), lambda i, k: (k, 0)),
+        pl.BlockSpec((1, block_n), lambda i, k: (0, k)),
+    ]
+    operands = [scal, values, group_ids]
+    if mask is not None:
+        in_specs.append(pl.BlockSpec((1, block_n), lambda i, k: (0, k)))
+        operands.append(mask)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((block_b, G), lambda i, k: (i, 0)),
+            pl.BlockSpec((block_b, G, d), lambda i, k: (i, 0, 0)),
+            pl.BlockSpec((block_b, G, d), lambda i, k: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, G), jnp.float32),
+            jax.ShapeDtypeStruct((B, G, d), jnp.float32),
+            jax.ShapeDtypeStruct((B, G, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(*operands)
+
+
+# ============================================================================
 # streaming variant: double-buffered async HBM->VMEM copies on the n axis
 # ============================================================================
 def _fpm_stream_kernel(scal_ref, x_hbm_ref, *refs, block_b: int,

@@ -23,8 +23,8 @@ import jax.numpy as jnp
 from repro.kernels.poisson_counts.kernel import (_poisson_from_bits,
                                                  _threefry_bits)
 from repro.kernels.weighted_stats.kernel import (
-    fused_poisson_moments_kernel, fused_poisson_moments_stream_kernel,
-    weighted_moments_kernel)
+    fused_poisson_moments_grouped_kernel, fused_poisson_moments_kernel,
+    fused_poisson_moments_stream_kernel, weighted_moments_kernel)
 from repro.kernels.weighted_stats.ref import weighted_moments_ref
 
 
@@ -170,11 +170,58 @@ def _fused_scan(seed, n_valid, xp, B, block_b, block_n,
     return w_tot, s1, s2
 
 
+@functools.partial(jax.jit, static_argnames=("B", "block_b", "block_n",
+                                             "num_groups", "dtype"))
+def _grouped_fused_scan(seed, n_valid, xp, gp, B, block_b, block_n,
+                        num_groups, dtype=jnp.float32, maskp=None):
+    """GROUP BY scan lowering: one implicit weight tile per step, keyed
+    into ``num_groups`` accumulator slots by an exact 0/1 key-mask
+    multiply.  A static per-key loop applies the SAME dot / row-sum ops as
+    ``_fused_scan`` to ``w * (gid == g)``, so slot g is bitwise what
+    ``_fused_scan`` produces under ``maskp = (gid == g)`` (0/1 mask
+    multiplies compose exactly: (w·valid)·keymask ≡ w·(valid·keymask)).
+    Peak live memory per step stays (B, block_n) — the (n, G) one-hot
+    never materializes."""
+    n, d = xp.shape
+    nb_n = n // block_n
+    xc = xp.reshape(nb_n, block_n, d)
+    gc = gp.reshape(nb_n, block_n)
+    maskc = None if maskp is None else maskp.reshape(nb_n, block_n)
+
+    def body(carry, k):
+        w_tot, s1, s2 = carry
+        w = implicit_weight_tile(seed, n_valid, k, B, block_b, block_n,
+                                 valid=None if maskc is None else maskc[k])
+        xk = xc[k]
+        xk2 = xk * xk
+        gid = gc[k]
+        wt_new, s1_new, s2_new = [], [], []
+        for g in range(num_groups):
+            wg = w * (gid == g).astype(jnp.float32)[None, :]
+            wt_new.append(w_tot[:, g] + jnp.sum(wg, axis=1))
+            s1_new.append(s1[:, g] + jax.lax.dot(
+                wg.astype(dtype), xk.astype(dtype),
+                preferred_element_type=jnp.float32))
+            s2_new.append(s2[:, g] + jax.lax.dot(
+                wg.astype(dtype), xk2.astype(dtype),
+                preferred_element_type=jnp.float32))
+        return (jnp.stack(wt_new, axis=1), jnp.stack(s1_new, axis=1),
+                jnp.stack(s2_new, axis=1)), None
+
+    init = (jnp.zeros((B, num_groups), jnp.float32),
+            jnp.zeros((B, num_groups, d), jnp.float32),
+            jnp.zeros((B, num_groups, d), jnp.float32))
+    (w_tot, s1, s2), _ = jax.lax.scan(body, init,
+                                      jnp.arange(nb_n, dtype=jnp.int32))
+    return w_tot, s1, s2
+
+
 def fused_poisson_moments(seed, values: jax.Array, B: int,
                           backend: str | None = None,
                           block_b: int = 128, block_n: int = 512,
                           n_valid=None, dtype=jnp.float32,
-                          valid_mask=None, stream: bool = False):
+                          valid_mask=None, stream: bool = False,
+                          group_ids=None, num_groups: int | None = None):
     """Matrix-free bootstrap moments from an int32 seed (no weight matrix).
 
     values (n, d) or (n,) -> (w_tot (B,), s1 (B,d), s2 (B,d)) where the
@@ -206,6 +253,15 @@ def fused_poisson_moments(seed, values: jax.Array, B: int,
     relative moment error (weights are small exact integers; see
     benchmarks/kernelbench.run_bootstrap for the quantified cv error).
 
+    ``group_ids`` (traced (n,) integer keys 0..num_groups-1, float storage
+    is fine) switches on the GROUP BY path: the SAME implicit weight
+    stream is segment-reduced into ``num_groups`` keyed accumulator slots
+    per tile (exact 0/1 key-mask multiplies — no (n, G) one-hot), and the
+    outputs gain a G axis: (w_tot (B, G), s1 (B, G, d), s2 (B, G, d)).
+    Slot g is BITWISE equal to the ungrouped call under
+    ``valid_mask = (group_ids == g)`` — i.e. to bootstrapping key g's rows
+    alone under the same seed (common random numbers across keys).
+
     backend: None = auto (pallas on TPU, scan elsewhere), "pallas",
     "pallas_interpret", "scan".
     """
@@ -226,6 +282,33 @@ def fused_poisson_moments(seed, values: jax.Array, B: int,
     mp = None
     if valid_mask is not None:
         mp = _pad_to(jnp.asarray(valid_mask, jnp.float32).reshape(n), bn, 0)
+
+    if group_ids is not None:
+        if num_groups is None or int(num_groups) < 1:
+            raise ValueError("group_ids requires num_groups >= 1, got "
+                             f"{num_groups!r}")
+        if stream:
+            raise ValueError("stream=True is not supported with group_ids "
+                             "(the grouped kernel keeps its G·d "
+                             "accumulators resident instead)")
+        G = int(num_groups)
+        # padding columns keep key 0 — their weights are already exactly
+        # zero via the n_valid prefix mask / zero-padded valid_mask.
+        gp = _pad_to(jnp.asarray(group_ids, jnp.float32).reshape(n), bn, 0)
+        if backend == "scan":
+            w_tot, s1, s2 = _grouped_fused_scan(seed, n_valid, xp, gp, Bp,
+                                                bb, bn, G, dtype=dtype,
+                                                maskp=mp)
+            return w_tot[:B], s1[:B], s2[:B]
+        bd = 128
+        xp = _pad_to(xp, bd, 1)
+        w_tot, s1, s2 = fused_poisson_moments_grouped_kernel(
+            seed, n_valid, xp, gp[None, :], Bp, G,
+            block_b=bb, block_n=bn, block_d=bd,
+            interpret=(backend != "pallas"),
+            use_tpu_prng=(backend == "pallas"), dtype=dtype,
+            mask=None if mp is None else mp[None, :])
+        return w_tot[:B], s1[:B, :, :d], s2[:B, :, :d]
 
     if backend == "scan":
         w_tot, s1, s2 = _fused_scan(seed, n_valid, xp, Bp, bb, bn,

@@ -26,7 +26,8 @@ def test_kernelbench_smoke_runs_and_writes_nothing():
     stamps = {}
     for p in (kernelbench._BENCH_JSON, kernelbench._BENCH_KMEANS_JSON,
               kernelbench._BENCH_QUANTILE_JSON,
-              kernelbench._BENCH_MULTI_JSON, kernelbench._BENCH_STREAM_JSON):
+              kernelbench._BENCH_MULTI_JSON, kernelbench._BENCH_STREAM_JSON,
+              kernelbench._BENCH_GROUPED_JSON):
         stamps[p] = p.stat().st_mtime_ns if p.exists() else None
 
     kernelbench.run(smoke=True)
@@ -61,4 +62,15 @@ def test_check_regression_gate(tmp_path):
     d = json.loads((cur / "BENCH_multi.json").read_text())
     d["speedup_group_vs_sequential"] = 0.9      # below the 1.5 floor
     (cur / "BENCH_multi.json").write_text(json.dumps(d))
+    assert check_regression.check(base, cur, 0.5)
+
+    shutil.copy(base / "BENCH_multi.json", cur / "BENCH_multi.json")
+    d = json.loads((cur / "BENCH_grouped.json").read_text())
+    d["speedup_grouped_vs_sequential"] = 1.5    # below the 2.0 floor
+    (cur / "BENCH_grouped.json").write_text(json.dumps(d))
+    assert check_regression.check(base, cur, 0.5)
+
+    d["speedup_grouped_vs_sequential"] = 3.0
+    d["per_key_thetas_bitwise_equal_to_sequential"] = False
+    (cur / "BENCH_grouped.json").write_text(json.dumps(d))
     assert check_regression.check(base, cur, 0.5)

@@ -5,7 +5,7 @@ import pytest
 from scipy import stats as sps
 
 from repro.data import (PostMapSampler, PreMapSampler, ShardedStore,
-                        synthetic_numeric)
+                        StratifiedSampler, synthetic_numeric)
 
 
 def _store(n=50_000, nvals=20, interleave=True):
@@ -67,6 +67,98 @@ class TestReadAccounting:
                             seed=9)
         np.testing.assert_allclose(np.asarray(s1.take(0, 500)),
                                    np.asarray(s2.take(0, 500)))
+
+
+def _keyed_store(sizes, seed=0, split_rows=1024):
+    """One data column + integer key column; stratum g has sizes[g] rows."""
+    rng = np.random.default_rng(seed)
+    keys = np.repeat(np.arange(len(sizes)), sizes)
+    rng.shuffle(keys)
+    data = np.stack([rng.normal(size=len(keys)), keys], axis=1).astype(
+        np.float32)
+    return ShardedStore.from_array(data, split_rows)
+
+
+class TestStratifiedSampler:
+    SIZES = [9000, 600, 300, 100]           # heavy skew: 90:6:3:1
+
+    def test_equal_shares_balance_prefixes(self):
+        store = _keyed_store(self.SIZES)
+        s = StratifiedSampler(store, num_groups=4, seed=3)
+        counts = s.stratum_counts(360)
+        # a uniform prefix would hold ~324:22:11:4 — stride scheduling
+        # surfaces every key at the same rate instead
+        np.testing.assert_array_equal(counts, [90, 90, 90, 90])
+        np.testing.assert_array_equal(s.stratum_sizes, self.SIZES)
+
+    def test_custom_shares_hit_proportions(self):
+        store = _keyed_store(self.SIZES)
+        s = StratifiedSampler(store, num_groups=4, seed=3,
+                              shares=[1.0, 1.0, 2.0, 4.0])
+        counts = s.stratum_counts(160)
+        np.testing.assert_array_equal(counts, [20, 20, 40, 80])
+
+    def test_exhausted_stratum_lets_others_fill(self):
+        store = _keyed_store(self.SIZES)
+        s = StratifiedSampler(store, num_groups=4, seed=3)
+        counts = s.stratum_counts(2000)
+        assert counts[3] == 100              # rare key fully drained
+        assert counts.sum() == 2000          # prefix length unchanged
+        assert s.stratum_counts(store.N).sum() == store.N
+
+    def test_prefixes_nested_and_without_replacement(self):
+        store = _keyed_store(self.SIZES)
+        s = StratifiedSampler(store, num_groups=4, seed=5)
+        a = np.asarray(s.take(0, 100))
+        b = np.asarray(s.take(0, 800))
+        np.testing.assert_array_equal(a, b[:100])
+        assert len(np.unique(s.perm[:800])) == 800
+
+    def test_within_key_order_matches_base_permutation(self):
+        """Each stratum's slice of any prefix must be that stratum's rows
+        in BASE permutation order — so per-key prefixes stay uniform
+        without-replacement samples of that key."""
+        store = _keyed_store(self.SIZES, seed=11)
+        base = StratifiedSampler(store, num_groups=4, seed=7)
+        ref = np.asarray(store.read_all())[:, 1].astype(np.int64)
+        plain_perm = PreMapSampler(store, seed=7).perm
+        for g in range(4):
+            np.testing.assert_array_equal(
+                base.perm[ref[base.perm] == g],
+                plain_perm[ref[plain_perm] == g])
+
+    def test_within_key_uniformity(self):
+        # clustered values inside one key must come out uniform
+        n, nvals = 20_000, 20
+        vals = np.sort(np.repeat(np.arange(nvals), n // nvals))
+        data = np.stack([vals, np.zeros(n)], axis=1).astype(np.float32)
+        data = np.concatenate(
+            [data, np.stack([np.zeros(n // 4), np.ones(n // 4)],
+                            axis=1).astype(np.float32)])
+        store = ShardedStore.from_array(data, 1024)
+        s = StratifiedSampler(store, num_groups=2, seed=0)
+        sample = np.asarray(s.take(0, 4000))
+        key0 = sample[sample[:, 1] == 0.0, 0]
+        counts = np.bincount(key0.astype(int), minlength=nvals)
+        chi2, p = sps.chisquare(counts)
+        assert p > 0.001, f"stratum sample not uniform: chi2={chi2}, p={p}"
+
+    def test_validation_errors(self):
+        store = _keyed_store([50, 50])
+        with pytest.raises(ValueError, match="keyed rows"):
+            StratifiedSampler(ShardedStore.from_array(
+                np.zeros((64, 1), np.float32), 32), num_groups=2)
+        with pytest.raises(ValueError, match=r"\[0, 1\)"):
+            StratifiedSampler(store, num_groups=1)
+        bad = ShardedStore.from_array(
+            np.stack([np.zeros(64), np.full(64, 0.5)], axis=1).astype(
+                np.float32), 32)
+        with pytest.raises(ValueError, match="integers"):
+            StratifiedSampler(bad, num_groups=2)
+        with pytest.raises(ValueError, match="positive"):
+            StratifiedSampler(store, num_groups=2, shares=[1.0, -1.0])
+        with pytest.raises(ValueError, match="one per group"):
+            StratifiedSampler(store, num_groups=2, shares=[1.0])
 
 
 class TestStore:

@@ -37,9 +37,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
-from repro.core import (DistributedEarl, KMeansStep, Mean, Quantile,
-                        StatisticGroup, Var, bootstrap, bootstrap_chunked,
-                        sharded_fused_states)
+from repro.core import (DistributedEarl, GroupedStatistic, KMeansStep, Mean,
+                        Quantile, StatisticGroup, Var, bootstrap,
+                        bootstrap_chunked, sharded_fused_states)
 from repro.core.bootstrap import (fused_resample_states, offset_seed,
                                   seed_from_key)
 from repro.core.delta import (poisson_delta_extend, poisson_delta_init,
@@ -84,6 +84,35 @@ for i, m in enumerate(grp.members):
     m_mesh = sharded_fused_states(m, 77, jnp.asarray(x), 32, mesh=mesh)
     out[f"bitwise_group_member{i}"] = leaves_equal(
         jax.vmap(m.finalize)(m_mesh), g_fin[i])
+
+# --- ISSUE-7: GroupedStatistic over the mesh ----------------------------
+G = 4
+gids = jax.random.randint(jax.random.fold_in(key, 21),
+                          (x.shape[0],), 0, G).astype(jnp.float32)
+vk = jnp.concatenate([jnp.asarray(x), gids[:, None]], axis=1)
+gstat = GroupedStatistic(Mean(), G)
+gs_mesh = sharded_fused_states(gstat, 77, vk, 32, mesh=mesh)
+gs_one = sharded_fused_states(gstat, 77, vk, 32, nshards=8)
+out["bitwise_grouped_mesh"] = leaves_equal(gs_mesh, gs_one)
+# per-key thetas == per-key-alone sharded runs: shard the rows the same
+# way and run the INNER statistic with the shard's key mask composed
+# onto its validity prefix, under the same per-shard streams.
+gth = jax.vmap(gstat.finalize)(gs_mesh)
+nrows = vk.shape[0]
+m = -(-nrows // 8)
+xkp = jnp.pad(vk, ((0, 8 * m - nrows), (0, 0)))
+ok = True
+for g in range(G):
+    acc = None
+    for i in range(8):
+        loc = xkp[i * m:(i + 1) * m]
+        nv = min(max(nrows - i * m, 0), m)
+        maskg = (jnp.arange(m) < nv).astype(jnp.float32) * (loc[:, 2] == g)
+        si = fused_resample_states(Mean(), offset_seed(77, i),
+                                   loc[:, :2], 32, valid_mask=maskg)
+        acc = si if acc is None else jax.vmap(Mean().merge)(acc, si)
+    ok = ok and leaves_equal(jax.vmap(Mean().finalize)(acc), gth[:, g])
+out["bitwise_grouped_per_key_mesh"] = ok
 
 # --- bitwise: chunked sharded (streams keyed (base, shard, chunk)) ------
 st_m = sharded_fused_states(Mean(), 77, jnp.asarray(x), 32, mesh=mesh,
@@ -186,6 +215,14 @@ def test_sharded_states_bitwise_equal_single_device(subproc_result, fam):
 
 def test_chunked_sharded_bitwise_equal(subproc_result):
     assert subproc_result["bitwise_chunked"]
+
+
+def test_grouped_bitwise_under_mesh(subproc_result):
+    """ISSUE-7: a GroupedStatistic's sharded states equal the single-device
+    oracle bitwise, and each key's thetas equal a per-key-alone sharded
+    run of the inner statistic (shard-composed key masks, same streams)."""
+    assert subproc_result["bitwise_grouped_mesh"]
+    assert subproc_result["bitwise_grouped_per_key_mesh"]
 
 
 def test_group_bitwise_under_mesh(subproc_result):
