@@ -50,6 +50,16 @@ FLOORS = {
     "speedup_stream_vs_serial": 1.3,
 }
 
+#: file -> (key, max) pairs for lower-is-better metrics: absolute caps,
+#: not baseline-relative (an overhead that doubles but stays under the
+#: cap is fine; one that creeps past it is a regression even if the
+#: baseline had already drifted there).
+CEILINGS = {
+    # ISSUE-8: snapshotting the donated carry every k chunks must cost
+    # <= 10% over the uncheckpointed streamed run
+    "BENCH_ft.json": (("checkpoint_overhead_ratio", 1.10),),
+}
+
 #: (file, dotted path) -> exact required value
 INVARIANTS = {
     ("BENCH_bootstrap.json", "peak_weight_bytes.fused_rng"): 0,
@@ -59,6 +69,12 @@ INVARIANTS = {
      "per_key_thetas_bitwise_equal_to_sequential"): True,
     ("BENCH_grouped.json", "weight_streams.grouped"): 1,
     ("BENCH_stream.json", "thetas_bitwise_equal_to_chunked"): True,
+    # ISSUE-8: kill/resume and checkpointed runs reproduce the
+    # uninterrupted run bit for bit, and an injected-fault run finishes
+    # without manual intervention
+    ("BENCH_ft.json", "resumed_bitwise_equal"): True,
+    ("BENCH_ft.json", "checkpointed_bitwise_equal"): True,
+    ("BENCH_ft.json", "degraded_run_completed"): True,
 }
 
 
@@ -102,6 +118,23 @@ def check(baseline_dir: pathlib.Path, current_dir: pathlib.Path,
                 "     new"
             print(f"{'FAIL' if status != 'ok' else ' ok '} {fname}:{key}"
                   f"  current={val:8.2f}  baseline={ref_s}  [{status}]")
+
+    for fname, caps in CEILINGS.items():
+        cur_path = current_dir / fname
+        if not cur_path.exists():
+            failures.append(f"{fname}: missing from current run")
+            continue
+        cur = json.loads(cur_path.read_text())
+        for key, cap in caps:
+            val = float(cur[key])
+            if val > cap:
+                failures.append(
+                    f"{fname}:{key} = {val:.3f} > ceiling {cap}")
+                print(f"FAIL {fname}:{key}  current={val:8.3f}  "
+                      f"[ABOVE CEILING {cap}]")
+            else:
+                print(f" ok  {fname}:{key}  current={val:8.3f}  "
+                      f"ceiling={cap}")
 
     for (fname, dotted), want in INVARIANTS.items():
         cur_path = current_dir / fname

@@ -46,6 +46,7 @@ _BENCH_QUANTILE_JSON = _ROOT / "BENCH_quantile.json"
 _BENCH_MULTI_JSON = _ROOT / "BENCH_multi.json"
 _BENCH_STREAM_JSON = _ROOT / "BENCH_stream.json"
 _BENCH_GROUPED_JSON = _ROOT / "BENCH_grouped.json"
+_BENCH_FT_JSON = _ROOT / "BENCH_ft.json"
 
 
 def _timer(smoke: bool):
@@ -102,6 +103,7 @@ def run(smoke: bool = False) -> None:
     run_multi(smoke=smoke)
     run_grouped(smoke=smoke)
     run_stream(smoke=smoke)
+    run_ft(smoke=smoke)
 
 
 def _cv(thetas):
@@ -631,6 +633,182 @@ def run_stream(smoke: bool = False) -> None:
                           "n_chunks": rs.stream.n_chunks,
                           "rows": rs.stream.rows},
     }, indent=2) + "\n")
+
+
+def run_ft(smoke: bool = False) -> None:
+    """Crash-safety tax and recovery speed for the streaming bootstrap.
+
+    Three questions, each gated or recorded in BENCH_ft.json:
+
+    * What does checkpointing COST?  A streamed run snapshotting its
+      donated carry every 8 chunks vs the plain run — same interleaved
+      paired-ratio discipline as run_stream (the ratio is an acceptance
+      gate: ``checkpoint_overhead_ratio`` must stay <= 1.10).  The carry
+      is O(B·d) states, so the tax is device_get + an async npz write
+      every 8 chunks, amortized over 8 chunks of compute.
+    * How fast is RECOVERY?  Kill the run at the midpoint checkpoint,
+      resume, and time the resumed half-run; the resumed result must be
+      BITWISE equal to the uninterrupted run (the ``resumed_bitwise_equal``
+      invariant), and the resumed pass re-reads only the unconsumed rows.
+    * Does a FAULTY run finish hands-off?  Injected transient IOError +
+      one permanently dead split under a degrade policy: the run must
+      complete with the loss surfaced in its StreamReport.
+    """
+    import shutil
+    import tempfile
+    import time as _time
+
+    import numpy as np
+
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.core.streaming import bootstrap_streaming
+    from repro.data.store import ShardedStore
+    from repro.ft import (FailurePolicy, Fault, FaultyStore, RetryPolicy)
+
+    B, chunk, nchunks, d = (4, 256, 3, 8) if smoke else (8, 8192, 48, 64)
+    every = 1 if smoke else 8
+    n = nchunks * chunk - chunk // 2            # ragged tail
+    rng = np.random.default_rng(23)
+    store = ShardedStore.from_array(rng.normal(size=(n, d)),
+                                    split_size=chunk, interleave=False)
+    key = jax.random.PRNGKey(29)
+    stat = Mean()
+    root = tempfile.mkdtemp(prefix="earl_bench_ft_")
+
+    class _Die(Exception):
+        pass
+
+    class _DyingManager(CheckpointManager):
+        def __init__(self, r, die_after, **kw):
+            super().__init__(r, **kw)
+            self.die_after, self.saves = die_after, 0
+
+        def save(self, *a, **kw):
+            super().save(*a, **kw)
+            self.saves += 1
+            if self.saves >= self.die_after:
+                raise _Die()
+
+    def plain():
+        return bootstrap_streaming(store, stat, B, key, chunk=chunk)
+
+    def checkpointed(tag):
+        # fresh root per rep: every rep pays real (not overwritten-warm)
+        # directory creation and npz writes
+        return bootstrap_streaming(store, stat, B, key, chunk=chunk,
+                                   checkpoint=f"{root}/rep_{tag}",
+                                   checkpoint_every=every)
+
+    base = plain()                               # warm both pipelines
+    rc = checkpointed("warm")
+    bits_ckpt = bool(
+        np.array_equal(np.asarray(base.thetas), np.asarray(rc.thetas))
+        and np.array_equal(np.asarray(base.estimate),
+                           np.asarray(rc.estimate)))
+
+    # -- kill at the midpoint checkpoint, resume, time the recovery ------
+    kill_at = max(1, nchunks // 2)
+    rroot = f"{root}/resume"
+    try:
+        bootstrap_streaming(store, stat, B, key, chunk=chunk,
+                            checkpoint=_DyingManager(rroot, kill_at,
+                                                     async_save=False),
+                            checkpoint_every=1)
+        raise RuntimeError("dying manager did not die")
+    except _Die:
+        pass
+    store.stats.reset()
+    t0 = _time.perf_counter()
+    rres = bootstrap_streaming(
+        store, stat, B, key, chunk=chunk, resume=True,
+        checkpoint=CheckpointManager(rroot, async_save=False))
+    resume_s = _time.perf_counter() - t0
+    rows_reread = int(store.stats.rows_read)
+    bits_resume = bool(
+        np.array_equal(np.asarray(base.thetas), np.asarray(rres.thetas))
+        and np.array_equal(np.asarray(base.estimate),
+                           np.asarray(rres.estimate)))
+
+    # -- injected faults: the run must finish without manual intervention
+    fstore = FaultyStore(store, [Fault(split=1, kind="io", attempts=1),
+                                 Fault(split=2, kind="io", permanent=True)])
+    rdeg = bootstrap_streaming(
+        fstore, stat, B, key, chunk=chunk,
+        policy=FailurePolicy(retry=RetryPolicy(max_attempts=2,
+                                               base_delay=0.0),
+                             on_exhausted="degrade"))
+    degraded_ok = (rdeg.stream.lost_splits == (2,)
+                   and rdeg.stream.faults.io_errors == 3
+                   and rdeg.stream.faults.splits_lost == 1)
+
+    if smoke:
+        emit("ft_checkpoint_stream", 0.0,
+             f"B={B};chunk={chunk};nchunks={nchunks};every={every}")
+        emit("ft_resume_bitwise", 0.0,
+             f"resumed_bitwise_equal={bits_resume};"
+             f"checkpointed_bitwise_equal={bits_ckpt};"
+             f"degraded_run_completed={degraded_ok}")
+        shutil.rmtree(root, ignore_errors=True)
+        return
+
+    # interleaved paired-ratio discipline (see run_multi): the overhead
+    # ratio is an acceptance gate (<= 1.10), so each rep times plain and
+    # checkpointed back to back and the gate takes the median per-pair.
+    t_plain, t_ckpt = [], []
+    for i in range(7):
+        t0 = _time.perf_counter()
+        plain()
+        t_plain.append(_time.perf_counter() - t0)
+        t0 = _time.perf_counter()
+        checkpointed(i)
+        t_ckpt.append(_time.perf_counter() - t0)
+    ratios = sorted(c / p for p, c in zip(t_plain, t_ckpt))
+    overhead = ratios[len(ratios) // 2]
+    med = lambda ts: sorted(ts)[len(ts) // 2]  # noqa: E731
+    us_plain = med(t_plain) * 1e6
+    us_ckpt = med(t_ckpt) * 1e6
+
+    emit("ft_stream_plain", us_plain,
+         f"B={B};chunk={chunk};nchunks={nchunks};d={d}")
+    emit("ft_stream_checkpointed", us_ckpt,
+         f"checkpoint_overhead={overhead:.3f}x;every={every};"
+         f"n_checkpoints={rc.stream.n_checkpoints};"
+         f"checkpoint_us={rc.stream.checkpoint_s * 1e6:.0f}")
+    emit("ft_resume", resume_s * 1e6,
+         f"killed_at_chunk={kill_at};rows_reread={rows_reread};"
+         f"recovery_vs_full={resume_s / max(med(t_plain), 1e-9):.2f}x;"
+         f"resumed_bitwise_equal={bits_resume}")
+    emit("ft_degraded", 0.0,
+         f"lost_splits={rdeg.stream.lost_splits};"
+         f"io_errors={rdeg.stream.faults.io_errors};"
+         f"completed={degraded_ok}")
+
+    _BENCH_FT_JSON.write_text(json.dumps({
+        "config": {"B": B, "chunk": chunk, "nchunks": nchunks, "d": d,
+                   "rows": n, "checkpoint_every": every,
+                   "backend": jax.default_backend()},
+        "us_per_call": {"stream_plain": us_plain,
+                        "stream_checkpointed": us_ckpt,
+                        "resume_half_run": resume_s * 1e6},
+        "checkpoint_overhead_ratio": overhead,
+        "n_checkpoints": rc.stream.n_checkpoints,
+        "checkpoint_s": rc.stream.checkpoint_s,
+        "checkpointed_bitwise_equal": bits_ckpt,
+        "resume_recovery": {"killed_at_chunk": kill_at,
+                            "total_chunks": nchunks,
+                            "rows_reread": rows_reread,
+                            "rows_total": n,
+                            "recovery_vs_full_ratio":
+                                resume_s / max(med(t_plain), 1e-9)},
+        "resumed_bitwise_equal": bits_resume,
+        "degraded_run_completed": degraded_ok,
+        "degraded_faults": {"io_errors": rdeg.stream.faults.io_errors,
+                            "retries": rdeg.stream.faults.retries,
+                            "splits_lost":
+                                rdeg.stream.faults.splits_lost,
+                            "lost_splits": list(rdeg.stream.lost_splits)},
+    }, indent=2) + "\n")
+    shutil.rmtree(root, ignore_errors=True)
 
 
 def run_histogram(smoke: bool = False) -> None:

@@ -1,10 +1,19 @@
-"""Fault tolerance via approximation (paper §3.4) + classical substrate.
+"""Crash-safe EARL end to end: kill -> resume -> mid-run shard loss.
 
-1. Shard loss: kill 3 of 16 data shards mid-job; EARL re-weights the
-   survivors and reports the answer WITH a bootstrap bound — no restart.
-2. Straggler: one shard misses the reduce deadline; same machinery.
-3. Catastrophic loss: bound exceeded -> recommendation flips to restart,
-   which the checkpoint manager serves (restore + elastic remesh).
+1. Checkpointed streaming: a streamed bootstrap snapshots its carry every
+   k chunks; we kill it mid-run at a chunk boundary and resume — the
+   resumed result is BITWISE equal to the uninterrupted run (the chunk
+   streams are position-keyed, so chunk i's resamples never depend on the
+   process history).
+2. Injected faults: a FaultyStore deals transient IOErrors, a corrupted
+   batch (caught by the per-split checksum) and a latency spike; the
+   bounded RetryPolicy absorbs all of it — the run completes hands-off
+   and the StreamReport itemizes what happened.
+3. Mid-run shard loss: a split dies permanently; the run degrades instead
+   of dying — the lost rows feed a masked partial (never recomputed) and
+   the final correct(p_eff) widens the CI honestly.
+4. The FailurePolicy verdict: meets_bound drives continue-approximate vs
+   checkpoint-restart, and the checkpoint manager serves the restart.
 
 Run:  PYTHONPATH=src python examples/fault_tolerance.py
 """
@@ -13,43 +22,104 @@ import tempfile
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh
 
 from repro.checkpoint import CheckpointManager
 from repro.core import DistributedEarl, Mean
-from repro.data import synthetic_numeric
-from repro.ft import DeadlineReducer, estimate_with_failures, mesh_for_devices
+from repro.core.streaming import bootstrap_streaming
+from repro.data import ShardedStore, synthetic_numeric
+from repro.ft import (FailurePolicy, Fault, FaultyStore, RetryPolicy,
+                      ShardEvents, elastic_estimate, mesh_for_devices)
 
+key = jax.random.PRNGKey(0)
+rng = np.random.default_rng(1)
+store = ShardedStore.from_array(rng.normal(10.0, 2.0, size=(100_000, 4)),
+                                split_size=4096, interleave=False)
+B, chunk = 64, 8192
+
+print("=== 1. kill mid-run, resume, bitwise-equal result ===")
+reference = bootstrap_streaming(store, Mean(), B, key, chunk=chunk)
+
+tmp = tempfile.TemporaryDirectory()
+ckpt_root = f"{tmp.name}/stream"
+
+
+class _Die(Exception):
+    pass
+
+
+class _DyingManager(CheckpointManager):
+    """Simulated crash: dies right after its 6th durable snapshot."""
+
+    def save(self, *a, **kw):
+        super().save(*a, **kw)
+        self.saves = getattr(self, "saves", 0) + 1
+        if self.saves >= 6:
+            raise _Die
+
+
+try:
+    bootstrap_streaming(store, Mean(), B, key, chunk=chunk,
+                        checkpoint=_DyingManager(ckpt_root,
+                                                 async_save=False),
+                        checkpoint_every=1)
+except _Die:
+    print("  run killed after checkpoint 6 (chunks 0-5 durable)")
+
+resumed = bootstrap_streaming(store, Mean(), B, key, chunk=chunk,
+                              resume=True,
+                              checkpoint=CheckpointManager(ckpt_root))
+bitwise = bool(np.array_equal(np.asarray(reference.thetas),
+                              np.asarray(resumed.thetas)))
+print(f"  resumed from chunk {resumed.stream.resumed_from_chunk}, "
+      f"estimate {float(np.ravel(resumed.estimate)[0]):.4f}, "
+      f"bitwise equal to uninterrupted run: {bitwise}")
+
+print("=== 2. transient faults absorbed by bounded retry ===")
+flaky = FaultyStore(store, [
+    Fault(split=1, kind="io", attempts=2),        # two IOErrors, then fine
+    Fault(split=4, kind="corrupt", attempts=1),   # checksum catches it
+    Fault(split=7, kind="latency", attempts=1, latency_s=0.2),
+])
+r = bootstrap_streaming(flaky, Mean(), B, key, chunk=chunk,
+                        retry=RetryPolicy(max_attempts=4, base_delay=0.01,
+                                          timeout=0.05))
+f = r.stream.faults
+print(f"  completed hands-off: io_errors={f.io_errors} "
+      f"checksum_failures={f.checksum_failures} "
+      f"deadline_misses={f.deadline_misses} retries={f.retries}")
+bitwise = bool(np.array_equal(np.asarray(reference.thetas),
+                              np.asarray(r.thetas)))
+print(f"  result bitwise equal to the fault-free run: {bitwise}")
+
+print("=== 3. permanent shard loss -> degrade, CI widens via p_eff ===")
+dead = FaultyStore(store, [Fault(split=3, kind="io", permanent=True)])
+r = bootstrap_streaming(
+    dead, Mean(), B, key, chunk=chunk,
+    policy=FailurePolicy(retry=RetryPolicy(max_attempts=3, base_delay=0.0),
+                         on_exhausted="degrade"))
+print(f"  lost splits {r.stream.lost_splits}: "
+      f"{r.stream.valid_rows}/{store.N} rows survive")
+print(f"  estimate {float(np.ravel(r.estimate)[0]):.4f} "
+      f"ci=[{float(np.ravel(r.report.ci_lo)[0]):.4f}, "
+      f"{float(np.ravel(r.report.ci_hi)[0]):.4f}] cv={r.report.cv:.4f}")
+
+print("=== 4. FailurePolicy verdict: continue vs checkpoint-restart ===")
 mesh = mesh_for_devices(len(jax.devices()))
 earl = DistributedEarl(mesh, Mean(), B=64, data_axes=("data",))
 data = jnp.asarray(synthetic_numeric(262_144, 10.0, 2.0, seed=1))
-key = jax.random.PRNGKey(0)
+policy = FailurePolicy(sigma=0.05, deadline_s=1.0,
+                       checkpoint=CheckpointManager(f"{tmp.name}/mesh"))
+events = ShardEvents(n_shards=16, lost=(2, 11),
+                     completion_s=[0.1] * 15 + [30.0])   # one straggler
+rep = elastic_estimate(earl, data, key, events, policy)
+print(f"  lost={rep.lost} late={rep.late} -> {rep.decision} "
+      f"(cv={rep.report.cv:.4f} <= sigma)")
 
-print("=== 1. node failure: 3/16 shards lost ===")
-rep = estimate_with_failures(earl, data, lost_shards=[2, 7, 11],
-                             n_shards=16, sigma=0.05, key=key)
-print(f"  survivors' estimate: {float(np.ravel(rep.result)[0]):.4f} "
-      f"(true {float(data.mean()):.4f}), cv={rep.cv:.4f}, "
-      f"p={rep.p_surviving:.2f}")
-print(f"  -> {rep.recommendation}")
-
-print("=== 2. straggler at the reduce deadline ===")
-red = DeadlineReducer(earl, n_shards=16, sigma=0.05)
-times = [0.1] * 15 + [30.0]
-srep = red.reduce(data, times, deadline_s=1.0, key=key)
-print(f"  {srep.on_time}/16 on time; estimate "
-      f"{float(np.ravel(srep.report.result)[0]):.4f} cv={srep.report.cv:.4f}")
-print(f"  -> {srep.report.recommendation}")
-
-print("=== 3. catastrophic loss -> checkpoint restart path ===")
 noisy = jnp.asarray(synthetic_numeric(4096, 10.0, 200.0, seed=2))
-rep = estimate_with_failures(earl, noisy, lost_shards=list(range(15)),
-                             n_shards=16, sigma=0.001, key=key)
-print(f"  cv={rep.cv:.4f} > sigma -> {rep.recommendation}")
-with tempfile.TemporaryDirectory() as d:
-    mgr = CheckpointManager(d, async_save=False)
-    state = {"params": {"w": jnp.arange(8.0)}, "step": jnp.int32(123)}
-    mgr.save(123, state, extra={"note": "pre-failure snapshot"})
-    restored, extra = mgr.restore(jax.eval_shape(lambda: state))
-    print(f"  restored step {int(restored['step'])} "
-          f"({extra['note']}) onto mesh {dict(mesh.shape)}")
+rep = elastic_estimate(earl, noisy, key,
+                       ShardEvents(n_shards=16, lost=tuple(range(15))),
+                       FailurePolicy(sigma=0.001,
+                                     checkpoint=policy.checkpoint))
+print(f"  catastrophic loss: cv={rep.report.cv:.4f} > sigma -> "
+      f"{rep.decision} (can_restart={rep.can_restart})")
+tmp.cleanup()

@@ -60,7 +60,35 @@ class CheckpointManager:
         self.async_save = async_save
         self._pool = ThreadPoolExecutor(max_workers=1)
         self._pending: Optional[Future] = None
+        self._closed = False
         os.makedirs(root, exist_ok=True)
+        self._gc_orphans()
+
+    def _gc_orphans(self) -> None:
+        """Remove ``.tmp_ckpt_*`` staging directories left by a crash during
+        ``_write`` — they were never renamed into place, so they hold no
+        committed checkpoint and would otherwise accumulate forever."""
+        for name in os.listdir(self.root):
+            if name.startswith(".tmp_ckpt_"):
+                shutil.rmtree(os.path.join(self.root, name),
+                              ignore_errors=True)
+
+    # -- lifecycle --------------------------------------------------------
+    def close(self) -> None:
+        """Flush the pending async write and shut the executor down."""
+        if self._closed:
+            return
+        try:
+            self.wait()
+        finally:
+            self._closed = True
+            self._pool.shutdown(wait=True)
+
+    def __enter__(self) -> "CheckpointManager":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # -- save -------------------------------------------------------------
     def _write(self, step: int, flat: Dict[str, np.ndarray],
@@ -99,13 +127,37 @@ class CheckpointManager:
     def steps(self) -> List[int]:
         out = []
         for name in os.listdir(self.root):
-            if name.startswith("ckpt_"):
-                out.append(int(name.split("_")[1]))
+            # skip anything that merely LOOKS like a checkpoint (stray
+            # files, hand-made dirs like "ckpt_old") instead of raising —
+            # a foreign entry must not brick every restore under this root.
+            if not name.startswith("ckpt_"):
+                continue
+            suffix = name[len("ckpt_"):]
+            if not suffix.isdigit():
+                continue
+            if not os.path.isdir(os.path.join(self.root, name)):
+                continue
+            out.append(int(suffix))
         return sorted(out)
 
     def latest_step(self) -> Optional[int]:
         s = self.steps()
         return s[-1] if s else None
+
+    def meta(self, step: Optional[int] = None) -> Dict[str, Any]:
+        """The ``extra`` dict of the given (default: latest) checkpoint,
+        without loading the arrays — resume paths validate the cursor
+        (fingerprint etc.) BEFORE committing to an array restore, so a
+        wrong-run checkpoint fails with the right diagnostic instead of a
+        shape mismatch."""
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.root}")
+        d = os.path.join(self.root, f"ckpt_{step:08d}")
+        with open(os.path.join(d, "meta.json")) as f:
+            return json.load(f)["extra"]
 
     def restore(self, template: Any, step: Optional[int] = None,
                 shardings: Any = None) -> tuple[Any, Dict[str, Any]]:

@@ -181,3 +181,17 @@ class DistributedEarl:
             report=accuracy.report_for(
                 thetas, num_groups=getattr(self.stat, "num_groups", None)),
             B=self.B, n=n_eff)
+
+    def estimate_elastic(self, values: jax.Array, key: jax.Array,
+                         events, policy):
+        """Mid-run degradation: shards in ``events`` that died or missed
+        the deadline feed masked partial psums (their ``valid_mask`` slice
+        is zero — survivors' work is NOT recomputed), the CI widens via
+        ``correct(p_surviving)``, and ``policy`` turns ``meets_bound`` into
+        continue-approximate vs checkpoint-restart.
+
+        ``events`` is an ``ft.ShardEvents``, ``policy`` an
+        ``ft.FailurePolicy``; returns an ``ft.ElasticReport``.  (Lazy
+        import: ft/ sits above core/ in the layer order.)"""
+        from repro.ft.policy import elastic_estimate
+        return elastic_estimate(self, values, key, events, policy)

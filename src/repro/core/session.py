@@ -17,10 +17,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import ssabe as ssabe_mod
-from repro.core.bootstrap import BootstrapResult
+from repro.core.bootstrap import BootstrapResult, seed_from_key
 from repro.core.delta import (PoissonDelta, poisson_delta_extend,
                               poisson_delta_init, poisson_delta_result)
-from repro.core.reduce_api import Statistic, _as_2d
+from repro.core.reduce_api import Statistic, _as_2d, split_params
+from repro.core.streaming import run_fingerprint
 
 
 @dataclasses.dataclass
@@ -58,7 +59,8 @@ class EarlSession:
                  growth: float = 2.0, max_fraction: float = 1.0,
                  min_pilot: int = 64, max_pilot: int = 8192, l: int = 5,
                  backend: Optional[str] = None, mesh=None,
-                 data_axis: str = "data"):
+                 data_axis: str = "data", checkpoint=None,
+                 checkpoint_every: int = 1):
         self.sampler = sampler
         self.stat = stat
         self.sigma = float(sigma)
@@ -83,6 +85,18 @@ class EarlSession:
         # local-mode phase O(1) as N grows.
         self.max_pilot = int(max_pilot)
         self.l = int(l)
+        #: ``checkpoint`` (a CheckpointManager or a root path) snapshots
+        #: the delta-maintained carry after every ``checkpoint_every``-th
+        #: expansion round; ``run(key, resume=True)`` restores the latest
+        #: snapshot and continues — since the loop's only RNG lives in the
+        #: PoissonDelta (base key + per-extend step counter) and
+        #: ``sampler.take`` is a fixed permutation, the resumed run is
+        #: bitwise equal to the uninterrupted one.
+        self.checkpoint = checkpoint
+        self.checkpoint_every = int(checkpoint_every)
+        if self.checkpoint_every < 1:
+            raise ValueError(
+                f"checkpoint_every must be >= 1, got {checkpoint_every}")
 
     # ------------------------------------------------------------------ #
     def _full_job(self, t0: float, history) -> EarlyResult:
@@ -113,10 +127,18 @@ class EarlSession:
             history=history, wall_time_s=time.perf_counter() - t0,
             ssabe=None, reports=reports)
 
-    def run(self, key: jax.Array) -> EarlyResult:
+    def run(self, key: jax.Array, resume: bool = False) -> EarlyResult:
         t0 = time.perf_counter()
         N = self.sampler.N
         history: List[dict] = []
+
+        mgr = self.checkpoint
+        if isinstance(mgr, str):
+            from repro.checkpoint.manager import CheckpointManager
+            mgr = CheckpointManager(mgr, async_save=True)
+        if resume and mgr is None:
+            raise ValueError("resume=True needs checkpoint= (where would "
+                             "the cursor come from?)")
 
         # ---- pilot + SSABE (local mode) --------------------------------
         n_pilot = min(N, self.max_pilot,
@@ -138,8 +160,52 @@ class EarlSession:
                                 jax.random.fold_in(key, 2),
                                 backend=self.backend, mesh=self.mesh,
                                 data_axis=self.data_axis)
+        spec, params = split_params(self.stat)
+        fp = run_fingerprint(spec, params, int(B),
+                             int(seed_from_key(pd.key)), N, dim)
         n_have = 0
         iterations = 0
+        if resume:
+            # pilot + SSABE were just recomputed deterministically from the
+            # same key, so B/n_target/est match the original run; only the
+            # delta-maintained carry and the cursor come from disk.
+            cur = mgr.meta().get("cursor")
+            if cur is None or cur.get("kind") != "session":
+                raise ValueError(
+                    f"checkpoint under {mgr.root} has no EarlSession "
+                    "cursor — not an EarlSession checkpoint")
+            if cur["fingerprint"] != fp:
+                raise ValueError(
+                    "checkpoint fingerprint mismatch: the snapshot was "
+                    "taken under a different (statistic, B, key, sampler) "
+                    "— resuming it would silently produce a different "
+                    f"estimator (checkpoint {cur['fingerprint'][:12]}…, "
+                    f"run {fp[:12]}…)")
+            template = jax.eval_shape(lambda: (pd.states, pd.est_state))
+            (states, est_state), _ = mgr.restore(template)
+            pd = dataclasses.replace(pd, states=states, est_state=est_state,
+                                     n=int(cur["n_have"]),
+                                     step=int(cur["step"]))
+            n_have = int(cur["n_have"])
+            iterations = int(cur["iterations"])
+            n_target = int(cur["n_target_next"])
+            history = [dict(e, member_cvs=tuple(e["member_cvs"]))
+                       if "member_cvs" in e else dict(e)
+                       for e in cur["history"]]
+            # the snapshot may already satisfy the gate (the run was killed
+            # between the save and the return): re-derive the result from
+            # the restored carry and re-check before extending further.
+            p = n_have / N
+            res = poisson_delta_result(pd, p=p)
+            if res.cv <= self.sigma or n_have >= self.max_fraction * N:
+                return EarlyResult(
+                    result=res.estimate, cv=res.cv,
+                    ci_lo=res.report.ci_lo, ci_hi=res.report.ci_hi,
+                    n_used=n_have, N=N, fraction=p, B=B,
+                    iterations=iterations, fell_back=False,
+                    history=history,
+                    wall_time_s=time.perf_counter() - t0, ssabe=est,
+                    reports=getattr(res.report, "members", None))
         while True:
             iterations += 1
             n_goal = min(int(n_target), N)
@@ -155,13 +221,29 @@ class EarlSession:
             # (GroupAccuracyReport), so the sigma gate below stops only
             # when ALL members meet the target; the per-member trace is
             # recorded so sessions can see who the straggler was.
-            entry = dict(iteration=iterations, n=n_have, B=B, cv=res.cv,
-                         t=time.perf_counter() - t0)
+            entry = dict(iteration=iterations, n=n_have, B=int(B),
+                         cv=float(res.cv), t=time.perf_counter() - t0)
             member_reports = getattr(res.report, "members", None)
             if member_reports is not None:
-                entry["member_cvs"] = tuple(r.cv for r in member_reports)
+                entry["member_cvs"] = tuple(float(r.cv)
+                                            for r in member_reports)
             history.append(entry)
+            if mgr is not None and iterations % self.checkpoint_every == 0:
+                # the cursor rides meta.json, so history must be JSON-plain
+                mgr.save(iterations, (pd.states, pd.est_state),
+                         extra={"cursor": dict(
+                             kind="session", fingerprint=fp,
+                             n_have=int(n_have), step=int(pd.step),
+                             iterations=int(iterations),
+                             n_target_next=int(min(
+                                 N, int(n_have * self.growth))),
+                             history=[
+                                 {**e, "member_cvs": list(e["member_cvs"])}
+                                 if "member_cvs" in e else e
+                                 for e in history])})
             if res.cv <= self.sigma or n_have >= self.max_fraction * N:
+                if mgr is not None:
+                    mgr.wait()          # durable before we report success
                 return EarlyResult(
                     result=res.estimate, cv=res.cv,
                     ci_lo=res.report.ci_lo, ci_hi=res.report.ci_hi,
@@ -171,5 +253,7 @@ class EarlSession:
                     wall_time_s=time.perf_counter() - t0, ssabe=est,
                     reports=member_reports)
             if n_have >= N:
+                if mgr is not None:
+                    mgr.wait()
                 return self._full_job(t0, history)
             n_target = min(N, int(n_have * self.growth))

@@ -1,4 +1,4 @@
-"""Double-buffered streaming bootstrap over a ShardedStore.
+"""Double-buffered streaming bootstrap over a ShardedStore — crash-safe.
 
 ``bootstrap_chunked`` assumes the sample is already device-resident; real
 EARL runs start from a sharded on-disk store whose rows must cross the
@@ -27,15 +27,39 @@ the same pass — so the streamed result is bitwise identical to
 ``bootstrap_chunked(store.read_all(), ...)`` under the same
 ``(key, chunk)`` while peak device residency stays
 O(B·d + chunk·d + queue_depth·chunk·d), independent of n.
+
+Crash safety (three orthogonal mechanisms, all off by default):
+
+* ``checkpoint=``/``checkpoint_every=``/``resume=`` — every k chunks the
+  donated carry ``(states, est)`` plus a cursor (next chunk index, rows
+  consumed, base seed, run fingerprint) is snapshotted atomically through
+  ``CheckpointManager``.  Because chunk i's weights are keyed
+  ``offset_seed(base_seed, i)`` and the fold is a left-merge in chunk
+  order, a killed run resumed from the last checkpoint produces a result
+  BITWISE equal to the uninterrupted run — and the resumed pass re-reads
+  only the rows past the cursor (``iter_batches(start_row=...)`` skips
+  whole splits without opening them).
+* ``retry=``/``policy=`` — the prefetch thread reads through
+  ``ft.ResilientStore``: per-split checksum + row-count validation,
+  bounded retry with exponential backoff, per-read deadline.  Observed
+  fault/retry counts surface in ``StreamReport.faults``.
+* degradation — with ``policy.on_exhausted="degrade"``, a split that
+  fails its whole retry budget is declared LOST mid-run: its rows enter
+  the chunk as zeros with a zero ``valid_mask`` (chunk boundaries and
+  weight streams stay aligned — the PR 6 masked-weight machinery, no
+  recompute of surviving rows), and the final result is corrected by
+  ``p·valid_rows/N`` so the CI widens honestly, exactly like the
+  dedicated ``valid_mask`` oracle run.
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import queue as queue_mod
 import threading
 import time
 from functools import partial
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -58,6 +82,13 @@ class StreamReport:
     single trailing-edge ``block_until_ready`` (compute-bound when
     large).  Perfect overlap drives ``wall_s`` toward
     max(stage, compute) instead of their sum.
+
+    Fault-tolerance accounting: ``checkpoint_s``/``n_checkpoints`` cost
+    of the periodic snapshots, ``resumed_from_chunk`` where a resumed run
+    picked up (None for a fresh run), ``faults`` the observed
+    fault/retry counters of the resilient read path (None when no
+    ``retry``/``policy`` was given), ``lost_splits`` splits degraded to
+    masked zeros, ``valid_rows`` rows that actually contributed.
     """
     wall_s: float
     stage_s: float
@@ -65,6 +96,12 @@ class StreamReport:
     dispatch_s: float
     n_chunks: int
     rows: int
+    checkpoint_s: float = 0.0
+    n_checkpoints: int = 0
+    resumed_from_chunk: Optional[int] = None
+    faults: Optional[object] = None          # ft.FaultCounters
+    lost_splits: Tuple[int, ...] = ()
+    valid_rows: int = -1
 
 
 @dataclasses.dataclass
@@ -72,63 +109,114 @@ class StreamingBootstrapResult(BootstrapResult):
     stream: StreamReport = None
 
 
-@partial(jax.jit, static_argnames=("spec", "B", "chunk"),
-         donate_argnums=(0, 1))
-def _stream_chunk_jit(states, est, xi, base_seed, i, n_valid, params, spec,
-                      B, chunk):
+@partial(jax.jit, static_argnames=("spec", "B"), donate_argnums=(0, 1))
+def _stream_chunk_jit(states, est, xi, vi, base_seed, i, params, spec, B):
     """Fold ONE staged chunk into the running (states, est) carry.
 
     Identical math, operand layout and seed derivation as the
     ``bootstrap_chunked`` fused scan body (bitwise-equality contract);
-    ``states``/``est`` are donated so the carry is updated in place and
-    the device never holds two copies.
+    ``vi`` is the chunk's exact 0.0/1.0 validity mask — a plain prefix
+    for the ragged tail (bit-identical to the historical n_valid path),
+    with interior holes for rows of splits lost mid-run.  ``states``/
+    ``est`` are donated so the carry is updated in place and the device
+    never holds two copies.
     """
     stat = bind_params(spec, params)
-    vi = (jnp.arange(chunk) < n_valid).astype(jnp.float32)
     est = stat.update(est, xi, vi)
     delta = fused_resample_states(stat, offset_seed(base_seed, i), xi, B,
-                                  n_valid=n_valid)
+                                  valid_mask=vi)
     return jax.vmap(stat.merge)(states, delta), est
 
 
-def _stage_batches(store, chunk: int, out_q, timings: dict) -> None:
-    """Prefetch-thread body: read → pad → ``device_put`` → enqueue.
+def _put_until(out_q, item, stop) -> bool:
+    """Blocking put that aborts when the consumer signals ``stop`` — the
+    producer must never deadlock on a full queue after the consumer died
+    (the pre-fix failure mode: a poisoned chunk raised in the consumer
+    and the prefetch thread blocked forever on ``put``)."""
+    while not stop.is_set():
+        try:
+            out_q.put(item, timeout=0.05)
+            return True
+        except queue_mod.Full:
+            continue
+    return False
+
+
+def _stage_batches(store, chunk: int, out_q, timings: dict, stop,
+                   start_row: int = 0) -> None:
+    """Prefetch-thread body: read → pad → mask → ``device_put`` → enqueue.
 
     ``device_put`` returns as soon as the H2D copy is enqueued, so the
     transfer of chunk i+1 proceeds while the consumer computes on chunk
     i.  Batches from ``iter_batches`` can be zero-copy views of a split;
     the ``np.ascontiguousarray``/pad copy here also shields the store's
     buffers from the transfer machinery.  Exceptions are forwarded to
-    the consumer rather than dying silently on this thread.
+    the consumer rather than dying silently on this thread; ``stop``
+    (set by the consumer's cleanup) aborts any blocked enqueue.
+
+    Each item carries the chunk's 0/1 validity mask: zeros for the
+    padded tail and for rows of splits the resilient read path declared
+    lost (``invalid_row_ranges`` — known by yield time, because every
+    split feeding a batch is read before the batch is assembled).
     """
     stage_s = 0.0
     try:
-        for batch in store.iter_batches(chunk):
+        row0 = start_row
+        for batch in store.iter_batches(chunk, start_row=start_row):
             t0 = time.perf_counter()
             xb = np.asarray(batch, np.float32)
             if xb.ndim == 1:
                 xb = xb[:, None]
             nb = len(xb)
+            mask = np.zeros((chunk,), np.float32)
+            mask[:nb] = 1.0
+            for lo, hi in (store.invalid_row_ranges()
+                           if hasattr(store, "invalid_row_ranges") else ()):
+                a, b = max(lo, row0) - row0, min(hi, row0 + nb) - row0
+                if a < b:
+                    mask[a:b] = 0.0
             if nb < chunk:
                 xb = np.concatenate(
                     [xb, np.zeros((chunk - nb,) + xb.shape[1:], xb.dtype)])
             else:
                 xb = np.ascontiguousarray(xb)
             xd = jax.device_put(xb)
+            md = jax.device_put(mask)
             stage_s += time.perf_counter() - t0
-            out_q.put((xd, nb))
-        out_q.put(None)
+            row0 += nb
+            if not _put_until(out_q, (xd, md, nb, int(mask.sum())), stop):
+                return
+        _put_until(out_q, None, stop)
     except BaseException as exc:                # noqa: BLE001 — forwarded
-        out_q.put(exc)
+        _put_until(out_q, exc, stop)
     finally:
         timings["stage_s"] = stage_s
+
+
+def run_fingerprint(spec, params, *extra: int) -> str:
+    """Digest of everything a bitwise resume contract depends on: the
+    statistic's structural spec AND its array parameters (a resumed run
+    with different KMeans centroids is a different run) plus the caller's
+    integer run knobs (B, chunk, base seed, extents, ...).  Shared by
+    ``bootstrap_streaming`` and ``EarlSession`` checkpoints."""
+    h = hashlib.sha256()
+    h.update(repr(spec._static_key()).encode())
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        h.update(jax.tree_util.keystr(path).encode())
+        h.update(np.ascontiguousarray(np.asarray(leaf)).tobytes())
+    h.update(repr(tuple(int(e) for e in extra)).encode())
+    return h.hexdigest()
 
 
 def bootstrap_streaming(store, stat: Statistic, B: int, key: jax.Array,
                         chunk: int = 65536, p: float = 1.0,
                         alpha: float = 0.05,
                         backend: Optional[str] = "fused_rng",
-                        queue_depth: int = 2) -> StreamingBootstrapResult:
+                        queue_depth: int = 2,
+                        checkpoint=None, checkpoint_every: int = 1,
+                        resume: bool = False,
+                        retry=None, policy=None
+                        ) -> StreamingBootstrapResult:
     """Streamed bootstrap over ``store`` (module docstring for the how).
 
     Matrix-free only: the point of streaming is that nothing of size n
@@ -138,6 +226,14 @@ def bootstrap_streaming(store, stat: Statistic, B: int, key: jax.Array,
     is bitwise equal to
     ``bootstrap_chunked(store.read_all(), stat, B, key, chunk=chunk,
     backend="fused_rng")``.
+
+    Crash safety: ``checkpoint=`` (a ``CheckpointManager`` or a root
+    path) snapshots the carry every ``checkpoint_every`` chunks;
+    ``resume=True`` restores the latest snapshot (fingerprint-checked)
+    and continues — bitwise equal to the uninterrupted run.  ``retry=``
+    (an ``ft.RetryPolicy``) or ``policy=`` (an ``ft.FailurePolicy``,
+    which also decides raise-vs-degrade on budget exhaustion) route the
+    prefetch reads through ``ft.ResilientStore``.
     """
     if not isinstance(stat, Statistic):
         raise TypeError("stat must be a reduce_api.Statistic")
@@ -159,11 +255,38 @@ def bootstrap_streaming(store, stat: Statistic, B: int, key: jax.Array,
         raise ValueError("bootstrap_streaming needs a non-empty store")
     if queue_depth < 1:
         raise ValueError(f"queue_depth must be >= 1, got {queue_depth}")
+    if checkpoint_every < 1:
+        raise ValueError(
+            f"checkpoint_every must be >= 1, got {checkpoint_every}")
+    if resume and checkpoint is None:
+        raise ValueError("resume=True needs checkpoint= (where would the "
+                         "cursor come from?)")
     head = store.splits[0]
     dim = int(np.prod(head.shape[1:])) if head.ndim > 1 else 1
 
+    mgr = checkpoint
+    if isinstance(mgr, str):
+        from repro.checkpoint.manager import CheckpointManager
+        mgr = CheckpointManager(mgr, async_save=True)
+
+    # resilient read path: policy wins over bare retry
+    reader = store
+    counters = None
+    if policy is not None or retry is not None:
+        from repro.ft.inject import FaultCounters, ResilientStore
+        counters = FaultCounters()
+        if policy is not None:
+            reader = ResilientStore(store, policy.retry, counters,
+                                    on_exhausted=policy.on_exhausted)
+        else:
+            reader = ResilientStore(store, retry, counters,
+                                    on_exhausted="raise")
+
     spec, params = split_params(stat)
     base_seed = seed_from_key(key)
+    seed_int = int(base_seed)
+    fp = run_fingerprint(spec, params, B, chunk, seed_int, store.N, dim)
+
     # Fresh, UNALIASED device buffers for the donated carry: jnp's constant
     # cache can hand several identical-zeros leaves the same buffer, which
     # trips "attempt to donate the same buffer twice" on the first call.
@@ -173,49 +296,127 @@ def bootstrap_streaming(store, stat: Statistic, B: int, key: jax.Array,
     states = _fresh(jax.vmap(lambda _: stat.init_state(dim))(jnp.arange(B)))
     est = _fresh(stat.init_state(dim))
 
+    start_chunk = 0
+    rows_done = 0
+    valid_rows = 0
+    prior_lost: Tuple[int, ...] = ()
+    resumed_from = None
+    if resume:
+        # validate the cursor BEFORE touching the arrays: a wrong-run
+        # checkpoint must fail on the fingerprint, not a shape mismatch
+        cur = mgr.meta().get("cursor")
+        if cur is None:
+            raise ValueError(
+                f"checkpoint under {mgr.root} has no streaming cursor — "
+                "not a bootstrap_streaming checkpoint")
+        if cur["fingerprint"] != fp:
+            raise ValueError(
+                "checkpoint fingerprint mismatch: the snapshot was taken "
+                "under a different (statistic, B, chunk, key, store) — "
+                "resuming it would silently produce a different estimator "
+                f"(checkpoint {cur['fingerprint'][:12]}…, run {fp[:12]}…)")
+        template = jax.eval_shape(lambda: (states, est))
+        (states, est), _ = mgr.restore(template)
+        states, est = _fresh(states), _fresh(est)
+        start_chunk = int(cur["next_chunk"])
+        rows_done = int(cur["rows_done"])
+        valid_rows = int(cur["valid_rows"])
+        prior_lost = tuple(cur.get("lost_splits", ()))
+        resumed_from = start_chunk
+
     q = queue_mod.Queue(maxsize=queue_depth)
     timings: dict = {}
+    stop = threading.Event()
     producer = threading.Thread(target=_stage_batches,
-                                args=(store, chunk, q, timings),
+                                args=(reader, chunk, q, timings, stop,
+                                      rows_done),
                                 name="earl-stream-prefetch", daemon=True)
     t_start = time.perf_counter()
     producer.start()
 
-    wait_s = dispatch_s = 0.0
-    i = 0
-    while True:
-        t0 = time.perf_counter()
-        item = q.get()
-        wait_s += time.perf_counter() - t0
-        if item is None:
-            break
-        if isinstance(item, BaseException):
-            raise item
-        xd, nb = item
-        t0 = time.perf_counter()
-        states, est = _stream_chunk_jit(
-            states, est, xd, base_seed, jnp.asarray(i, jnp.int32),
-            jnp.asarray(nb, jnp.int32), params, spec, int(B), int(chunk))
-        dispatch_s += time.perf_counter() - t0
-        i += 1
+    wait_s = dispatch_s = ckpt_s = 0.0
+    n_ckpts = 0
+    i = start_chunk
 
+    def _save_checkpoint():
+        # the cursor names the NEXT chunk; lost splits ride along so a
+        # resumed run keeps correcting by the right surviving fraction.
+        lost_now = tuple(sorted(set(prior_lost)
+                                | set(getattr(reader, "lost_splits", ()))))
+        mgr.save(i, (states, est), extra={"cursor": {
+            "next_chunk": i, "rows_done": rows_done,
+            "valid_rows": valid_rows, "lost_splits": list(lost_now),
+            "fingerprint": fp, "B": int(B), "chunk": int(chunk),
+            "base_seed": seed_int, "N": int(store.N)}})
+
+    try:
+        while True:
+            t0 = time.perf_counter()
+            item = q.get()
+            wait_s += time.perf_counter() - t0
+            if item is None:
+                break
+            if isinstance(item, BaseException):
+                raise item
+            xd, md, nb, nv = item
+            t0 = time.perf_counter()
+            states, est = _stream_chunk_jit(
+                states, est, xd, md, base_seed, jnp.asarray(i, jnp.int32),
+                params, spec, int(B))
+            dispatch_s += time.perf_counter() - t0
+            rows_done += nb
+            valid_rows += nv
+            i += 1
+            if mgr is not None and (i - start_chunk) % checkpoint_every == 0:
+                t0 = time.perf_counter()
+                _save_checkpoint()
+                ckpt_s += time.perf_counter() - t0
+                n_ckpts += 1
+    finally:
+        # a consumer-side failure (poisoned chunk, checkpoint error, kill)
+        # must not strand the producer blocked on a full queue: signal
+        # stop, drain whatever it already staged, and join it.
+        stop.set()
+        try:
+            while True:
+                q.get_nowait()
+        except queue_mod.Empty:
+            pass
+        producer.join(timeout=10.0)
+
+    # trailing-edge sync + a final checkpoint if the cadence missed the end
     t0 = time.perf_counter()
-    (states, est) = jax.block_until_ready((states, est))   # trailing edge
+    (states, est) = jax.block_until_ready((states, est))
     dispatch_s += time.perf_counter() - t0
+    if mgr is not None and (i - start_chunk) % checkpoint_every != 0:
+        t0 = time.perf_counter()
+        _save_checkpoint()
+        ckpt_s += time.perf_counter() - t0
+        n_ckpts += 1
+    if mgr is not None:
+        mgr.wait()                      # durable before we report success
     wall_s = time.perf_counter() - t_start
-    producer.join()
 
+    lost = tuple(sorted(set(prior_lost)
+                        | set(getattr(reader, "lost_splits", ()))))
+    # the survivors represent p·(valid/N) of the population; with no loss
+    # valid == N exactly and this is the plain p (ratio is exactly 1.0).
+    p_eff = p * (valid_rows / store.N)
     stat = bind_params(spec, params)
-    thetas = stat.correct(jax.vmap(stat.finalize)(states), p)
-    estimate = stat.correct(stat.finalize(est), p)
+    thetas = stat.correct(jax.vmap(stat.finalize)(states), p_eff)
+    estimate = stat.correct(stat.finalize(est), p_eff)
     return StreamingBootstrapResult(
         estimate=estimate, thetas=thetas,
         report=accuracy.report_for(thetas, alpha=alpha,
                                    num_groups=getattr(stat, "num_groups",
                                                       None)),
-        B=int(B), n=int(store.N),
+        B=int(B), n=int(valid_rows),
         stream=StreamReport(wall_s=wall_s,
                             stage_s=timings.get("stage_s", 0.0),
                             wait_s=wait_s, dispatch_s=dispatch_s,
-                            n_chunks=i, rows=int(store.N)),
+                            n_chunks=i - start_chunk, rows=int(store.N),
+                            checkpoint_s=ckpt_s, n_checkpoints=n_ckpts,
+                            resumed_from_chunk=resumed_from,
+                            faults=counters, lost_splits=lost,
+                            valid_rows=int(valid_rows)),
     )

@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import zlib
 from typing import Iterator, List, Optional
 
 import numpy as np
@@ -53,6 +54,19 @@ class ShardedStore:
         self.offsets = np.cumsum([0] + self.split_sizes)
         self.N = int(self.offsets[-1])
         self.stats = ReadStats()
+        self._checksums: dict = {}
+
+    def split_checksum(self, i: int) -> int:
+        """crc32 of split ``i``'s pristine bytes (computed lazily, cached).
+
+        This is the per-batch integrity oracle the fault-tolerant read path
+        (ft/inject.py) validates against: a wrapper that corrupts or
+        truncates a read cannot also forge this checksum, because wrappers
+        delegate ``split_checksum`` to the underlying store."""
+        if i not in self._checksums:
+            s = np.ascontiguousarray(self.splits[i])
+            self._checksums[i] = zlib.crc32(s.tobytes())
+        return self._checksums[i]
 
     # -- construction --------------------------------------------------
     @staticmethod
@@ -79,23 +93,35 @@ class ShardedStore:
         self.stats.add(splits=1, rows=len(rows))
         return self.splits[split][rows]
 
-    def iter_batches(self, chunk: int) -> Iterator[np.ndarray]:
+    def iter_batches(self, chunk: int,
+                     start_row: int = 0) -> Iterator[np.ndarray]:
         """Counted sequential read as fixed-size ``chunk``-row batches.
 
-        Yields ``ceil(N / chunk)`` arrays of ``chunk`` rows each (the last
-        one ragged), crossing split boundaries — the disk-order stream the
-        streaming bootstrap driver (core/streaming.py) consumes.  Each
-        split is opened exactly once, so ``stats`` records one full pass.
-        Batches that fall inside a single split are zero-copy views of it;
-        treat them as read-only.
+        Yields ``ceil((N - start_row) / chunk)`` arrays of ``chunk`` rows
+        each (the last one ragged), crossing split boundaries — the
+        disk-order stream the streaming bootstrap driver
+        (core/streaming.py) consumes.  Each split is opened exactly once,
+        so ``stats`` records one full pass.  Batches that fall inside a
+        single split are zero-copy views of it; treat them as read-only.
+
+        ``start_row`` resumes the stream at that global row (the
+        checkpoint-restart path): splits entirely before it are SKIPPED
+        without being opened (no counted read — a resumed run pays only
+        for the rows it still needs), and a split straddling it is opened
+        once with only its tail consumed.
         """
         if chunk <= 0:
             raise ValueError(f"chunk must be positive, got {chunk}")
+        if start_row < 0 or start_row > self.N:
+            raise ValueError(f"start_row must be in [0, {self.N}], "
+                             f"got {start_row}")
         parts: List[np.ndarray] = []
         have = 0
         for i in range(len(self.splits)):
+            if self.offsets[i + 1] <= start_row:
+                continue                       # entirely consumed: skip read
             s = self.read_split(i)
-            pos = 0
+            pos = max(0, start_row - int(self.offsets[i]))
             while pos < len(s):
                 take = min(chunk - have, len(s) - pos)
                 parts.append(s[pos:pos + take])

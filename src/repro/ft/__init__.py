@@ -4,14 +4,23 @@ EARL's §3.4 insight: a failed data shard turns an exact job into a sampled
 one — instead of restarting, re-weight the survivors (correct(·, p)) and
 report the result WITH a bootstrap error bound; recover only if the bound
 misses the target.  Combined here with the classical substrate: checkpoint
-restart (checkpoint/), elastic re-meshing, and deadline-based straggler
-mitigation (a straggler is just a temporarily-failed shard).
+restart (checkpoint/), elastic re-meshing, deadline-based straggler
+mitigation (a straggler is just a temporarily-failed shard), deterministic
+fault injection (inject.py) and the unified FailurePolicy (policy.py) that
+recovery/straggler/elastic all route through.
 """
 from repro.ft.recovery import (ShardLossReport, estimate_with_failures,
                                failure_mask)
 from repro.ft.elastic import elastic_restore, mesh_for_devices
 from repro.ft.straggler import DeadlineReducer, StragglerReport
+from repro.ft.inject import (Fault, FaultCounters, FaultExhaustedError,
+                             FaultyStore, ResilientStore, RetryPolicy)
+from repro.ft.policy import (CONTINUE, RESTART, ElasticReport,
+                             FailurePolicy, ShardEvents, elastic_estimate)
 
 __all__ = ["ShardLossReport", "estimate_with_failures", "failure_mask",
            "elastic_restore", "mesh_for_devices", "DeadlineReducer",
-           "StragglerReport"]
+           "StragglerReport", "Fault", "FaultCounters",
+           "FaultExhaustedError", "FaultyStore", "ResilientStore",
+           "RetryPolicy", "CONTINUE", "RESTART", "ElasticReport",
+           "FailurePolicy", "ShardEvents", "elastic_estimate"]

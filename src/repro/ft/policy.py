@@ -1,0 +1,130 @@
+"""One FailurePolicy behind recovery, stragglers, and elastic degradation.
+
+The three pre-existing ft/ entry points answered the same question with
+three ad-hoc surfaces: a shard died (`recovery`), a shard is late
+(`straggler`), how do we keep running (`elastic`)?  EARL's §3.4 answer is
+uniform — at the reduce, a dead shard and a late shard are the SAME event
+(a missing partial), and the right response is never "wait" but "psum what
+arrived, bound the error of the survivors, and only restart if the bound
+misses sigma".  This module is that one code path:
+
+* ``ShardEvents`` — what actually happened mid-run: shards lost outright,
+  per-shard completion times (against ``FailurePolicy.deadline_s``).
+* ``elastic_estimate`` — folds every failed-or-late shard into ONE row
+  mask (``failure_mask``, mirroring the real ceil-division shard extents)
+  and runs the mesh step once with that mask: each lost shard feeds a
+  *masked partial psum* through the PR 6 ``valid_mask`` machinery —
+  survivors' work is never recomputed, the lost shard's partial is exactly
+  zero — and the CI widens honestly through ``correct(p)`` with
+  p = surviving fraction.
+* ``FailurePolicy`` — the verdict: ``meets_bound`` (cv ≤ sigma) drives
+  ``continue_approximate`` (serve the bounded answer, defer recovery) vs
+  ``checkpoint_restart`` (the bound is blown; restore from
+  ``checkpoint``/``CheckpointManager`` and recompute the lost shards).
+  The same policy object also carries the prefetch-path knobs the
+  streaming driver uses (``retry``, ``on_exhausted``), so ONE object
+  describes a deployment's failure behavior end to end.
+
+``ft.recovery.estimate_with_failures`` and ``ft.straggler.DeadlineReducer``
+are now thin veneers over this path (kept for API stability); their
+results are bitwise identical to calling ``elastic_estimate`` directly
+with the equivalent events.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.reduce_api import _as_2d
+from repro.ft.inject import RetryPolicy
+from repro.ft.recovery import ShardLossReport, failure_mask
+
+CONTINUE = "continue_approximate"
+RESTART = "checkpoint_restart"
+
+
+@dataclasses.dataclass
+class ShardEvents:
+    """What happened to the shards of one run."""
+    n_shards: int
+    lost: Tuple[int, ...] = ()
+    completion_s: Optional[Sequence[float]] = None
+
+    def late(self, deadline_s: Optional[float]) -> Tuple[int, ...]:
+        if self.completion_s is None or deadline_s is None:
+            return ()
+        if len(self.completion_s) != self.n_shards:
+            raise ValueError(
+                f"completion_s has {len(self.completion_s)} entries for "
+                f"{self.n_shards} shards")
+        return tuple(i for i, t in enumerate(self.completion_s)
+                     if t > deadline_s)
+
+
+@dataclasses.dataclass
+class FailurePolicy:
+    """How a run responds to failure, end to end.
+
+    ``sigma``/``deadline_s`` govern the reduce-side verdict
+    (``elastic_estimate``); ``retry``/``on_exhausted`` govern the
+    prefetch-side read path (``bootstrap_streaming``'s ``ResilientStore``);
+    ``checkpoint`` names where a restart would restore from.
+    """
+    sigma: float = 0.05
+    deadline_s: Optional[float] = None
+    retry: RetryPolicy = dataclasses.field(default_factory=RetryPolicy)
+    on_exhausted: str = "raise"      # "raise" -> checkpoint restart path;
+    #                                  "degrade" -> mask the lost split
+    checkpoint: Optional[CheckpointManager] = None
+
+    def decide(self, meets_bound: bool) -> str:
+        return CONTINUE if meets_bound else RESTART
+
+
+@dataclasses.dataclass
+class ElasticReport:
+    """Outcome of one degraded reduce."""
+    report: ShardLossReport
+    lost: Tuple[int, ...]            # shards that died mid-run
+    late: Tuple[int, ...]            # shards past the deadline
+    decision: str                    # CONTINUE or RESTART
+    can_restart: bool                # a CheckpointManager is configured
+
+
+def elastic_estimate(earl, values: jax.Array, key: jax.Array,
+                     events: ShardEvents,
+                     policy: FailurePolicy) -> ElasticReport:
+    """Degraded mesh estimate under mid-run shard loss and lateness.
+
+    Every failed-or-late shard is folded into one ``failure_mask`` and the
+    jitted mesh step runs ONCE with it: the fused backend multiplies its
+    implicit weight tiles by each shard's mask slice (interior holes
+    included), so a dead shard contributes a zero partial psum and no
+    surviving shard's work is recomputed.  The result is bitwise identical
+    to ``earl.estimate_with_loss_mask`` under the same mask — the
+    dedicated ``valid_mask`` oracle.
+    """
+    late = events.late(policy.deadline_s)
+    dead = tuple(sorted(set(events.lost) | set(late)))
+    x = _as_2d(values)
+    mask = failure_mask(x.shape[0], events.n_shards, dead)
+    p = float(mask.mean())
+    res = earl.estimate_with_loss_mask(x, mask, key, p=p)
+    ok = res.cv <= policy.sigma
+    decision = policy.decide(ok)
+    rep = ShardLossReport(
+        result=res.estimate, cv=res.cv,
+        ci_lo=res.report.ci_lo, ci_hi=res.report.ci_hi,
+        shards_total=events.n_shards, shards_lost=len(dead),
+        p_surviving=p, meets_bound=ok,
+        recommendation=("serve approximate result (within bound); "
+                        "defer node recovery" if ok else
+                        "error bound exceeded: trigger checkpoint restart "
+                        "of lost shards"),
+    )
+    return ElasticReport(report=rep, lost=tuple(sorted(events.lost)),
+                         late=late, decision=decision,
+                         can_restart=policy.checkpoint is not None)

@@ -20,10 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.accuracy import AccuracyReport
-from repro.core.bootstrap import BootstrapResult
 from repro.core.distributed import DistributedEarl
-from repro.core.reduce_api import Statistic, _as_2d
 
 
 @dataclasses.dataclass
@@ -41,11 +38,25 @@ class ShardLossReport:
 
 def failure_mask(n_rows: int, n_shards: int,
                  lost: Sequence[int]) -> jnp.ndarray:
-    """Row mask with the given shards zeroed (rows split contiguously)."""
-    per = n_rows // n_shards
+    """Row mask with the given shards zeroed (rows split contiguously).
+
+    Shard extents mirror ``pad_to_shards``/``sharded_fused_states``: rows
+    are padded to a multiple of ``n_shards`` and split into ceil-sized
+    blocks, so shard s owns rows [s·m, min((s+1)·m, n)) with
+    m = ceil(n/n_shards).  The old floor-division extents drifted off the
+    real shard boundaries whenever ``n_rows % n_shards != 0`` — and the
+    last shard's tail rows could never be masked at all.
+    """
+    if not (0 < n_shards):
+        raise ValueError(f"n_shards must be positive, got {n_shards}")
+    for s in lost:
+        if not (0 <= s < n_shards):
+            raise ValueError(f"lost shard {s} out of range "
+                             f"[0, {n_shards})")
+    m = -(-n_rows // n_shards)                  # ceil: rows per shard
     mask = np.ones((n_rows,), np.float32)
     for s in lost:
-        mask[s * per:(s + 1) * per] = 0.0
+        mask[s * m:min((s + 1) * m, n_rows)] = 0.0
     return jnp.asarray(mask)
 
 
@@ -53,20 +64,15 @@ def estimate_with_failures(earl: DistributedEarl, values: jax.Array,
                            lost_shards: Sequence[int], n_shards: int,
                            sigma: float, key: jax.Array
                            ) -> ShardLossReport:
-    """Bound the error of the survivors-only statistic (no task restart)."""
-    x = _as_2d(values)
-    mask = failure_mask(x.shape[0], n_shards, lost_shards)
-    p = float(mask.mean())
-    res: BootstrapResult = earl.estimate_with_loss_mask(
-        x, mask, key, p=p)
-    ok = res.cv <= sigma
-    return ShardLossReport(
-        result=res.estimate, cv=res.cv,
-        ci_lo=res.report.ci_lo, ci_hi=res.report.ci_hi,
-        shards_total=n_shards, shards_lost=len(lost_shards),
-        p_surviving=p, meets_bound=ok,
-        recommendation=("serve approximate result (within bound); "
-                        "defer node recovery" if ok else
-                        "error bound exceeded: trigger checkpoint restart "
-                        "of lost shards"),
-    )
+    """Bound the error of the survivors-only statistic (no task restart).
+
+    Thin veneer over the unified ``ft.policy.elastic_estimate`` path —
+    kept for API stability; the report is identical to running the policy
+    with ``ShardEvents(lost=lost_shards)``."""
+    from repro.ft.policy import (FailurePolicy, ShardEvents,
+                                 elastic_estimate)
+    er = elastic_estimate(
+        earl, values, key,
+        ShardEvents(n_shards=n_shards, lost=tuple(lost_shards)),
+        FailurePolicy(sigma=sigma))
+    return er.report

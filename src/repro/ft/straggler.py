@@ -38,9 +38,13 @@ class DeadlineReducer:
 
     def reduce(self, values: jax.Array, completion_s: Sequence[float],
                deadline_s: float, key: jax.Array) -> StragglerReport:
-        late = [i for i, t in enumerate(completion_s) if t > deadline_s]
-        rep = estimate_with_failures(self.earl, values, late,
-                                     self.n_shards, self.sigma, key)
-        return StragglerReport(on_time=self.n_shards - len(late),
-                               late=len(late), deadline_s=deadline_s,
-                               report=rep)
+        from repro.ft.policy import (FailurePolicy, ShardEvents,
+                                     elastic_estimate)
+        er = elastic_estimate(
+            self.earl, values, key,
+            ShardEvents(n_shards=self.n_shards,
+                        completion_s=tuple(completion_s)),
+            FailurePolicy(sigma=self.sigma, deadline_s=deadline_s))
+        return StragglerReport(on_time=self.n_shards - len(er.late),
+                               late=len(er.late), deadline_s=deadline_s,
+                               report=er.report)

@@ -77,6 +77,58 @@ class TestCheckpoint:
             mgr.restore(jax.eval_shape(lambda: bad))
 
 
+class TestCheckpointHygiene:
+    def _state(self):
+        return {"w": jnp.arange(8, dtype=jnp.float32)}
+
+    def test_orphaned_tmp_dirs_collected_on_init(self, tmp_path):
+        """A crash between staging and the atomic rename leaves a
+        ``.tmp_ckpt_*`` dir that no committed checkpoint owns — a fresh
+        manager over the same root must sweep it."""
+        orphan = tmp_path / ".tmp_ckpt_00000007"
+        orphan.mkdir()
+        (orphan / "arrays.npz").write_bytes(b"partial write")
+        mgr = CheckpointManager(str(tmp_path), async_save=False)
+        assert not [d for d in os.listdir(tmp_path)
+                    if d.startswith(".tmp_ckpt_")]
+        mgr.save(1, self._state())
+        assert mgr.steps() == [1]
+
+    def test_steps_skips_malformed_entries(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), async_save=False)
+        mgr.save(4, self._state())
+        (tmp_path / "ckpt_old").mkdir()              # non-numeric suffix
+        (tmp_path / "ckpt_").mkdir()                 # empty suffix
+        (tmp_path / "ckpt_00000009").write_text("a stray FILE, not a dir")
+        (tmp_path / "notes.txt").write_text("unrelated")
+        assert mgr.steps() == [4]
+        assert mgr.latest_step() == 4
+        restored, _ = mgr.restore(jax.eval_shape(self._state))
+        np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                      np.arange(8, dtype=np.float32))
+
+    def test_close_flushes_pending_async_write(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), async_save=True)
+        mgr.save(2, self._state())
+        mgr.close()
+        assert CheckpointManager(str(tmp_path)).latest_step() == 2
+        mgr.close()                                  # idempotent
+
+    def test_context_manager_commits_on_exit(self, tmp_path):
+        with CheckpointManager(str(tmp_path), async_save=True) as mgr:
+            mgr.save(5, self._state())
+        assert CheckpointManager(str(tmp_path)).latest_step() == 5
+
+    def test_meta_reads_cursor_without_arrays(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), async_save=False)
+        mgr.save(1, self._state(), extra={"cursor": {"next_chunk": 3}})
+        mgr.save(2, self._state(), extra={"cursor": {"next_chunk": 9}})
+        assert mgr.meta() == {"cursor": {"next_chunk": 9}}
+        assert mgr.meta(step=1) == {"cursor": {"next_chunk": 3}}
+        with pytest.raises(FileNotFoundError):
+            CheckpointManager(str(tmp_path / "empty")).meta()
+
+
 class TestShardLossRecovery:
     def _earl(self):
         return DistributedEarl(_one_device_mesh(), Mean(), B=64,
@@ -116,6 +168,28 @@ class TestShardLossRecovery:
         m = np.asarray(failure_mask(100, 10, [0, 9]))
         assert m[:10].sum() == 0 and m[90:].sum() == 0
         assert m.sum() == 80
+
+    def test_failure_mask_ragged_rows_align_with_shard_extents(self):
+        """n % n_shards != 0: extents must mirror ``pad_to_shards``' ceil
+        division — shard s owns rows [s·m, min((s+1)·m, n)) with
+        m = ceil(n/n_shards).  The old floor-division extents drifted off
+        the real shard boundaries and the tail rows were unmaskable."""
+        n, shards = 103, 10
+        m = -(-n // shards)                          # 11
+        for s in range(shards):
+            mask = np.asarray(failure_mask(n, shards, [s]))
+            lo, hi = s * m, min((s + 1) * m, n)
+            assert mask[lo:hi].sum() == 0
+            assert mask.sum() == n - (hi - lo), f"shard {s}"
+        # the LAST shard's (short) extent is maskable at all
+        last = np.asarray(failure_mask(n, shards, [shards - 1]))
+        assert last[99:].sum() == 0 and last.sum() == 99
+
+    def test_failure_mask_validates_inputs(self):
+        with pytest.raises(ValueError, match="n_shards"):
+            failure_mask(100, 0, [])
+        with pytest.raises(ValueError, match="out of range"):
+            failure_mask(100, 10, [10])
 
 
 class TestStraggler:

@@ -1,0 +1,375 @@
+"""Deterministic fault injection + the resilient read/degrade/elastic paths.
+
+Three layers under test:
+
+* ``FaultyStore``/``ResilientStore`` in isolation — each injected fault
+  kind (transient IOError, latency spike, short read, corrupted batch) is
+  detected, counted, retried under the ``RetryPolicy`` budget, and either
+  raised or degraded to a masked LOST split when the budget runs out.
+* The streaming driver end to end — under injected faults within the
+  retry budget the run completes WITHOUT manual intervention and its
+  result is BITWISE equal to the fault-free run; observed counters in
+  ``StreamReport.faults`` match what the injector says it injected; a
+  split lost mid-run degrades to masked zeros and the result matches a
+  hand-rolled dedicated ``valid_mask`` oracle fold bit for bit.
+* The unified ``FailurePolicy``/``elastic_estimate`` reduce path — lost
+  and deadline-late shards fold into one mask, matching the
+  ``estimate_with_loss_mask`` oracle bitwise, and ``meets_bound`` drives
+  the continue-approximate vs checkpoint-restart decision.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.core import DistributedEarl, Mean
+from repro.core.bootstrap import seed_from_key
+from repro.core.reduce_api import Quantile, Var, bind_params, split_params
+from repro.core.streaming import _stream_chunk_jit, bootstrap_streaming
+from repro.data import synthetic_numeric
+from repro.data.store import ShardedStore
+from repro.ft import (CONTINUE, RESTART, FailurePolicy, Fault,
+                      FaultCounters, FaultExhaustedError, FaultyStore,
+                      ResilientStore, RetryPolicy, ShardEvents,
+                      elastic_estimate, failure_mask)
+
+KEY = jax.random.PRNGKey(3)
+CHUNK = 256
+
+
+def _store(n=1000, d=2, split_size=137, seed=0):
+    rng = np.random.default_rng(seed)
+    data = rng.normal(size=(n, d)).astype(np.float32)
+    return ShardedStore.from_array(data, split_size, interleave=False)
+
+
+def _tree_bitwise(a, b):
+    ok = jax.tree_util.tree_map(
+        lambda u, v: bool(np.array_equal(np.asarray(u), np.asarray(v))),
+        a, b)
+    assert all(jax.tree_util.tree_leaves(ok)), ok
+
+
+# ----------------------------------------------------------------------------
+# the injector
+# ----------------------------------------------------------------------------
+class TestFaultyStore:
+    def test_unknown_kind_rejected(self):
+        with pytest.raises(ValueError, match="kind"):
+            Fault(split=0, kind="gremlin")
+
+    def test_fault_on_missing_split_rejected(self):
+        with pytest.raises(ValueError, match="split"):
+            FaultyStore(_store(), [Fault(split=99, kind="io")])
+
+    def test_transient_io_clears_after_declared_attempts(self):
+        fs = FaultyStore(_store(), [Fault(split=1, kind="io", attempts=2)])
+        for _ in range(2):
+            with pytest.raises(IOError):
+                fs.read_split(1)
+        np.testing.assert_array_equal(fs.read_split(1), fs.splits[1])
+        assert fs.injected.io_errors == 2
+
+    def test_permanent_fault_never_clears(self):
+        fs = FaultyStore(_store(), [Fault(split=0, kind="io",
+                                          permanent=True)])
+        for _ in range(5):
+            with pytest.raises(IOError):
+                fs.read_split(0)
+
+    def test_short_and_corrupt_are_detectable(self):
+        store = _store()
+        fs = FaultyStore(store, [Fault(split=0, kind="short"),
+                                 Fault(split=1, kind="corrupt")])
+        short = fs.read_split(0)
+        assert len(short) < store.split_sizes[0]
+        bad = fs.read_split(1)
+        assert len(bad) == store.split_sizes[1]
+        import zlib
+        assert (zlib.crc32(np.ascontiguousarray(bad).tobytes())
+                != fs.split_checksum(1)), \
+            "corruption must not forge the pristine checksum"
+        # the injector never mutates the underlying store
+        np.testing.assert_array_equal(store.splits[1], fs.inner.splits[1])
+
+    def test_seeded_plan_is_reproducible(self):
+        store = _store()
+        a = FaultyStore.seeded(store, seed=5, p_io=0.3, p_corrupt=0.2)
+        b = FaultyStore.seeded(store, seed=5, p_io=0.3, p_corrupt=0.2)
+        assert a.faults == b.faults
+        c = FaultyStore.seeded(store, seed=6, p_io=0.3, p_corrupt=0.2)
+        assert a.faults != c.faults       # a different seed, different plan
+        assert FaultyStore.seeded(store, seed=5).faults == ()
+
+
+# ----------------------------------------------------------------------------
+# the resilient read path
+# ----------------------------------------------------------------------------
+class TestResilientStore:
+    def test_transient_io_retried_to_success(self):
+        fs = FaultyStore(_store(), [Fault(split=1, kind="io", attempts=2)])
+        rs = ResilientStore(fs, RetryPolicy(max_attempts=3, base_delay=0.0))
+        np.testing.assert_array_equal(rs.read_split(1), fs.inner.splits[1])
+        assert rs.counters.io_errors == 2
+        assert rs.counters.retries == 2
+
+    def test_corrupt_read_caught_and_retried(self):
+        fs = FaultyStore(_store(), [Fault(split=2, kind="corrupt")])
+        rs = ResilientStore(fs, RetryPolicy(max_attempts=2, base_delay=0.0))
+        np.testing.assert_array_equal(rs.read_split(2), fs.inner.splits[2])
+        assert rs.counters.checksum_failures == 1
+
+    def test_short_read_caught_and_retried(self):
+        fs = FaultyStore(_store(), [Fault(split=0, kind="short")])
+        rs = ResilientStore(fs, RetryPolicy(max_attempts=2, base_delay=0.0))
+        np.testing.assert_array_equal(rs.read_split(0), fs.inner.splits[0])
+        assert rs.counters.short_reads == 1
+
+    def test_latency_spike_counts_deadline_miss(self):
+        fs = FaultyStore(_store(), [Fault(split=1, kind="latency",
+                                          latency_s=0.2)])
+        rs = ResilientStore(fs, RetryPolicy(max_attempts=3, base_delay=0.0,
+                                            timeout=0.05))
+        np.testing.assert_array_equal(rs.read_split(1), fs.inner.splits[1])
+        assert rs.counters.deadline_misses >= 1
+
+    def test_late_data_accepted_on_final_attempt(self):
+        """Every attempt is slow: slow beats lost — the final attempt's
+        valid-but-late data is returned rather than discarded."""
+        fs = FaultyStore(_store(), [Fault(split=1, kind="latency",
+                                          latency_s=0.05, permanent=True)])
+        rs = ResilientStore(fs, RetryPolicy(max_attempts=2, base_delay=0.0,
+                                            timeout=0.001))
+        np.testing.assert_array_equal(rs.read_split(1), fs.inner.splits[1])
+        assert rs.counters.deadline_misses == 2
+
+    def test_backoff_delays_are_exponential(self):
+        p = RetryPolicy(max_attempts=4, base_delay=0.01)
+        assert [p.delay(k) for k in (1, 2, 3)] == [0.01, 0.02, 0.04]
+
+    def test_exhausted_budget_raises(self):
+        fs = FaultyStore(_store(), [Fault(split=1, kind="io",
+                                          permanent=True)])
+        rs = ResilientStore(fs, RetryPolicy(max_attempts=3, base_delay=0.0))
+        with pytest.raises(FaultExhaustedError, match="split 1"):
+            rs.read_split(1)
+
+    def test_exhausted_budget_degrades_to_lost_split(self):
+        store = _store()
+        fs = FaultyStore(store, [Fault(split=2, kind="io", permanent=True)])
+        rs = ResilientStore(fs, RetryPolicy(max_attempts=2, base_delay=0.0),
+                            on_exhausted="degrade")
+        out = rs.read_split(2)
+        assert out.shape == store.splits[2].shape
+        assert not out.any()
+        assert rs.lost_splits == [2]
+        assert rs.counters.splits_lost == 1
+        lo, hi = rs.invalid_row_ranges()[0]
+        assert (lo, hi) == (int(store.offsets[2]), int(store.offsets[3]))
+
+    def test_bad_on_exhausted_rejected(self):
+        with pytest.raises(ValueError, match="on_exhausted"):
+            ResilientStore(_store(), RetryPolicy(), on_exhausted="panic")
+
+
+# ----------------------------------------------------------------------------
+# streaming end to end under injected faults
+# ----------------------------------------------------------------------------
+class TestStreamingUnderFaults:
+    def test_transient_faults_within_budget_bitwise_clean(self):
+        store = _store()
+        base = bootstrap_streaming(store, Mean(), B=16, key=KEY,
+                                   chunk=CHUNK)
+        fs = FaultyStore(store, [Fault(split=1, kind="io", attempts=2),
+                                 Fault(split=3, kind="corrupt"),
+                                 Fault(split=5, kind="short")])
+        r = bootstrap_streaming(fs, Mean(), B=16, key=KEY, chunk=CHUNK,
+                                retry=RetryPolicy(max_attempts=4,
+                                                  base_delay=0.0))
+        _tree_bitwise(base.thetas, r.thetas)
+        _tree_bitwise(base.estimate, r.estimate)
+        # observed == injected, surfaced in the report
+        f: FaultCounters = r.stream.faults
+        assert f.io_errors == fs.injected.io_errors == 2
+        assert f.checksum_failures == fs.injected.checksum_failures == 1
+        assert f.short_reads == fs.injected.short_reads == 1
+        assert f.retries == 4
+        assert r.stream.lost_splits == ()
+
+    def test_straggler_past_deadline_completes_bitwise(self):
+        store = _store()
+        base = bootstrap_streaming(store, Mean(), B=16, key=KEY,
+                                   chunk=CHUNK)
+        fs = FaultyStore(store, [Fault(split=2, kind="latency",
+                                       latency_s=0.1)])
+        r = bootstrap_streaming(
+            fs, Mean(), B=16, key=KEY, chunk=CHUNK,
+            retry=RetryPolicy(max_attempts=2, base_delay=0.0,
+                              timeout=0.02))
+        _tree_bitwise(base.thetas, r.thetas)
+        assert r.stream.faults.deadline_misses >= 1
+
+    def test_exhausted_raise_propagates(self):
+        fs = FaultyStore(_store(), [Fault(split=1, kind="io",
+                                          permanent=True)])
+        with pytest.raises(FaultExhaustedError):
+            bootstrap_streaming(fs, Mean(), B=16, key=KEY, chunk=CHUNK,
+                                retry=RetryPolicy(max_attempts=2,
+                                                  base_delay=0.0))
+
+    @staticmethod
+    def _oracle_masked_fold(data, lost_ranges, stat, B, key, chunk):
+        """Dedicated valid_mask oracle: fold the (zeroed) rows chunk by
+        chunk with masks built DIRECTLY from the known lost ranges —
+        independent of the ResilientStore degradation machinery."""
+        data = np.array(data, copy=True)
+        for lo, hi in lost_ranges:
+            data[lo:hi] = 0.0
+        n, d = data.shape
+        spec, params = split_params(stat)
+        fresh = jax.tree_util.tree_map(
+            lambda a: jax.device_put(np.asarray(a)),
+            (jax.vmap(lambda _: stat.init_state(d))(jnp.arange(B)),
+             stat.init_state(d)))
+        states, est = fresh
+        base = seed_from_key(key)
+        valid = 0
+        for i in range(-(-n // chunk)):
+            xb = data[i * chunk:(i + 1) * chunk]
+            nb = len(xb)
+            mask = np.zeros((chunk,), np.float32)
+            mask[:nb] = 1.0
+            for lo, hi in lost_ranges:
+                a, b = max(lo, i * chunk) - i * chunk, \
+                    min(hi, i * chunk + nb) - i * chunk
+                if a < b:
+                    mask[a:b] = 0.0
+            if nb < chunk:
+                xb = np.concatenate(
+                    [xb, np.zeros((chunk - nb, d), xb.dtype)])
+            valid += int(mask.sum())
+            states, est = _stream_chunk_jit(
+                states, est, jax.device_put(xb), jax.device_put(mask),
+                base, jnp.asarray(i, jnp.int32), params, spec, B)
+        p_eff = valid / n
+        s = bind_params(spec, params)
+        return (s.correct(jax.vmap(s.finalize)(states), p_eff),
+                s.correct(s.finalize(est), p_eff))
+
+    @pytest.mark.parametrize("stat", [
+        Mean(), Var(), Quantile(0.5, lo=-4.0, hi=4.0, nbins=64),
+    ], ids=lambda s: type(s).__name__)
+    def test_mid_run_shard_loss_matches_valid_mask_oracle(self, stat):
+        store = _store()
+        fs = FaultyStore(store, [Fault(split=2, kind="io",
+                                       permanent=True)])
+        r = bootstrap_streaming(
+            fs, stat, B=16, key=KEY, chunk=CHUNK,
+            policy=FailurePolicy(retry=RetryPolicy(max_attempts=2,
+                                                   base_delay=0.0),
+                                 on_exhausted="degrade"))
+        assert r.stream.lost_splits == (2,)
+        assert r.stream.faults.splits_lost == 1
+        lost = [(int(store.offsets[2]), int(store.offsets[3]))]
+        assert r.stream.valid_rows == store.N - 137
+        assert r.n == store.N - 137
+        thetas, estimate = self._oracle_masked_fold(
+            store.read_all(), lost, stat, 16, KEY, CHUNK)
+        _tree_bitwise(thetas, r.thetas)
+        _tree_bitwise(estimate, r.estimate)
+
+    def test_degraded_run_is_resumable(self, tmp_path):
+        """Degradation and checkpointing compose: kill a degraded run,
+        resume it, and the lost split stays lost (carried in the cursor)
+        with the same final bits."""
+        from repro.checkpoint.manager import CheckpointManager
+        store = _store()
+
+        def faulty():
+            return FaultyStore(store, [Fault(split=0, kind="io",
+                                             permanent=True)])
+
+        pol = FailurePolicy(retry=RetryPolicy(max_attempts=2,
+                                              base_delay=0.0),
+                            on_exhausted="degrade")
+        base = bootstrap_streaming(faulty(), Mean(), B=16, key=KEY,
+                                   chunk=CHUNK, policy=pol)
+
+        from test_ft_resume import _DyingManager, _Kill
+        root = str(tmp_path / "ckpt")
+        with pytest.raises(_Kill):
+            bootstrap_streaming(faulty(), Mean(), B=16, key=KEY,
+                                chunk=CHUNK, policy=pol,
+                                checkpoint=_DyingManager(root, 2))
+        r = bootstrap_streaming(
+            faulty(), Mean(), B=16, key=KEY, chunk=CHUNK, policy=pol,
+            resume=True,
+            checkpoint=CheckpointManager(root, async_save=False))
+        _tree_bitwise(base.thetas, r.thetas)
+        assert r.stream.lost_splits == (0,)
+        assert r.n == base.n
+
+
+# ----------------------------------------------------------------------------
+# the unified reduce-side policy
+# ----------------------------------------------------------------------------
+def _one_device_mesh():
+    return Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+
+
+class TestElasticPolicy:
+    def _earl(self, B=64):
+        return DistributedEarl(_one_device_mesh(), Mean(), B=B,
+                               data_axes=("data",))
+
+    def test_lost_and_late_fold_into_one_mask_oracle_bitwise(self, key):
+        data = jnp.asarray(synthetic_numeric(16_384, 10, 2, seed=6))
+        earl = self._earl()
+        events = ShardEvents(n_shards=8, lost=(1,),
+                             completion_s=(0.1,) * 7 + (9.9,))
+        er = elastic_estimate(earl, data, key, events,
+                              FailurePolicy(sigma=0.05, deadline_s=1.0))
+        assert er.lost == (1,) and er.late == (7,)
+        assert er.report.shards_lost == 2
+        # the dedicated valid_mask oracle: same mask, direct call
+        mask = failure_mask(data.shape[0], 8, [1, 7])
+        oracle = earl.estimate_with_loss_mask(data, mask, key,
+                                              p=float(mask.mean()))
+        _tree_bitwise(er.report.result, oracle.estimate)
+        _tree_bitwise(er.report.ci_lo, oracle.report.ci_lo)
+        _tree_bitwise(er.report.ci_hi, oracle.report.ci_hi)
+        assert er.report.cv == oracle.cv
+
+    def test_meets_bound_drives_decision(self, key):
+        easy = jnp.asarray(synthetic_numeric(16_384, 10, 2, seed=7))
+        er = elastic_estimate(self._earl(), easy, key,
+                              ShardEvents(n_shards=8, lost=(0,)),
+                              FailurePolicy(sigma=0.05))
+        assert er.decision == CONTINUE and er.report.meets_bound
+        hard = jnp.asarray(synthetic_numeric(4096, 10, 200, seed=8))
+        er2 = elastic_estimate(self._earl(), hard, key,
+                               ShardEvents(n_shards=16,
+                                           lost=tuple(range(15))),
+                               FailurePolicy(sigma=0.001))
+        assert er2.decision == RESTART and not er2.report.meets_bound
+        assert not er2.can_restart       # no CheckpointManager configured
+
+    def test_estimate_elastic_method_matches_function(self, key, tmp_path):
+        from repro.checkpoint.manager import CheckpointManager
+        data = jnp.asarray(synthetic_numeric(8192, 10, 2, seed=9))
+        earl = self._earl()
+        events = ShardEvents(n_shards=8, lost=(3,))
+        pol = FailurePolicy(sigma=0.05,
+                            checkpoint=CheckpointManager(str(tmp_path)))
+        a = earl.estimate_elastic(data, key, events, pol)
+        b = elastic_estimate(earl, data, key, events, pol)
+        _tree_bitwise(a.report.result, b.report.result)
+        assert a.decision == b.decision
+        assert a.can_restart and b.can_restart
+
+    def test_late_requires_full_completion_vector(self):
+        with pytest.raises(ValueError, match="completion_s"):
+            ShardEvents(n_shards=8, completion_s=(0.1, 0.2)).late(1.0)

@@ -27,7 +27,7 @@ def test_kernelbench_smoke_runs_and_writes_nothing():
     for p in (kernelbench._BENCH_JSON, kernelbench._BENCH_KMEANS_JSON,
               kernelbench._BENCH_QUANTILE_JSON,
               kernelbench._BENCH_MULTI_JSON, kernelbench._BENCH_STREAM_JSON,
-              kernelbench._BENCH_GROUPED_JSON):
+              kernelbench._BENCH_GROUPED_JSON, kernelbench._BENCH_FT_JSON):
         stamps[p] = p.stat().st_mtime_ns if p.exists() else None
 
     kernelbench.run(smoke=True)
@@ -73,4 +73,16 @@ def test_check_regression_gate(tmp_path):
     d["speedup_grouped_vs_sequential"] = 3.0
     d["per_key_thetas_bitwise_equal_to_sequential"] = False
     (cur / "BENCH_grouped.json").write_text(json.dumps(d))
+    assert check_regression.check(base, cur, 0.5)
+
+    # ISSUE-8 fault-tolerance gates: overhead ceiling + bitwise invariants
+    shutil.copy(base / "BENCH_grouped.json", cur / "BENCH_grouped.json")
+    d = json.loads((cur / "BENCH_ft.json").read_text())
+    d["checkpoint_overhead_ratio"] = 1.25       # above the 1.10 ceiling
+    (cur / "BENCH_ft.json").write_text(json.dumps(d))
+    assert check_regression.check(base, cur, 0.5)
+
+    d["checkpoint_overhead_ratio"] = 1.02
+    d["resumed_bitwise_equal"] = False
+    (cur / "BENCH_ft.json").write_text(json.dumps(d))
     assert check_regression.check(base, cur, 0.5)

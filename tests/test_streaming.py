@@ -75,6 +75,26 @@ class TestIterBatches:
         with pytest.raises(ValueError, match="chunk"):
             next(store.iter_batches(0))
 
+    def test_start_row_resumes_mid_stream(self):
+        store = _store()
+        full = list(store.iter_batches(3000))
+        store.stats.reset()
+        tail = list(store.iter_batches(3000, start_row=6000))
+        np.testing.assert_array_equal(np.concatenate(tail),
+                                      np.concatenate(full[2:]))
+        # splits entirely before the cursor are never opened: the resumed
+        # pass pays only for the rows it still needs
+        assert store.stats.splits_opened < len(store.splits)
+        assert store.stats.rows_read < store.N
+
+    def test_start_row_bounds(self):
+        store = _store(n=10, split_size=5)
+        with pytest.raises(ValueError, match="start_row"):
+            next(store.iter_batches(4, start_row=11))
+        with pytest.raises(ValueError, match="start_row"):
+            next(store.iter_batches(4, start_row=-1))
+        assert list(store.iter_batches(4, start_row=10)) == []
+
     def test_read_all_matches_concatenated_splits(self):
         store = _store()
         np.testing.assert_array_equal(store.read_all(),
@@ -193,6 +213,36 @@ class TestStreamingValidation:
                                 key=jax.random.PRNGKey(0), chunk=64)
 
 
+class TestProducerLifecycle:
+    """A consumer-side failure must not strand the prefetch thread: before
+    the stop-event fix, a chunk that poisoned the consumer's jitted update
+    left the producer blocked forever in ``Queue.put`` on the full hand-off
+    queue — a thread (and its staged device buffers) leaked per failure."""
+
+    @staticmethod
+    def _prefetch_threads():
+        return [t for t in threading.enumerate()
+                if t.name == "earl-stream-prefetch" and t.is_alive()]
+
+    def test_poisoned_chunk_does_not_leak_producer_thread(self):
+        rng = np.random.default_rng(3)
+        splits = [rng.normal(size=(64, 3)).astype(np.float32)
+                  for _ in range(8)]
+        # batch 1 has the wrong width: the consumer's update raises at
+        # trace time while the producer still has 6 batches to stage
+        # through a depth-2 queue (i.e. it WOULD block without the fix)
+        splits[1] = rng.normal(size=(64, 2)).astype(np.float32)
+        store = ShardedStore(splits)
+        assert not self._prefetch_threads()
+        with pytest.raises(Exception):
+            bootstrap_streaming(store, Mean(), B=8,
+                                key=jax.random.PRNGKey(0), chunk=64,
+                                queue_depth=2)
+        # the driver's cleanup (stop + drain + join) already ran: no
+        # prefetch thread may survive the call
+        assert not self._prefetch_threads()
+
+
 class TestStreamingDeviceFootprint:
     """The per-chunk update's intermediates are bounded by the chunk and
     state sizes — NOT by n.  The streamed carry never holds anything of
@@ -210,11 +260,12 @@ class TestStreamingDeviceFootprint:
         states = jax.vmap(lambda _: stat.init_state(d))(jnp.arange(B))
         est = stat.init_state(d)
         xi = jnp.zeros((chunk, d), jnp.float32)
+        vi = jnp.ones((chunk,), jnp.float32)
 
         biggest = _max_intermediate_size(
             lambda st, e, x: _stream_chunk_jit(
-                st, e, x, jnp.int32(0), jnp.int32(0), jnp.int32(chunk),
-                params, spec, B, chunk),
+                st, e, x, vi, jnp.int32(0), jnp.int32(0),
+                params, spec, B),
             states, est, xi)
         # the (B, chunk) per-chunk weight matrix would be 262144 elements;
         # the largest legitimate intermediate is the (B, block_n=512)
@@ -238,9 +289,10 @@ class TestStreamingDeviceFootprint:
         states = jax.vmap(lambda _: stat.init_state(d))(jnp.arange(B))
         est = stat.init_state(d)
         xi = jnp.zeros((chunk, d), jnp.float32)
+        vi = jnp.ones((chunk,), jnp.float32)
         jaxpr = jax.make_jaxpr(
             lambda st, e, x: _stream_chunk_jit(
-                st, e, x, jnp.int32(0), jnp.int32(0), jnp.int32(chunk),
-                params, spec, B, chunk))(states, est, xi)
+                st, e, x, vi, jnp.int32(0), jnp.int32(0),
+                params, spec, B))(states, est, xi)
         shapes = _walk_shapes(jaxpr.jaxpr, [])
         assert max((max(s) for s in shapes if s), default=0) <= chunk
