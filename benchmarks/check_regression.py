@@ -50,6 +50,17 @@ FLOORS = {
     "speedup_stream_vs_serial": 1.3,
 }
 
+#: file -> (key, min) pairs gated against an ABSOLUTE floor only (no
+#: baseline ratio): throughputs that depend on the host and would be
+#: noise under a cross-hardware baseline comparison, but whose collapse
+#: (an accidentally quadratic drain, a fold that stopped being O(Δn))
+#: should still fail loudly.  Floors are deliberately conservative for
+#: the 1-core CI container.
+ABS_FLOORS = {
+    # ISSUE-9: a standing LiveSession must sustain a usable fold rate
+    "BENCH_live.json": (("batches_per_sec", 20.0),),
+}
+
 #: file -> (key, max) pairs for lower-is-better metrics: absolute caps,
 #: not baseline-relative (an overhead that doubles but stays under the
 #: cap is fine; one that creeps past it is a regression even if the
@@ -75,6 +86,13 @@ INVARIANTS = {
     ("BENCH_ft.json", "resumed_bitwise_equal"): True,
     ("BENCH_ft.json", "checkpointed_bitwise_equal"): True,
     ("BENCH_ft.json", "degraded_run_completed"): True,
+    # ISSUE-9: the live-ingest robustness contract — kill/resume bitwise,
+    # shed fold bitwise equal to the dedicated valid_mask oracle, pane
+    # ring within its memory bound, every batch folded exactly once
+    ("BENCH_live.json", "resumed_bitwise_equal"): True,
+    ("BENCH_live.json", "shed_bitwise_equal_to_oracle"): True,
+    ("BENCH_live.json", "pane_ring_bounded"): True,
+    ("BENCH_live.json", "dedup_exactly_once"): True,
 }
 
 
@@ -118,6 +136,23 @@ def check(baseline_dir: pathlib.Path, current_dir: pathlib.Path,
                 "     new"
             print(f"{'FAIL' if status != 'ok' else ' ok '} {fname}:{key}"
                   f"  current={val:8.2f}  baseline={ref_s}  [{status}]")
+
+    for fname, mins in ABS_FLOORS.items():
+        cur_path = current_dir / fname
+        if not cur_path.exists():
+            failures.append(f"{fname}: missing from current run")
+            continue
+        cur = json.loads(cur_path.read_text())
+        for key, floor in mins:
+            val = float(cur[key])
+            if val < floor:
+                failures.append(
+                    f"{fname}:{key} = {val:.2f} < abs floor {floor}")
+                print(f"FAIL {fname}:{key}  current={val:8.2f}  "
+                      f"[BELOW ABS FLOOR {floor}]")
+            else:
+                print(f" ok  {fname}:{key}  current={val:8.2f}  "
+                      f"abs_floor={floor}")
 
     for fname, caps in CEILINGS.items():
         cur_path = current_dir / fname

@@ -47,6 +47,7 @@ _BENCH_MULTI_JSON = _ROOT / "BENCH_multi.json"
 _BENCH_STREAM_JSON = _ROOT / "BENCH_stream.json"
 _BENCH_GROUPED_JSON = _ROOT / "BENCH_grouped.json"
 _BENCH_FT_JSON = _ROOT / "BENCH_ft.json"
+_BENCH_LIVE_JSON = _ROOT / "BENCH_live.json"
 
 
 def _timer(smoke: bool):
@@ -104,6 +105,7 @@ def run(smoke: bool = False) -> None:
     run_grouped(smoke=smoke)
     run_stream(smoke=smoke)
     run_ft(smoke=smoke)
+    run_live(smoke=smoke)
 
 
 def _cv(thetas):
@@ -807,6 +809,208 @@ def run_ft(smoke: bool = False) -> None:
                             "splits_lost":
                                 rdeg.stream.faults.splits_lost,
                             "lost_splits": list(rdeg.stream.lost_splits)},
+    }, indent=2) + "\n")
+    shutil.rmtree(root, ignore_errors=True)
+
+
+def run_live(smoke: bool = False) -> None:
+    """Live ingest: sustained fold throughput, lag recovery, shedding.
+
+    Three questions, each recorded or gated in BENCH_live.json:
+
+    * How fast does a standing ``LiveSession`` DRAIN?  Appends land in an
+      ``IngestLog`` and a sliding-window session folds + re-emits a
+      report per batch — sustained batches/sec (and rows/sec) over a
+      pre-filled backlog is the headline, gated by an absolute floor.
+    * How fast does it RECOVER from lag?  Stall the consumer while a
+      burst accumulates, then measure the time to drain the burst back
+      to a clean watermark — reported relative to the steady-state
+      per-batch cost.
+    * What does SHEDDING cost/buy?  The same burst drained under a
+      ``LagPolicy.shed_backlog`` policy: shed fraction, p_eff, and the
+      two bitwise invariants (kill/resume mid-stream equals the
+      uninterrupted run; the shed fold equals a dedicated valid_mask
+      oracle fold) that make degradation trustworthy.
+    """
+    import shutil
+    import tempfile
+    import time as _time
+
+    import numpy as np
+
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.core.bootstrap import seed_from_key, offset_seed
+    from repro.core.reduce_api import SlidingWindow
+    from repro.ft.policy import LagPolicy
+    from repro.live import IngestLog, LiveSession
+
+    B, rows, nbatch, d = (4, 64, 6, 4) if smoke else (16, 2048, 64, 8)
+    win = SlidingWindow(Var(), 4 * rows, rows)   # 4-pane ring, 1 batch/pane
+    key = jax.random.PRNGKey(31)
+    rng = np.random.default_rng(41)
+    batches = [rng.normal(size=(rows, d)).astype(np.float32)
+               for _ in range(nbatch)]
+    root = tempfile.mkdtemp(prefix="earl_bench_live_")
+
+    def fill_log():
+        log = IngestLog()
+        for b in batches:
+            log.append(b)
+        return log
+
+    # -- sustained drain throughput --------------------------------------
+    log = fill_log()
+    sess = LiveSession(log, win, B=B, key=key)    # warm the fold jit
+    sess.poll()
+    reps = 1 if smoke else 5
+    times = []
+    for _ in range(reps):
+        log = fill_log()
+        s = LiveSession(log, win, B=B, key=key)
+        t0 = _time.perf_counter()
+        out = s.poll()
+        times.append(_time.perf_counter() - t0)
+        assert len(out) == nbatch
+    drain_s = sorted(times)[len(times) // 2]
+    batches_per_sec = nbatch / drain_s
+    us_batch = drain_s / nbatch * 1e6
+    emit("live_drain", us_batch,
+         f"batches_per_sec={batches_per_sec:.1f};"
+         f"rows_per_sec={batches_per_sec * rows:.0f};"
+         f"B={B};rows={rows};nbatch={nbatch};panes={win.panes}")
+
+    # -- lag recovery: drain a standing burst back to a clean watermark --
+    log = IngestLog()
+    s = LiveSession(log, win, B=B, key=key)
+    for b in batches[:2]:
+        log.append(b)
+    s.poll()                                      # steady state...
+    burst = 4 if smoke else 16
+    for b in batches[2:2 + burst]:
+        log.append(b)                             # ...consumer stalled
+    t0 = _time.perf_counter()
+    out = s.poll()
+    recovery_s = _time.perf_counter() - t0
+    assert len(out) == burst and s.watermark_seq == 1 + burst
+    emit("live_lag_recovery", recovery_s * 1e6,
+         f"burst={burst};"
+         f"recovery_vs_steady={recovery_s / max(us_batch * 1e-6, 1e-12) / burst:.2f}x")
+
+    # -- shedding under backlog + the two bitwise invariants -------------
+    policy = LagPolicy(max_lag_batches=4 * burst, shed_backlog=2,
+                       p_shed=0.5, shed_seed=77)
+    log = fill_log()
+    shed_sess = LiveSession(log, win, B=B, key=key, policy=policy)
+    shed_sess.poll()
+    shed_rep = shed_sess.report()
+    shed_fraction = (shed_sess.counters.shed_rows
+                     / max(shed_sess.counters.folded * rows, 1))
+
+    # oracle: re-fold the final window's batches by hand with the same
+    # seeded masks handed to the kernels as a dedicated valid_mask
+    stat = win.stat
+    base_seed = seed_from_key(key)
+    states = jax.vmap(lambda _: stat.init_state(d))(jnp.arange(B))
+    est = stat.init_state(d)
+    o_rows = o_valid = 0
+    shed_upto = nbatch - 1 - policy.shed_backlog  # lag at fold of seq q
+    for sq in range(nbatch - win.panes, nbatch):
+        xb = batches[sq]
+        if sq < shed_upto:
+            r2 = np.random.default_rng((77, sq))
+            m = (r2.random(rows) < policy.p_shed).astype(np.float32)
+        else:
+            m = np.ones(rows, np.float32)
+        est = stat.update(est, xb, m)
+        delta = fused_resample_states(
+            stat, offset_seed(base_seed, jnp.asarray(sq, jnp.int32)),
+            xb, B, valid_mask=m)
+        states = jax.vmap(stat.merge)(states, delta)
+        o_rows += rows
+        o_valid += int(m.sum())
+    p_eff = o_valid / o_rows
+    o_thetas = stat.correct(jax.vmap(stat.finalize)(states), p_eff)
+    o_est = stat.correct(stat.finalize(est), p_eff)
+    shed_bitwise = bool(
+        np.array_equal(np.asarray(shed_rep.thetas), np.asarray(o_thetas))
+        and np.array_equal(np.asarray(shed_rep.estimate),
+                           np.asarray(o_est))
+        and shed_rep.p_eff == p_eff)
+
+    # kill mid-stream (after the nbatch//2-th fold), resume, compare bits
+    clean_log = fill_log()
+    clean = LiveSession(clean_log, win, B=B, key=key)
+    clean.poll()
+    clean_rep = clean.report()
+
+    class _Die(Exception):
+        pass
+
+    class _DyingManager(CheckpointManager):
+        def __init__(self, r, die_after, **kw):
+            kw.setdefault("async_save", False)
+            super().__init__(r, **kw)
+            self.die_after, self.saves = die_after, 0
+
+        def save(self, *a, **kw):
+            super().save(*a, **kw)
+            self.saves += 1
+            if self.saves >= self.die_after:
+                raise _Die()
+
+    log = fill_log()
+    rroot = f"{root}/resume"
+    try:
+        LiveSession(log, win, B=B, key=key,
+                    checkpoint=_DyingManager(rroot, max(1, nbatch // 2)),
+                    checkpoint_every=1).poll()
+        raise RuntimeError("dying manager did not die")
+    except _Die:
+        pass
+    rs = LiveSession(log, win, B=B, key=key, resume=True,
+                     checkpoint=CheckpointManager(rroot, async_save=False))
+    rs.poll()
+    rres = rs.report()
+    resumed_bitwise = bool(
+        np.array_equal(np.asarray(clean_rep.thetas),
+                       np.asarray(rres.thetas))
+        and np.array_equal(np.asarray(clean_rep.estimate),
+                           np.asarray(rres.estimate)))
+    ring_bounded = (rs.panes_live <= rs.memory_bound
+                    and shed_sess.panes_live <= shed_sess.memory_bound)
+    dedup_exact = (rs.counters.folded == nbatch
+                   and clean.counters.folded == nbatch)
+
+    emit("live_shed", 0.0,
+         f"shed_fraction={shed_fraction:.3f};p_eff={shed_rep.p_eff:.3f};"
+         f"shed_bitwise_equal_to_oracle={shed_bitwise};"
+         f"resumed_bitwise_equal={resumed_bitwise}")
+
+    if smoke:
+        shutil.rmtree(root, ignore_errors=True)
+        return
+
+    _BENCH_LIVE_JSON.write_text(json.dumps({
+        "config": {"B": B, "rows_per_batch": rows, "nbatch": nbatch,
+                   "d": d, "window_size": win.size, "window_slide":
+                   win.slide, "panes": win.panes,
+                   "backend": jax.default_backend()},
+        "us_per_batch": us_batch,
+        "batches_per_sec": batches_per_sec,
+        "rows_per_sec": batches_per_sec * rows,
+        "lag_recovery": {"burst_batches": burst,
+                         "recovery_s": recovery_s,
+                         "per_batch_vs_steady_ratio":
+                             recovery_s / burst / max(drain_s / nbatch,
+                                                      1e-12)},
+        "shedding": {"shed_fraction": shed_fraction,
+                     "p_eff": shed_rep.p_eff,
+                     "shed_batches": shed_sess.counters.shed_batches,
+                     "shed_rows": shed_sess.counters.shed_rows},
+        "shed_bitwise_equal_to_oracle": shed_bitwise,
+        "resumed_bitwise_equal": resumed_bitwise,
+        "pane_ring_bounded": ring_bounded,
+        "dedup_exactly_once": dedup_exact,
     }, indent=2) + "\n")
     shutil.rmtree(root, ignore_errors=True)
 

@@ -64,14 +64,47 @@ class CheckpointManager:
         os.makedirs(root, exist_ok=True)
         self._gc_orphans()
 
+    @classmethod
+    def for_run(cls, root: str, fingerprint: str,
+                keep_last: int = 3, async_save: bool = True
+                ) -> "CheckpointManager":
+        """A manager scoped to ONE run under a shared ``root``.
+
+        Several standing sessions can point at the same checkpoint
+        directory; without scoping they would overwrite each other's
+        ``ckpt_<step>`` dirs (step counters collide) and keep-k GC would
+        reap a peer's snapshots.  Scoping by the run fingerprint gives
+        each distinct run its own subdirectory — same fingerprint, same
+        subdirectory, so resume finds its own snapshots by construction.
+        """
+        return cls(os.path.join(root, f"run_{fingerprint[:16]}"),
+                   keep_last=keep_last, async_save=async_save)
+
     def _gc_orphans(self) -> None:
         """Remove ``.tmp_ckpt_*`` staging directories left by a crash during
         ``_write`` — they were never renamed into place, so they hold no
-        committed checkpoint and would otherwise accumulate forever."""
+        committed checkpoint and would otherwise accumulate forever.
+
+        Staging names carry the writer's pid (``.tmp_ckpt_<step>.<pid>``);
+        a tmp dir whose writer is still ALIVE belongs to a concurrent peer
+        mid-``_write`` and must not be reaped out from under it.  Suffixless
+        names (the pre-pid format) have no live owner claim and are reaped.
+        """
         for name in os.listdir(self.root):
-            if name.startswith(".tmp_ckpt_"):
-                shutil.rmtree(os.path.join(self.root, name),
-                              ignore_errors=True)
+            if not name.startswith(".tmp_ckpt_"):
+                continue
+            pid_s = name.rpartition(".")[2]
+            if pid_s.isdigit():
+                try:
+                    os.kill(int(pid_s), 0)
+                except ProcessLookupError:
+                    pass        # owner is gone: orphaned
+                except PermissionError:
+                    continue    # pid exists under another uid: assume live
+                else:
+                    continue    # owner alive: a live peer's staging dir
+            shutil.rmtree(os.path.join(self.root, name),
+                          ignore_errors=True)
 
     # -- lifecycle --------------------------------------------------------
     def close(self) -> None:
@@ -93,7 +126,10 @@ class CheckpointManager:
     # -- save -------------------------------------------------------------
     def _write(self, step: int, flat: Dict[str, np.ndarray],
                extra: Dict[str, Any]) -> str:
-        tmp = os.path.join(self.root, f".tmp_ckpt_{step:08d}")
+        # pid-suffixed staging name: a concurrent manager sharing this root
+        # can tell a LIVE peer's in-flight write from a crashed one's
+        # leftovers (see _gc_orphans).
+        tmp = os.path.join(self.root, f".tmp_ckpt_{step:08d}.{os.getpid()}")
         final = os.path.join(self.root, f"ckpt_{step:08d}")
         if os.path.exists(tmp):
             shutil.rmtree(tmp)

@@ -25,8 +25,9 @@ from repro.core.distributed import (DistributedEarl, build_bootstrap_step,
                                     shard_values)
 from repro.core.reduce_api import (Count, GroupedStatistic, KMeansState,
                                    KMeansStep, Mean, MeanLoss, Median,
-                                   MomentState, Quantile, Statistic,
-                                   StatisticGroup, Std, Sum, Var, kmeans_fit)
+                                   MomentState, Quantile, SlidingWindow,
+                                   Statistic, StatisticGroup, Std, Sum,
+                                   TumblingWindow, Var, Window, kmeans_fit)
 from repro.core.session import EarlSession, EarlyResult
 from repro.core.ssabe import SSABEResult, ssabe
 from repro.core.streaming import (StreamingBootstrapResult, StreamReport,
@@ -45,8 +46,9 @@ __all__ = [
     "poisson_delta_result", "shared_base_bootstrap", "work_saved",
     "DistributedEarl", "build_bootstrap_step", "shard_values",
     "Count", "GroupedStatistic", "KMeansState", "KMeansStep", "Mean",
-    "MeanLoss", "Median", "MomentState", "Quantile", "Statistic",
-    "StatisticGroup", "Std", "Sum", "Var", "kmeans_fit",
+    "MeanLoss", "Median", "MomentState", "Quantile", "SlidingWindow",
+    "Statistic", "StatisticGroup", "Std", "Sum", "TumblingWindow", "Var",
+    "Window", "kmeans_fit",
     "EarlSession", "EarlyResult", "SSABEResult", "ssabe",
     "StreamingBootstrapResult", "StreamReport", "bootstrap_streaming",
 ]

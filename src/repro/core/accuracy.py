@@ -138,7 +138,14 @@ class KeyedAccuracyReport(GroupAccuracyReport):
     meets the target", which is the BlinkDB-style per-key guarantee (a
     rare key's wide CI cannot hide behind a heavy hitter's tight one).
     All keys share one Poisson weight stream (common random numbers), so
-    cross-key comparisons of these CIs are consistent."""
+    cross-key comparisons of these CIs are consistent.
+
+    ``p_keys`` (when the driver ran under stratified sampling) records the
+    PER-KEY sampled fractions the thetas were corrected with — key g's
+    reports reflect ``inner.correct(·, p_keys[g])`` rather than one
+    whole-table p, so a rare stratum's Sum/Count is scaled by its own
+    inclusion probability (see ``GroupedStatistic.correct_per_key``)."""
+    p_keys: "Tuple[float, ...] | None" = None
 
     @property
     def worst_key(self) -> int:
@@ -147,12 +154,14 @@ class KeyedAccuracyReport(GroupAccuracyReport):
         return max(range(len(cvs)), key=lambda g: cvs[g])
 
 
-def report_for(thetas, alpha: float = 0.05, num_groups=None):
+def report_for(thetas, alpha: float = 0.05, num_groups=None, p_keys=None):
     """AccuracyReport for a (B, ...) theta array, a GroupAccuracyReport
     for the tuple of per-member thetas a StatisticGroup produces, or — when
     ``num_groups`` is set (drivers read it off ``stat.num_groups`` for a
     GroupedStatistic) — a KeyedAccuracyReport splitting the (B, G, ...)
-    thetas into per-key reports along axis 1."""
+    thetas into per-key reports along axis 1.  ``p_keys`` is carried onto
+    the keyed report for introspection (the thetas must already be
+    per-key corrected)."""
     if isinstance(thetas, (tuple, list)):
         return GroupAccuracyReport(tuple(
             AccuracyReport.from_thetas(t, alpha) for t in thetas))
@@ -160,7 +169,9 @@ def report_for(thetas, alpha: float = 0.05, num_groups=None):
         thetas = jnp.asarray(thetas)
         return KeyedAccuracyReport(tuple(
             AccuracyReport.from_thetas(thetas[:, g], alpha)
-            for g in range(int(num_groups))))
+            for g in range(int(num_groups))),
+            p_keys=None if p_keys is None
+            else tuple(float(p) for p in p_keys))
     return AccuracyReport.from_thetas(thetas, alpha)
 
 

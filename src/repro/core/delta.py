@@ -114,15 +114,34 @@ def poisson_delta_extend(pd: PoissonDelta, new_values: jax.Array
 
 
 def poisson_delta_result(pd: PoissonDelta, estimate: Any = None,
-                         p: float = 1.0) -> BootstrapResult:
-    thetas = pd.stat.correct(jax.vmap(pd.stat.finalize)(pd.states), p)
+                         p: float = 1.0,
+                         p_keys: Optional[np.ndarray] = None
+                         ) -> BootstrapResult:
+    """Finalize a delta run into a ``BootstrapResult``.
+
+    ``p`` is the whole-table sampled fraction for ``correct``.  For a
+    keyed statistic under STRATIFIED sampling, pass ``p_keys`` (per-key
+    sampled fractions, length ``num_groups``) instead: each key's thetas
+    and estimate are corrected by that key's own inclusion probability
+    (``GroupedStatistic.correct_per_key``), and the fractions are surfaced
+    on the resulting ``KeyedAccuracyReport.p_keys``."""
+    num_groups = getattr(pd.stat, "num_groups", None)
+    raw_thetas = jax.vmap(pd.stat.finalize)(pd.states)
     if estimate is None:
         estimate = pd.stat.finalize(pd.est_state)
+    if p_keys is not None:
+        if num_groups is None:
+            raise ValueError("p_keys needs a keyed statistic "
+                             "(GroupedStatistic)")
+        thetas = pd.stat.correct_per_key(raw_thetas, p_keys, key_axis=1)
+        estimate = pd.stat.correct_per_key(estimate, p_keys, key_axis=0)
+    else:
+        thetas = pd.stat.correct(raw_thetas, p)
+        estimate = pd.stat.correct(estimate, p)
     return BootstrapResult(
-        estimate=pd.stat.correct(estimate, p), thetas=thetas,
-        report=accuracy.report_for(thetas,
-                                   num_groups=getattr(pd.stat, "num_groups",
-                                                      None)),
+        estimate=estimate, thetas=thetas,
+        report=accuracy.report_for(thetas, num_groups=num_groups,
+                                   p_keys=p_keys),
         B=pd.B, n=pd.n,
     )
 

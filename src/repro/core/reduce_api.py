@@ -881,6 +881,30 @@ class GroupedStatistic(Statistic):
     def correct(self, result, p: float) -> Result:
         return self.inner.correct(result, p)
 
+    def correct_per_key(self, result, p_keys, key_axis: int = 0) -> Result:
+        """Per-key sampling correction: key ``g``'s slice corrected by its
+        OWN sampled fraction ``p_keys[g]`` instead of the whole-table p.
+
+        Under stratified sampling the keys are drawn at different rates
+        (shares ∝ requested allocation, not population frequency), so a
+        scalar ``correct(p)`` systematically mis-scales count-like inners
+        (Sum, Count) for every key whose stratum fraction differs from the
+        table fraction.  ``key_axis`` names the G axis of ``result`` — 0
+        for a finalized estimate ``(G, ...)``, 1 for bootstrap thetas
+        ``(B, G, ...)``.  A key with ``p_keys[g] == 0`` was never sampled;
+        its (all-zero) result is passed through uncorrected rather than
+        divided to NaN.
+        """
+        if len(p_keys) != self.num_groups:
+            raise ValueError(f"p_keys has {len(p_keys)} entries for "
+                             f"{self.num_groups} keys")
+        outs = []
+        for g in range(self.num_groups):
+            pg = float(p_keys[g])
+            outs.append(self.inner.correct(
+                _tree_take(result, g, key_axis), pg if pg > 0.0 else 1.0))
+        return _tree_stack(outs, key_axis)
+
     def accumulator_key(self):
         return None
 
@@ -941,6 +965,81 @@ class GroupedStatistic(Statistic):
         return fm_ops.fused_poisson_tiled(self, seed, values, B,
                                           n_valid=n_valid,
                                           valid_mask=valid_mask)
+
+
+class Window:
+    """A windowed view of a mergeable statistic over a live row stream.
+
+    Rows are partitioned into fixed-width *panes* of ``slide`` rows; pane
+    ``p`` covers global rows ``[p*slide, (p+1)*slide)``.  A window of
+    ``size`` rows is always a whole number of panes (``size % slide ==
+    0``), so a live session can keep ONE mergeable sub-state per pane in a
+    ring and answer any window by re-merging the ``size // slide`` newest
+    panes — eviction is dropping a pane and re-merging the survivors,
+    never subtraction (which no fused state supports and which would be
+    numerically unsound anyway) and never re-reading the log.  Device
+    memory is O(panes · state), independent of stream length.
+
+    The wrapped statistic must be ``mergeable`` (Quantile/Median qualify —
+    histogram counts add; KMeansStep sums/counts add; StatisticGroup /
+    GroupedStatistic inherit from their members).
+    """
+
+    def __init__(self, stat: Statistic, size: int, slide: int):
+        if not isinstance(stat, Statistic):
+            raise TypeError(f"{stat!r} is not a Statistic")
+        if not getattr(stat, "mergeable", False):
+            raise ValueError(
+                f"{type(stat).__name__} is not mergeable; windowed folding "
+                f"re-merges per-pane states and needs an associative merge")
+        size, slide = int(size), int(slide)
+        if slide < 1:
+            raise ValueError(f"slide must be >= 1, got {slide}")
+        if size < slide:
+            raise ValueError(f"size ({size}) must be >= slide ({slide})")
+        if size % slide != 0:
+            raise ValueError(f"size ({size}) must be a multiple of the "
+                             f"slide ({slide}) so a window is a whole "
+                             f"number of panes")
+        self.stat = stat
+        self.size = size
+        self.slide = slide
+
+    @property
+    def panes(self) -> int:
+        """Panes per window — the ring's steady-state occupancy bound."""
+        return self.size // self.slide
+
+    def pane_of(self, row: int) -> int:
+        return int(row) // self.slide
+
+    def pane_rows(self, pane: int) -> Tuple[int, int]:
+        return pane * self.slide, (pane + 1) * self.slide
+
+    def _static_key(self):
+        return (type(self).__name__, self.size, self.slide,
+                self.stat._static_key())
+
+    def __repr__(self):
+        return (f"{type(self).__name__}({self.stat!r}, size={self.size}, "
+                f"slide={self.slide})")
+
+
+class TumblingWindow(Window):
+    """Non-overlapping windows: one pane per window, reset every ``size``
+    rows.  ``TumblingWindow(stat, s)`` ≡ ``SlidingWindow(stat, s, s)``."""
+
+    def __init__(self, stat: Statistic, size: int):
+        super().__init__(stat, size, size)
+
+
+class SlidingWindow(Window):
+    """Overlapping windows of ``size`` rows advancing by ``slide`` rows;
+    the ring holds ``size // slide`` panes and a window report re-merges
+    them."""
+
+    def __init__(self, stat: Statistic, size: int, slide: int):
+        super().__init__(stat, size, slide)
 
 
 class MeanLoss(Mean):

@@ -15,6 +15,7 @@ from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import ssabe as ssabe_mod
 from repro.core.bootstrap import BootstrapResult, seed_from_key
@@ -97,6 +98,25 @@ class EarlSession:
         if self.checkpoint_every < 1:
             raise ValueError(
                 f"checkpoint_every must be >= 1, got {checkpoint_every}")
+
+    # ------------------------------------------------------------------ #
+    def _p_keys(self, n_have: int) -> Optional[np.ndarray]:
+        """Per-key sampled fractions when the sampler stratifies a keyed
+        statistic; None otherwise (scalar whole-table p applies).
+
+        A ``StratifiedSampler`` prefix is uniform WITHIN each key but
+        deliberately non-uniform ACROSS keys, so the whole-table p = n/N
+        describes no single key — every correction must use that key's own
+        ``stratum_counts(n) / stratum_sizes``."""
+        if getattr(self.stat, "num_groups", None) is None:
+            return None
+        counts = getattr(self.sampler, "stratum_counts", None)
+        sizes = getattr(self.sampler, "stratum_sizes", None)
+        if counts is None or sizes is None:
+            return None
+        have = np.asarray(counts(n_have), dtype=np.float64)
+        total = np.asarray(sizes, dtype=np.float64)
+        return have / np.maximum(total, 1.0)
 
     # ------------------------------------------------------------------ #
     def _full_job(self, t0: float, history) -> EarlyResult:
@@ -196,7 +216,7 @@ class EarlSession:
             # between the save and the return): re-derive the result from
             # the restored carry and re-check before extending further.
             p = n_have / N
-            res = poisson_delta_result(pd, p=p)
+            res = poisson_delta_result(pd, p=p, p_keys=self._p_keys(n_have))
             if res.cv <= self.sigma or n_have >= self.max_fraction * N:
                 return EarlyResult(
                     result=res.estimate, cv=res.cv,
@@ -216,7 +236,8 @@ class EarlSession:
             # the point estimate is delta-maintained in pd.est_state (each
             # extend folds Δs in, O(Δn)); recomputing stat(take(0, n_have))
             # here would re-read the whole prefix every round, O(n).
-            res: BootstrapResult = poisson_delta_result(pd, p=p)
+            res: BootstrapResult = poisson_delta_result(
+                pd, p=p, p_keys=self._p_keys(n_have))
             # for a StatisticGroup, res.cv is the WORST member's c_v
             # (GroupAccuracyReport), so the sigma gate below stops only
             # when ALL members meet the target; the per-member trace is

@@ -58,6 +58,7 @@ import hashlib
 import queue as queue_mod
 import threading
 import time
+import zlib
 from functools import partial
 from typing import Optional, Tuple
 
@@ -193,19 +194,44 @@ def _stage_batches(store, chunk: int, out_q, timings: dict, stop,
         timings["stage_s"] = stage_s
 
 
-def run_fingerprint(spec, params, *extra: int) -> str:
+def run_fingerprint(spec, params, *extra: int,
+                    content: Optional[int] = None) -> str:
     """Digest of everything a bitwise resume contract depends on: the
     statistic's structural spec AND its array parameters (a resumed run
     with different KMeans centroids is a different run) plus the caller's
     integer run knobs (B, chunk, base seed, extents, ...).  Shared by
-    ``bootstrap_streaming`` and ``EarlSession`` checkpoints."""
+    ``bootstrap_streaming``, ``EarlSession`` and ``LiveSession``
+    checkpoints.
+
+    ``content`` (optional) folds a data-content digest in — see
+    ``store_content_digest``: with it, a resume against a store whose
+    BYTES changed (same shape) fails the fingerprint check instead of
+    silently folding new data under an old carry."""
     h = hashlib.sha256()
     h.update(repr(spec._static_key()).encode())
     for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
         h.update(jax.tree_util.keystr(path).encode())
         h.update(np.ascontiguousarray(np.asarray(leaf)).tobytes())
     h.update(repr(tuple(int(e) for e in extra)).encode())
+    if content is not None:
+        h.update(b"content:" + repr(int(content)).encode())
     return h.hexdigest()
+
+
+def store_content_digest(store) -> int:
+    """Order-sensitive combination of every split's cached crc32 — the
+    opt-in CONTENT half of the resume fingerprint.
+
+    crc32 composes cheaply (one u32 per split, cached on the store after
+    first computation), so this costs one pass over the store the first
+    time and nothing after — which is exactly why it is opt-in
+    (``fingerprint_content=True``) rather than default: hashing a
+    bigger-than-memory store on every run would defeat streaming."""
+    h = 0
+    for s in range(len(store.splits)):
+        h = zlib.crc32(int(store.split_checksum(s)).to_bytes(4, "little"),
+                       h)
+    return h
 
 
 def bootstrap_streaming(store, stat: Statistic, B: int, key: jax.Array,
@@ -215,7 +241,8 @@ def bootstrap_streaming(store, stat: Statistic, B: int, key: jax.Array,
                         queue_depth: int = 2,
                         checkpoint=None, checkpoint_every: int = 1,
                         resume: bool = False,
-                        retry=None, policy=None
+                        retry=None, policy=None,
+                        fingerprint_content: bool = False
                         ) -> StreamingBootstrapResult:
     """Streamed bootstrap over ``store`` (module docstring for the how).
 
@@ -234,6 +261,14 @@ def bootstrap_streaming(store, stat: Statistic, B: int, key: jax.Array,
     (an ``ft.RetryPolicy``) or ``policy=`` (an ``ft.FailurePolicy``,
     which also decides raise-vs-degrade on budget exhaustion) route the
     prefetch reads through ``ft.ResilientStore``.
+
+    ``fingerprint_content=True`` additionally binds the checkpoint
+    fingerprint to the store's BYTES (``store_content_digest`` over the
+    cached per-split crc32s): a resume against a same-shape store whose
+    contents changed refuses loudly instead of folding new data under an
+    old carry.  Off by default — it costs one full read of the store the
+    first time (checksums are cached after that), and both the save and
+    the resume must opt in for the fingerprints to match.
     """
     if not isinstance(stat, Statistic):
         raise TypeError("stat must be a reduce_api.Statistic")
@@ -285,7 +320,9 @@ def bootstrap_streaming(store, stat: Statistic, B: int, key: jax.Array,
     spec, params = split_params(stat)
     base_seed = seed_from_key(key)
     seed_int = int(base_seed)
-    fp = run_fingerprint(spec, params, B, chunk, seed_int, store.N, dim)
+    fp = run_fingerprint(spec, params, B, chunk, seed_int, store.N, dim,
+                         content=(store_content_digest(store)
+                                  if fingerprint_content else None))
 
     # Fresh, UNALIASED device buffers for the donated carry: jnp's constant
     # cache can hand several identical-zeros leaves the same buffer, which

@@ -83,6 +83,31 @@ class ShardedStore:
                   for i in range(0, len(data), split_size)]
         return ShardedStore(splits)
 
+    # -- append (live-ingest path) -------------------------------------
+    def append_split(self, data: np.ndarray) -> int:
+        """Seal ``data`` as a new split at the end of the store and return
+        its split index.
+
+        This is the segmented-writer primitive the live ``IngestLog``
+        builds on: ingest batches become immutable splits one at a time,
+        so every existing read path (``iter_batches``, ``read_split``,
+        checksums) works over a growing store without rebuilding it.
+        Cached checksums of earlier splits stay valid because splits are
+        immutable once sealed."""
+        data = np.asarray(data)
+        if len(data) == 0:
+            raise ValueError("append_split needs a non-empty batch")
+        if self.splits and data.shape[1:] != self.splits[0].shape[1:]:
+            raise ValueError(
+                f"append_split shape {data.shape[1:]} does not match the "
+                f"store's row shape {self.splits[0].shape[1:]}")
+        i = len(self.splits)
+        self.splits.append(data)
+        self.split_sizes.append(len(data))
+        self.offsets = np.append(self.offsets, self.N + len(data))
+        self.N = int(self.offsets[-1])
+        return i
+
     # -- counted reads ---------------------------------------------------
     def read_split(self, i: int) -> np.ndarray:
         self.stats.add(splits=1, rows=self.split_sizes[i])

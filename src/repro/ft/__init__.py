@@ -16,11 +16,12 @@ from repro.ft.straggler import DeadlineReducer, StragglerReport
 from repro.ft.inject import (Fault, FaultCounters, FaultExhaustedError,
                              FaultyStore, ResilientStore, RetryPolicy)
 from repro.ft.policy import (CONTINUE, RESTART, ElasticReport,
-                             FailurePolicy, ShardEvents, elastic_estimate)
+                             FailurePolicy, LagPolicy, ShardEvents,
+                             elastic_estimate)
 
 __all__ = ["ShardLossReport", "estimate_with_failures", "failure_mask",
            "elastic_restore", "mesh_for_devices", "DeadlineReducer",
            "StragglerReport", "Fault", "FaultCounters",
            "FaultExhaustedError", "FaultyStore", "ResilientStore",
            "RetryPolicy", "CONTINUE", "RESTART", "ElasticReport",
-           "FailurePolicy", "ShardEvents", "elastic_estimate"]
+           "FailurePolicy", "LagPolicy", "ShardEvents", "elastic_estimate"]

@@ -91,6 +91,8 @@ class FaultCounters:
     retries: int = 0
     backoff_s: float = 0.0
     splits_lost: int = 0
+    duplicates: int = 0
+    reordered: int = 0
 
     @property
     def total_faults(self) -> int:
@@ -184,6 +186,59 @@ class FaultyStore(ShardedStore):
         flat = bad.reshape(-1)
         flat[::max(1, flat.size // 7)] = flat[::max(1, flat.size // 7)] + 1.0
         return bad
+
+    # -- delivery-order faults (live-ingest path) ----------------------
+    def delivery_plan(self, seed: int, p_duplicate: float = 0.0,
+                      max_reorder: int = 0) -> List[int]:
+        """A seeded, perturbed delivery ORDER over this store's splits.
+
+        Read faults above corrupt *what* a split returns; a live ingest
+        channel additionally corrupts *when and how often* a batch shows
+        up.  The plan is a list of split indices in delivery order where
+
+        * each split may be displaced backward by at most ``max_reorder``
+          positions (stable sort on ``i + U{0..max_reorder}``, so the
+          displacement bound is exact — a watermark with lateness bound
+          ``max_reorder`` never has to skip a batch that still shows up),
+        * each split is independently re-delivered with probability
+          ``p_duplicate`` a few slots after its first delivery.
+
+        Every split appears at least once — these are delivery faults, not
+        data loss.  The same ``seed`` always yields the same plan;
+        ``injected.duplicates`` / ``injected.reordered`` record what the
+        plan contains so ingest tests can assert exactly-once folding
+        against known injection counts.
+        """
+        if not 0.0 <= p_duplicate <= 1.0:
+            raise ValueError(f"p_duplicate must be in [0, 1], "
+                             f"got {p_duplicate}")
+        if max_reorder < 0:
+            raise ValueError(f"max_reorder must be >= 0, got {max_reorder}")
+        rng = np.random.default_rng(seed)
+        n = len(self.splits)
+        keys = np.arange(n) + rng.integers(0, max_reorder + 1, size=n)
+        order = list(np.argsort(keys, kind="stable"))
+        self.injected.reordered += int(
+            sum(1 for pos, s in enumerate(order) if s != pos))
+        echoes = []                      # (insert_after_pos, split)
+        for pos, s in enumerate(order):
+            if float(rng.random()) < p_duplicate:
+                # echo the batch a couple of slots after its delivery
+                echoes.append((pos + 1 + int(rng.integers(0, 3)), int(s)))
+                self.injected.duplicates += 1
+        plan = [int(s) for s in order]
+        for at, s in sorted(echoes, reverse=True):
+            plan.insert(min(at, len(plan)), s)
+        return plan
+
+    def iter_delivery(self, seed: int, p_duplicate: float = 0.0,
+                      max_reorder: int = 0):
+        """Yield ``(split_index, data)`` in the perturbed delivery order of
+        ``delivery_plan`` — the faulty channel a live session drinks from.
+        Reads go through ``read_split`` so per-split read faults compose
+        with delivery faults."""
+        for s in self.delivery_plan(seed, p_duplicate, max_reorder):
+            yield s, self.read_split(s)
 
 
 class ResilientStore(ShardedStore):

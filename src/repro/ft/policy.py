@@ -84,6 +84,52 @@ class FailurePolicy:
         return CONTINUE if meets_bound else RESTART
 
 
+@dataclasses.dataclass(frozen=True)
+class LagPolicy:
+    """How a standing live session responds to ingest pathology.
+
+    The live analogue of ``FailurePolicy``: instead of dead shards the
+    hazards are a *gap* in the sequence (a batch that never shows up), a
+    *late* batch (arrives after the watermark already passed it), and a
+    *backlog* (arrivals outpace folding).  The responses mirror EARL's
+    §3.4 stance — never wait unboundedly, degrade honestly:
+
+    * ``max_lag_batches`` bounds the reorder buffer.  Once the newest
+      delivered sequence number runs this far ahead of the fold point, the
+      missing batches are declared lost, their row extent is masked out of
+      ``p_eff``, and the watermark advances (the CI widens instead of the
+      session stalling).
+    * ``late`` decides what to do with a batch that arrives below the
+      watermark after being declared lost: ``"fold"`` folds it into its
+      pane if that pane is still live in the ring, ``"drop"`` counts and
+      discards it.
+    * ``shed_backlog``/``p_shed`` is the BlinkDB move: when the observed
+      backlog at fold time exceeds ``shed_backlog`` batches, the session
+      Poisson-subsamples each backlog batch (row survival probability
+      ``p_shed``, seeded by ``shed_seed`` + sequence number) instead of
+      falling further behind, and reports the widened CI via
+      ``correct(p_eff)``.  ``None`` disables shedding.
+    """
+    max_lag_batches: int = 16
+    late: str = "drop"               # "drop" | "fold"
+    shed_backlog: Optional[int] = None
+    p_shed: float = 0.5
+    shed_seed: int = 0x5EED
+
+    def __post_init__(self):
+        if self.max_lag_batches < 1:
+            raise ValueError(f"max_lag_batches must be >= 1, "
+                             f"got {self.max_lag_batches}")
+        if self.late not in ("drop", "fold"):
+            raise ValueError(f"late must be 'drop' or 'fold', "
+                             f"got {self.late!r}")
+        if self.shed_backlog is not None and self.shed_backlog < 0:
+            raise ValueError(f"shed_backlog must be >= 0, "
+                             f"got {self.shed_backlog}")
+        if not 0.0 < self.p_shed <= 1.0:
+            raise ValueError(f"p_shed must be in (0, 1], got {self.p_shed}")
+
+
 @dataclasses.dataclass
 class ElasticReport:
     """Outcome of one degraded reduce."""

@@ -1,0 +1,127 @@
+"""IngestLog — append-only segmented batch log with backpressure.
+
+A thin ingest facade over ``data/store.ShardedStore``: every appended
+batch is sealed as one immutable split (``append_split``) and stamped
+with a monotone *sequence number* (= its split index), so
+
+* the log IS a ShardedStore — every existing read path (``iter_batches``,
+  checksums, ``bootstrap_streaming``) works over the growing log;
+* a batch's global row offset is ``store.offsets[seq]``, which is what
+  lets a standing session place a (possibly late or re-delivered) batch
+  into the correct window pane and key its Poisson weight stream by
+  position (``offset_seed(base, seq)`` — the bitwise-resume contract);
+* crash recovery is replay: a session checkpoint records its fold cursor
+  (``next_seq``) and resumes by re-reading the log from there.
+
+Backpressure is explicit: with ``capacity=k``, ``append`` blocks while
+the slowest *registered* consumer is more than ``k`` batches behind, and
+raises ``BackpressureError`` on timeout — the producer always learns it
+is outrunning the analytics instead of growing an unbounded backlog.
+(Consumers that want shedding instead of blocking set
+``LagPolicy.shed_backlog`` on their session; the two compose.)
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.data.store import ShardedStore
+
+
+class BackpressureError(RuntimeError):
+    """``append`` timed out waiting for consumers to drain the backlog."""
+
+
+@dataclasses.dataclass(frozen=True)
+class LogBatch:
+    """One delivered batch: its sequence number, the global row offset of
+    its first row, and the rows themselves (2-D float32)."""
+    seq: int
+    row0: int
+    data: np.ndarray
+
+    @property
+    def rows(self) -> int:
+        return len(self.data)
+
+    @property
+    def row_end(self) -> int:
+        return self.row0 + len(self.data)
+
+
+class IngestLog:
+    """Append-only batch log (see module docstring)."""
+
+    def __init__(self, capacity: Optional[int] = None):
+        if capacity is not None and capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self.store = ShardedStore([])
+        self._cv = threading.Condition()
+        self._acked: Dict[str, int] = {}     # consumer -> last folded seq
+
+    # -- producer side --------------------------------------------------
+    @property
+    def next_seq(self) -> int:
+        return len(self.store.splits)
+
+    @property
+    def total_rows(self) -> int:
+        return self.store.N
+
+    def _backlog(self) -> int:
+        """Batches the slowest registered consumer has not folded yet."""
+        if not self._acked:
+            return 0
+        return self.next_seq - 1 - min(self._acked.values())
+
+    def append(self, data: np.ndarray,
+               timeout: Optional[float] = None) -> int:
+        """Seal ``data`` as the next batch; returns its sequence number.
+
+        Blocks while the backlog is at ``capacity`` (backpressure);
+        ``timeout`` seconds of no progress raises ``BackpressureError``.
+        With no registered consumers the log cannot measure lag and
+        appends are never gated.
+        """
+        data = np.asarray(data, np.float32)
+        if data.ndim == 1:
+            data = data[:, None]
+        with self._cv:
+            if self.capacity is not None and self._acked:
+                ok = self._cv.wait_for(
+                    lambda: self._backlog() < self.capacity,
+                    timeout=timeout)
+                if not ok:
+                    raise BackpressureError(
+                        f"backlog {self._backlog()} >= capacity "
+                        f"{self.capacity} for {timeout}s — consumers are "
+                        "not keeping up")
+            return self.store.append_split(data)
+
+    # -- consumer side --------------------------------------------------
+    def register(self, name: str) -> None:
+        """Declare a consumer; its ack cursor now gates ``capacity``."""
+        with self._cv:
+            self._acked.setdefault(name, -1)
+
+    def ack(self, name: str, seq: int) -> None:
+        """Consumer ``name`` has durably folded everything through ``seq``
+        — releases backpressured producers."""
+        with self._cv:
+            if seq > self._acked.get(name, -1):
+                self._acked[name] = int(seq)
+                self._cv.notify_all()
+
+    def batch(self, seq: int) -> LogBatch:
+        return LogBatch(seq=int(seq), row0=int(self.store.offsets[seq]),
+                        data=self.store.read_split(seq))
+
+    def batches_from(self, seq: int) -> List[LogBatch]:
+        """All sealed batches with sequence number >= ``seq`` (snapshot)."""
+        with self._cv:
+            n = self.next_seq
+        return [self.batch(s) for s in range(max(seq, 0), n)]

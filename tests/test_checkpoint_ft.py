@@ -1,6 +1,7 @@
 """Checkpointing + fault tolerance: roundtrips, keep-k, shard-loss
 recovery with error bounds, straggler deadline, elastic mesh."""
 import os
+import subprocess
 
 import jax
 import jax.numpy as jnp
@@ -127,6 +128,96 @@ class TestCheckpointHygiene:
         assert mgr.meta(step=1) == {"cursor": {"next_chunk": 3}}
         with pytest.raises(FileNotFoundError):
             CheckpointManager(str(tmp_path / "empty")).meta()
+
+
+class TestConcurrentManagers:
+    """Two standing sessions may share one checkpoint directory — scoping
+    by run fingerprint (``for_run``) and pid-aware orphan GC must keep
+    them from clobbering or garbage-collecting each other."""
+
+    def _state(self, v):
+        return {"w": jnp.full(4, float(v))}
+
+    def test_for_run_scopes_by_fingerprint(self, tmp_path):
+        a = CheckpointManager.for_run(str(tmp_path), "a" * 64,
+                                      async_save=False)
+        b = CheckpointManager.for_run(str(tmp_path), "b" * 64,
+                                      async_save=False)
+        assert a.root != b.root
+        assert a.root.startswith(str(tmp_path))
+        a.save(1, self._state(1.0))
+        b.save(1, self._state(2.0))
+        ra, _ = a.restore(jax.eval_shape(lambda: self._state(0)))
+        rb, _ = b.restore(jax.eval_shape(lambda: self._state(0)))
+        assert float(np.asarray(ra["w"])[0]) == 1.0
+        assert float(np.asarray(rb["w"])[0]) == 2.0
+
+    def test_same_fingerprint_shares_a_root(self, tmp_path):
+        a = CheckpointManager.for_run(str(tmp_path), "f" * 64,
+                                      async_save=False)
+        b = CheckpointManager.for_run(str(tmp_path), "f" * 64,
+                                      async_save=False)
+        assert a.root == b.root          # same run resumes the same dir
+
+    def test_peer_keep_k_gc_does_not_cross_runs(self, tmp_path):
+        """Manager A cycling through keep_last=2 steps must never delete
+        manager B's (older) steps in the shared parent directory."""
+        a = CheckpointManager.for_run(str(tmp_path), "a" * 64,
+                                      keep_last=2, async_save=False)
+        b = CheckpointManager.for_run(str(tmp_path), "b" * 64,
+                                      keep_last=2, async_save=False)
+        b.save(1, self._state(9.0))
+        for s in range(1, 6):
+            a.save(s, self._state(s))
+        assert a.steps() == [4, 5]
+        assert b.steps() == [1], "peer GC crossed run boundaries"
+
+    def test_orphan_gc_spares_live_peer_tmp_dir(self, tmp_path):
+        """A ``.tmp_ckpt_*.<pid>`` staging dir whose pid is ALIVE belongs
+        to a peer mid-save — a fresh manager must not sweep it.  A dead
+        pid or the old unsuffixed format is a crash leftover: reaped."""
+        live = tmp_path / f".tmp_ckpt_00000003.{os.getpid()}"
+        live.mkdir()
+        proc = subprocess.Popen(["sleep", "0"])
+        proc.wait()                      # this pid is now definitely dead
+        dead = tmp_path / f".tmp_ckpt_00000004.{proc.pid}"
+        dead.mkdir()
+        old = tmp_path / ".tmp_ckpt_00000005"
+        old.mkdir()
+        CheckpointManager(str(tmp_path), async_save=False)
+        assert live.exists(), "swept a live peer's in-flight save"
+        assert not dead.exists(), "kept a dead process's leftover"
+        assert not old.exists(), "kept an unattributable leftover"
+        live.rmdir()
+
+    def test_two_live_sessions_share_a_root(self, tmp_path):
+        """End to end: two LiveSessions with different statistics pointed
+        at the SAME checkpoint path both checkpoint and both resume."""
+        from repro.core import Mean, Var
+        from repro.live import IngestLog, LiveSession
+
+        key = jax.random.PRNGKey(21)
+        rng = np.random.default_rng(0)
+        log = IngestLog()
+        for _ in range(4):
+            log.append(rng.normal(size=(32, 2)).astype(np.float32))
+        root = str(tmp_path / "shared")
+        s1 = LiveSession(log, Mean(), B=8, key=key, checkpoint=root,
+                         name="mean")
+        s2 = LiveSession(log, Var(), B=8, key=key, checkpoint=root,
+                         name="var")
+        s1.poll()
+        s2.poll()
+        assert s1.checkpoint.root != s2.checkpoint.root
+        r1 = LiveSession(log, Mean(), B=8, key=key, checkpoint=root,
+                         resume=True, name="mean")
+        r2 = LiveSession(log, Var(), B=8, key=key, checkpoint=root,
+                         resume=True, name="var")
+        assert r1.counters.folded == r2.counters.folded == 4
+        for s, r in ((s1, r1), (s2, r2)):
+            a, b = s.report(), r.report()
+            np.testing.assert_array_equal(np.asarray(a.estimate),
+                                          np.asarray(b.estimate))
 
 
 class TestShardLossRecovery:

@@ -104,6 +104,70 @@ class TestFaultyStore:
         assert FaultyStore.seeded(store, seed=5).faults == ()
 
 
+class TestDeliveryPlan:
+    """Seeded duplicate / out-of-order delivery (feeds live-ingest tests:
+    the consumer must dedup and reorder back to the clean bits)."""
+
+    def test_identity_without_faults(self):
+        fs = FaultyStore(_store())
+        assert fs.delivery_plan(seed=1) == list(range(len(fs.splits)))
+        assert fs.injected.duplicates == 0
+        assert fs.injected.reordered == 0
+
+    def test_seeded_plan_is_reproducible(self):
+        a = FaultyStore(_store()).delivery_plan(seed=4, p_duplicate=0.4,
+                                                max_reorder=3)
+        b = FaultyStore(_store()).delivery_plan(seed=4, p_duplicate=0.4,
+                                                max_reorder=3)
+        assert a == b
+        c = FaultyStore(_store()).delivery_plan(seed=5, p_duplicate=0.4,
+                                                max_reorder=3)
+        assert a != c
+
+    def test_every_split_delivered_at_least_once(self):
+        fs = FaultyStore(_store())
+        plan = fs.delivery_plan(seed=2, p_duplicate=0.5, max_reorder=4)
+        assert set(plan) == set(range(len(fs.splits)))
+        assert len(plan) == len(fs.splits) + fs.injected.duplicates
+        assert fs.injected.duplicates > 0
+
+    def test_reorder_displacement_is_bounded(self):
+        """Without duplication, no split lands more than ``max_reorder``
+        positions from its in-order slot."""
+        for mr in (1, 2, 5):
+            fs = FaultyStore(_store())
+            plan = fs.delivery_plan(seed=3, max_reorder=mr)
+            assert sorted(plan) == list(range(len(fs.splits)))
+            for pos, s in enumerate(plan):
+                assert abs(pos - s) <= mr, (mr, pos, s)
+            assert fs.injected.reordered == sum(
+                1 for pos, s in enumerate(plan) if pos != s)
+
+    def test_duplicate_echo_arrives_after_original(self):
+        fs = FaultyStore(_store())
+        plan = fs.delivery_plan(seed=6, p_duplicate=0.6)
+        for s in set(plan):
+            first = plan.index(s)
+            assert all(p > first for p in range(len(plan))
+                       if plan[p] == s and p != first)
+
+    def test_iter_delivery_yields_split_rows(self):
+        store = _store()
+        fs = FaultyStore(store)
+        got = list(fs.iter_delivery(seed=7, p_duplicate=0.3, max_reorder=2))
+        assert [s for s, _ in got] == fs.delivery_plan(
+            seed=7, p_duplicate=0.3, max_reorder=2)
+        for s, rows in got:
+            np.testing.assert_array_equal(rows, store.splits[s])
+
+    def test_validation(self):
+        fs = FaultyStore(_store())
+        with pytest.raises(ValueError, match="p_duplicate"):
+            fs.delivery_plan(seed=0, p_duplicate=1.5)
+        with pytest.raises(ValueError, match="max_reorder"):
+            fs.delivery_plan(seed=0, max_reorder=-1)
+
+
 # ----------------------------------------------------------------------------
 # the resilient read path
 # ----------------------------------------------------------------------------

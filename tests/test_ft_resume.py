@@ -209,6 +209,72 @@ class TestResumeValidation:
                 resume=True,
                 checkpoint=CheckpointManager(root, async_save=False))
 
+    def test_fingerprint_content_rejects_changed_bytes(self, tmp_path):
+        """By default the fingerprint binds the run SHAPE (stat, B, key,
+        chunk, N, dim) but not the bytes — ``fingerprint_content=True``
+        folds the store's split checksums in, so resuming onto a
+        same-shape store whose data changed refuses loudly instead of
+        silently mixing two datasets."""
+        rng = np.random.default_rng(0)
+        data = rng.normal(size=(1000, 2)).astype(np.float32)
+        store = ShardedStore.from_array(data, 137, interleave=False)
+        root = str(tmp_path / "ckpt")
+        with pytest.raises(_Kill):
+            bootstrap_streaming(store, Mean(), B=8, key=KEY, chunk=CHUNK,
+                                fingerprint_content=True,
+                                checkpoint=_DyingManager(root, 2))
+        changed = np.array(data)
+        changed[500, 0] += 1.0                      # one element, same shape
+        bad = ShardedStore.from_array(changed, 137, interleave=False)
+        with pytest.raises(ValueError, match="fingerprint mismatch"):
+            bootstrap_streaming(bad, Mean(), B=8, key=KEY, chunk=CHUNK,
+                                resume=True, fingerprint_content=True,
+                                checkpoint=CheckpointManager(
+                                    root, async_save=False))
+        # the SAME bytes resume cleanly, and bitwise so
+        base = bootstrap_streaming(store, Mean(), B=8, key=KEY, chunk=CHUNK)
+        same = ShardedStore.from_array(data, 137, interleave=False)
+        r = bootstrap_streaming(same, Mean(), B=8, key=KEY, chunk=CHUNK,
+                                resume=True, fingerprint_content=True,
+                                checkpoint=CheckpointManager(
+                                    root, async_save=False))
+        _tree_bitwise(base.thetas, r.thetas)
+
+    def test_content_digest_sensitivity(self):
+        """store_content_digest: stable across calls, identical for
+        identical bytes, different for a one-element change."""
+        from repro.core.streaming import store_content_digest
+        rng = np.random.default_rng(1)
+        data = rng.normal(size=(500, 2)).astype(np.float32)
+        a = ShardedStore.from_array(data, 64, interleave=False)
+        assert store_content_digest(a) == store_content_digest(a)
+        b = ShardedStore.from_array(np.array(data), 64, interleave=False)
+        assert store_content_digest(a) == store_content_digest(b)
+        mut = np.array(data)
+        mut[0, 0] = np.float32(mut[0, 0]) + 1.0
+        c = ShardedStore.from_array(mut, 64, interleave=False)
+        assert store_content_digest(a) != store_content_digest(c)
+
+    def test_default_fingerprint_binds_shape_not_content(self, tmp_path):
+        """The documented default: without ``fingerprint_content`` a
+        same-shape different-bytes store is accepted on resume (cheap
+        fingerprints; callers opt into the checksum pass)."""
+        rng = np.random.default_rng(2)
+        data = rng.normal(size=(1000, 2)).astype(np.float32)
+        store = ShardedStore.from_array(data, 137, interleave=False)
+        root = str(tmp_path / "ckpt")
+        with pytest.raises(_Kill):
+            bootstrap_streaming(store, Mean(), B=8, key=KEY, chunk=CHUNK,
+                                checkpoint=_DyingManager(root, 2))
+        changed = np.array(data)
+        changed[0, 0] += 1.0
+        bad = ShardedStore.from_array(changed, 137, interleave=False)
+        r = bootstrap_streaming(bad, Mean(), B=8, key=KEY, chunk=CHUNK,
+                                resume=True,
+                                checkpoint=CheckpointManager(
+                                    root, async_save=False))
+        assert r.stream.resumed_from_chunk == 2
+
     def test_foreign_checkpoint_rejected(self, tmp_path):
         """A checkpoint without a streaming cursor (e.g. an EarlSession or
         training snapshot) must be refused, not silently misread."""

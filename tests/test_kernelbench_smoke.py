@@ -27,7 +27,8 @@ def test_kernelbench_smoke_runs_and_writes_nothing():
     for p in (kernelbench._BENCH_JSON, kernelbench._BENCH_KMEANS_JSON,
               kernelbench._BENCH_QUANTILE_JSON,
               kernelbench._BENCH_MULTI_JSON, kernelbench._BENCH_STREAM_JSON,
-              kernelbench._BENCH_GROUPED_JSON, kernelbench._BENCH_FT_JSON):
+              kernelbench._BENCH_GROUPED_JSON, kernelbench._BENCH_FT_JSON,
+              kernelbench._BENCH_LIVE_JSON):
         stamps[p] = p.stat().st_mtime_ns if p.exists() else None
 
     kernelbench.run(smoke=True)
@@ -85,4 +86,17 @@ def test_check_regression_gate(tmp_path):
     d["checkpoint_overhead_ratio"] = 1.02
     d["resumed_bitwise_equal"] = False
     (cur / "BENCH_ft.json").write_text(json.dumps(d))
+    assert check_regression.check(base, cur, 0.5)
+
+    # ISSUE-9 live-ingest gates: throughput abs floor + shed/resume
+    # bitwise invariants
+    shutil.copy(base / "BENCH_ft.json", cur / "BENCH_ft.json")
+    d = json.loads((cur / "BENCH_live.json").read_text())
+    d["batches_per_sec"] = 5.0                  # below the 20.0 abs floor
+    (cur / "BENCH_live.json").write_text(json.dumps(d))
+    assert check_regression.check(base, cur, 0.5)
+
+    d["batches_per_sec"] = 500.0
+    d["shed_bitwise_equal_to_oracle"] = False
+    (cur / "BENCH_live.json").write_text(json.dumps(d))
     assert check_regression.check(base, cur, 0.5)

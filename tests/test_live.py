@@ -1,0 +1,485 @@
+"""Robustness contract for live ingest (live/log.py + live/session.py).
+
+Everything the module docstring of ``live/session.py`` promises is
+asserted here, bitwise where the promise is bitwise:
+
+* kill-and-resume of a ``LiveSession`` at EVERY batch boundary equals
+  the uninterrupted run — for every mergeable statistic family, with
+  cumulative, tumbling and sliding windows;
+* duplicated / reordered delivery folds each batch exactly once and
+  lands on the same bits as clean in-order delivery;
+* the pane ring never exceeds its memory bound, under any delivery;
+* sample shedding is bitwise equal to handing the shed mask to the
+  kernels as a dedicated ``valid_mask`` (the oracle), and the report's
+  ``p_eff`` is exactly the surviving fraction;
+* the watermark converts missing batches into invalid rows (CI widens,
+  never a silent hole), and late arrivals obey ``LagPolicy.late``;
+* ``IngestLog`` backpressure blocks/raises when consumers fall behind.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.bootstrap import (fused_resample_states, offset_seed,
+                                  seed_from_key)
+from repro.core.reduce_api import (GroupedStatistic, Mean, Quantile,
+                                   SlidingWindow, Statistic, StatisticGroup,
+                                   TumblingWindow, Var, Window)
+from repro.core.streaming import bootstrap_streaming
+from repro.data.store import ShardedStore
+from repro.ft.inject import FaultyStore
+from repro.ft.policy import LagPolicy
+from repro.live import (BackpressureError, IngestLog, LiveSession, LogBatch)
+
+KEY = jax.random.PRNGKey(13)
+B = 8
+ROWS = 32                      # rows per appended batch
+N_BATCHES = 6
+
+
+class _Kill(Exception):
+    """The simulated mid-stream death."""
+
+
+class _DyingManager(CheckpointManager):
+    """Commits its first ``die_after`` saves, then kills the run — with
+    ``checkpoint_every=1`` that is SIGKILL at fold boundary ``die_after``."""
+
+    def __init__(self, root, die_after, **kw):
+        kw.setdefault("async_save", False)
+        super().__init__(root, **kw)
+        self.die_after = die_after
+        self.saves = 0
+
+    def save(self, *a, **kw):
+        super().save(*a, **kw)
+        self.saves += 1
+        if self.saves >= self.die_after:
+            raise _Kill(f"simulated crash after save #{self.saves}")
+
+
+def _tree_bitwise(a, b):
+    ok = jax.tree_util.tree_map(
+        lambda u, v: bool(np.array_equal(np.asarray(u), np.asarray(v))),
+        a, b)
+    assert all(jax.tree_util.tree_leaves(ok)), ok
+
+
+STATS = [
+    Mean(), Var(),
+    Quantile(0.5, lo=-4.0, hi=4.0, nbins=64),
+    StatisticGroup([Mean(), Var()]),
+    GroupedStatistic(Mean(), 4),
+]
+_IDS = [("Grouped" if getattr(s, "num_groups", None) is not None
+         else type(s).__name__) for s in STATS]
+
+
+def _batch_data(stat, i, rows=ROWS):
+    rng = np.random.default_rng((17, i))
+    if getattr(stat, "num_groups", None) is not None:
+        x = rng.normal(size=(rows, 1)).astype(np.float32)
+        k = rng.integers(0, stat.num_groups,
+                         size=(rows, 1)).astype(np.float32)
+        return np.concatenate([x, k], axis=1)
+    return rng.normal(size=(rows, 2)).astype(np.float32)
+
+
+def _fill_log(stat, n=N_BATCHES):
+    log = IngestLog()
+    for i in range(n):
+        log.append(_batch_data(stat, i))
+    return log
+
+
+# windows sized against ROWS=32 batches: tumbling pane = 2 batches,
+# sliding pane = 1 batch with a 4-pane ring
+def _wrap(stat, wkind):
+    if wkind == "cumulative":
+        return stat
+    if wkind == "tumbling":
+        return TumblingWindow(stat, 64)
+    return SlidingWindow(stat, 128, 32)
+
+
+_CLEAN = {}
+
+
+def _clean_report(stat_i, wkind):
+    """Uninterrupted reference run, cached across the kill parametrize."""
+    k = (stat_i, wkind)
+    if k not in _CLEAN:
+        stat = STATS[stat_i]
+        s = LiveSession(_fill_log(stat), _wrap(stat, wkind), B=B, key=KEY)
+        s.poll()
+        _CLEAN[k] = s.report()
+    return _CLEAN[k]
+
+
+class TestKillResumeBitwise:
+    """Acceptance gate: kill at every batch boundary, resume, compare
+    bitwise — thetas, estimate, and the accounting the CI rides on."""
+
+    @pytest.mark.parametrize("die_after", range(1, N_BATCHES + 1))
+    @pytest.mark.parametrize("wkind", ["cumulative", "tumbling", "sliding"])
+    @pytest.mark.parametrize("stat_i", range(len(STATS)), ids=_IDS)
+    def test_every_boundary(self, stat_i, wkind, die_after, tmp_path):
+        stat = STATS[stat_i]
+        base = _clean_report(stat_i, wkind)
+
+        log = _fill_log(stat)
+        root = str(tmp_path / "ckpt")
+        dying = LiveSession(log, _wrap(stat, wkind), B=B, key=KEY,
+                            checkpoint=_DyingManager(root, die_after),
+                            checkpoint_every=1)
+        with pytest.raises(_Kill):
+            dying.poll()
+
+        resumed = LiveSession(
+            log, _wrap(stat, wkind), B=B, key=KEY, resume=True,
+            checkpoint=CheckpointManager(root, async_save=False))
+        assert resumed.counters.folded == die_after
+        resumed.poll()
+        rep = resumed.report()
+        assert resumed.counters.folded == N_BATCHES     # exactly once
+        _tree_bitwise(base.thetas, rep.thetas)
+        _tree_bitwise(base.estimate, rep.estimate)
+        assert (rep.rows, rep.valid_rows, rep.p_eff) == \
+            (base.rows, base.valid_rows, base.p_eff)
+        assert (rep.watermark_seq, rep.watermark_row, rep.window_start) == \
+            (base.watermark_seq, base.watermark_row, base.window_start)
+
+    def test_checkpointing_is_an_observer(self, tmp_path):
+        """An uninterrupted checkpointed run returns the same bits as a
+        plain run (string checkpoint= exercises the for_run scoping)."""
+        base = _clean_report(0, "sliding")
+        log = _fill_log(STATS[0])
+        s = LiveSession(log, _wrap(STATS[0], "sliding"), B=B, key=KEY,
+                        checkpoint=str(tmp_path / "ckpt"),
+                        checkpoint_every=2)
+        s.poll()
+        rep = s.report()
+        _tree_bitwise(base.thetas, rep.thetas)
+        _tree_bitwise(base.estimate, rep.estimate)
+
+
+class TestResumeValidation:
+    def test_resume_needs_checkpoint(self):
+        with pytest.raises(ValueError, match="resume"):
+            LiveSession(IngestLog(), Mean(), B=B, key=KEY, resume=True)
+
+    def test_fingerprint_rejects_different_window(self, tmp_path):
+        log = _fill_log(Mean(), n=2)
+        root = str(tmp_path / "ckpt")
+        s = LiveSession(log, SlidingWindow(Mean(), 128, 32), B=B, key=KEY,
+                        checkpoint=CheckpointManager(root, async_save=False))
+        s.poll()
+        with pytest.raises(ValueError, match="fingerprint mismatch"):
+            LiveSession(log, TumblingWindow(Mean(), 128), B=B, key=KEY,
+                        resume=True,
+                        checkpoint=CheckpointManager(root, async_save=False))
+
+    def test_fingerprint_rejects_different_key(self, tmp_path):
+        log = _fill_log(Mean(), n=2)
+        root = str(tmp_path / "ckpt")
+        s = LiveSession(log, Mean(), B=B, key=KEY,
+                        checkpoint=CheckpointManager(root, async_save=False))
+        s.poll()
+        with pytest.raises(ValueError, match="fingerprint mismatch"):
+            LiveSession(log, Mean(), B=B, key=jax.random.PRNGKey(99),
+                        resume=True,
+                        checkpoint=CheckpointManager(root, async_save=False))
+
+    def test_foreign_checkpoint_rejected(self, tmp_path):
+        root = str(tmp_path / "ckpt")
+        mgr = CheckpointManager(root, async_save=False)
+        mgr.save(0, {"weights": jnp.zeros(3)}, extra={"note": "training"})
+        with pytest.raises(ValueError, match="cursor"):
+            LiveSession(IngestLog(), Mean(), B=B, key=KEY, resume=True,
+                        checkpoint=mgr)
+
+    def test_constructor_validation(self):
+        with pytest.raises(TypeError, match="Statistic"):
+            LiveSession(IngestLog(), object(), B=B, key=KEY)
+        with pytest.raises(ValueError, match="checkpoint_every"):
+            LiveSession(IngestLog(), Mean(), B=B, key=KEY,
+                        checkpoint_every=0)
+        with pytest.raises(ValueError, match="poll"):
+            LiveSession(None, Mean(), B=B, key=KEY).poll()
+
+
+class TestFaultedDelivery:
+    """Duplicated + reordered delivery (ft.FaultyStore's seeded plan)
+    must fold exactly once per batch and land on the clean run's bits."""
+
+    def _store(self, n_splits=10):
+        rng = np.random.default_rng(5)
+        data = rng.normal(size=(n_splits * ROWS, 2)).astype(np.float32)
+        return ShardedStore.from_array(data, ROWS, interleave=False)
+
+    def _run_plan(self, inner, plan_iter, **session_kw):
+        s = LiveSession(None, SlidingWindow(Var(), 128, 32), B=B, key=KEY,
+                        **session_kw)
+        for sq, data in plan_iter:
+            s.feed(LogBatch(seq=sq, row0=int(inner.offsets[sq]), data=data))
+            assert s.panes_live <= s.memory_bound
+        return s
+
+    def test_exactly_once_and_bitwise(self):
+        inner = self._store()
+        clean = self._run_plan(
+            inner, ((i, inner.read_split(i)) for i in range(10)))
+        faulty = FaultyStore(inner)
+        deliveries = list(faulty.iter_delivery(seed=42, p_duplicate=0.3,
+                                               max_reorder=3))
+        assert faulty.injected.duplicates > 0
+        assert faulty.injected.reordered > 0
+        s = self._run_plan(inner, iter(deliveries))
+        assert s.counters.folded == 10                   # exactly once
+        assert s.counters.duplicates == faulty.injected.duplicates
+        a, b = clean.report(), s.report()
+        _tree_bitwise(a.thetas, b.thetas)
+        _tree_bitwise(a.estimate, b.estimate)
+        assert a.p_eff == b.p_eff == 1.0
+
+    def test_reorder_buffer_stays_within_memory_bound(self):
+        """Even delivered fully backwards (within the lag budget) the
+        ring obeys its bound — buffered batches are raw rows, pane
+        states only exist for folded panes."""
+        inner = self._store(8)
+        plan = list(range(7, -1, -1))
+        s = self._run_plan(
+            inner, ((i, inner.read_split(i)) for i in plan),
+            policy=LagPolicy(max_lag_batches=16))
+        assert s.counters.folded == 8
+        assert s.counters.reordered == 7
+        clean = self._run_plan(
+            inner, ((i, inner.read_split(i)) for i in range(8)))
+        _tree_bitwise(clean.report().thetas, s.report().thetas)
+
+
+class TestWatermarkAndLate:
+    def _batches(self, n=8):
+        inner = ShardedStore.from_array(
+            np.random.default_rng(9).normal(
+                size=(n * ROWS, 2)).astype(np.float32),
+            ROWS, interleave=False)
+        return inner, [LogBatch(seq=i, row0=i * ROWS,
+                                data=inner.read_split(i))
+                       for i in range(n)]
+
+    def test_gap_skip_charges_invalid_rows(self):
+        _, bs = self._batches()
+        s = LiveSession(None, Mean(), B=B, key=KEY,
+                        policy=LagPolicy(max_lag_batches=3))
+        for b in bs[:2] + bs[3:]:           # seq 2 never arrives
+            s.feed(b)
+        assert s.counters.gaps_skipped == 1
+        assert s.counters.gap_rows == ROWS
+        assert s.counters.folded == 7
+        rep = s.report()
+        assert rep.rows == 8 * ROWS
+        assert rep.valid_rows == 7 * ROWS
+        assert rep.p_eff == pytest.approx(7 / 8)
+        assert rep.watermark_seq == 7
+
+    def test_late_drop_policy(self):
+        _, bs = self._batches()
+        s = LiveSession(None, Mean(), B=B, key=KEY,
+                        policy=LagPolicy(max_lag_batches=3, late="drop"))
+        for b in bs[:2] + bs[3:]:
+            s.feed(b)
+        assert s.feed(bs[2]) == []          # too late: counted, dropped
+        assert s.counters.late_dropped == 1
+        assert s.report().p_eff == pytest.approx(7 / 8)
+
+    def test_late_fold_restores_p_eff(self):
+        _, bs = self._batches()
+        s = LiveSession(None, Mean(), B=B, key=KEY,
+                        policy=LagPolicy(max_lag_batches=3, late="fold"))
+        for b in bs[:2] + bs[3:]:
+            s.feed(b)
+        out = s.feed(bs[2])                 # pane 0 (cumulative) still live
+        assert len(out) == 1
+        assert s.counters.late_folded == 1
+        rep = s.report()
+        assert rep.p_eff == 1.0
+        # all 8 batches contributed; estimate matches clean in-order run
+        # (fold ORDER differs, so this is allclose, not bitwise — the
+        # documented limit of late folding)
+        clean = LiveSession(None, Mean(), B=B, key=KEY)
+        for b in bs:
+            clean.feed(b)
+        np.testing.assert_allclose(np.asarray(rep.estimate),
+                                   np.asarray(clean.report().estimate),
+                                   rtol=1e-5)
+
+    def test_late_fold_into_evicted_pane_drops(self):
+        _, bs = self._batches()
+        s = LiveSession(None, SlidingWindow(Mean(), 64, 32), B=B, key=KEY,
+                        policy=LagPolicy(max_lag_batches=2, late="fold"))
+        for b in bs[:1] + bs[2:]:           # seq 1 lost, window slides on
+            s.feed(b)
+        assert s.feed(bs[1]) == []          # its pane was evicted long ago
+        assert s.counters.late_dropped == 1
+
+    def test_duplicate_after_fold_is_dropped(self):
+        _, bs = self._batches(4)
+        s = LiveSession(None, Mean(), B=B, key=KEY)
+        for b in bs:
+            s.feed(b)
+        before = s.report()
+        assert s.feed(bs[1]) == []
+        assert s.counters.duplicates == 1
+        _tree_bitwise(before.thetas, s.report().thetas)
+
+
+class TestShedding:
+    def test_shed_bitwise_equals_valid_mask_oracle(self):
+        """The acceptance oracle: a backlogged poll sheds early batches
+        with a seeded mask; the emitted thetas/estimate/p_eff must be
+        bitwise equal to folding the SAME masks through
+        ``fused_resample_states(valid_mask=...)`` by hand."""
+        policy = LagPolicy(max_lag_batches=16, shed_backlog=2,
+                           p_shed=0.5, shed_seed=99)
+        window = SlidingWindow(Var(), 128, 32)
+        log = _fill_log(Var(), n=10)
+        s = LiveSession(log, window, B=B, key=KEY, policy=policy)
+        reports = s.poll()
+        assert len(reports) == 10
+        # backlog at fold of seq q is 9-q: seqs 0..6 shed, 7..9 clean
+        assert [r.shed for r in reports] == [True] * 7 + [False] * 3
+        assert s.counters.shed_batches == 7
+        assert s.counters.shed_rows > 0
+        rep = s.report()
+        assert rep.p_eff < 1.0
+
+        # oracle: final window = panes 6..9 = batches 6..9, one pane each
+        stat = window.stat
+        base_seed = seed_from_key(KEY)
+        states = jax.vmap(lambda _: stat.init_state(2))(jnp.arange(B))
+        est = stat.init_state(2)
+        rows = valid = 0
+        for sq in range(6, 10):
+            xb = log.store.read_split(sq)
+            if sq <= 6:
+                rng = np.random.default_rng((99, sq))
+                m = (rng.random(ROWS) < 0.5).astype(np.float32)
+            else:
+                m = np.ones(ROWS, np.float32)
+            est = stat.update(est, xb, m)
+            delta = fused_resample_states(
+                stat, offset_seed(base_seed, jnp.asarray(sq, jnp.int32)),
+                xb, B, valid_mask=m)
+            states = jax.vmap(stat.merge)(states, delta)
+            rows += ROWS
+            valid += int(m.sum())
+        p_eff = valid / rows
+        thetas = stat.correct(jax.vmap(stat.finalize)(states), p_eff)
+        estimate = stat.correct(stat.finalize(est), p_eff)
+        assert rep.p_eff == p_eff
+        _tree_bitwise(rep.thetas, thetas)
+        _tree_bitwise(rep.estimate, estimate)
+
+    def test_shed_deterministic_across_resume(self, tmp_path):
+        """Kill mid-backlog: the resumed poll observes the same log state
+        and re-derives the same (seed, seq)-keyed shed masks — bitwise."""
+        policy = LagPolicy(max_lag_batches=16, shed_backlog=2,
+                           p_shed=0.5, shed_seed=7)
+        base_log = _fill_log(Mean(), n=10)
+        clean = LiveSession(base_log, Mean(), B=B, key=KEY, policy=policy)
+        clean.poll()
+        base = clean.report()
+
+        log = _fill_log(Mean(), n=10)
+        root = str(tmp_path / "ckpt")
+        with pytest.raises(_Kill):
+            LiveSession(log, Mean(), B=B, key=KEY, policy=policy,
+                        checkpoint=_DyingManager(root, 4),
+                        checkpoint_every=1).poll()
+        r = LiveSession(log, Mean(), B=B, key=KEY, policy=policy,
+                        resume=True,
+                        checkpoint=CheckpointManager(root, async_save=False))
+        r.poll()
+        rep = r.report()
+        assert rep.p_eff == base.p_eff
+        assert r.counters.shed_rows == clean.counters.shed_rows
+        _tree_bitwise(base.thetas, rep.thetas)
+        _tree_bitwise(base.estimate, rep.estimate)
+
+
+class TestBackpressure:
+    def test_append_blocks_then_raises(self):
+        log = IngestLog(capacity=2)
+        s = LiveSession(log, Mean(), B=B, key=KEY)
+        log.append(_batch_data(Mean(), 0))
+        log.append(_batch_data(Mean(), 1))
+        with pytest.raises(BackpressureError, match="backlog"):
+            log.append(_batch_data(Mean(), 2), timeout=0.05)
+        s.poll()                            # folds + acks both batches
+        assert log.append(_batch_data(Mean(), 2), timeout=0.05) == 2
+
+    def test_unregistered_log_never_gates(self):
+        log = IngestLog(capacity=1)
+        for i in range(5):                  # no consumers: cannot measure
+            log.append(_batch_data(Mean(), i), timeout=0.01)
+        assert log.next_seq == 5
+
+    def test_capacity_validation(self):
+        with pytest.raises(ValueError, match="capacity"):
+            IngestLog(capacity=0)
+
+
+class TestWindowGeometry:
+    def test_tumbling_is_sliding_with_slide_eq_size(self):
+        w = TumblingWindow(Mean(), 96)
+        assert (w.size, w.slide, w.panes) == (96, 96, 1)
+
+    def test_sliding_panes_and_rows(self):
+        w = SlidingWindow(Mean(), 128, 32)
+        assert w.panes == 4
+        assert w.pane_rows(3) == (96, 128)
+        assert w.pane_of(95) == 2
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="multiple"):
+            SlidingWindow(Mean(), 100, 32)
+        with pytest.raises(ValueError, match="slide"):
+            SlidingWindow(Mean(), 32, 0)
+        with pytest.raises(ValueError, match="size"):
+            SlidingWindow(Mean(), 16, 32)
+        with pytest.raises(TypeError, match="Statistic"):
+            SlidingWindow(object(), 64, 32)
+
+    def test_window_tracks_slide_and_bound(self):
+        """As the stream advances, the report covers exactly the window
+        and the ring holds at most ``panes`` panes."""
+        log = _fill_log(Mean(), n=8)        # 256 rows total
+        s = LiveSession(log, SlidingWindow(Mean(), 128, 32), B=B, key=KEY)
+        reports = s.poll()
+        assert s.memory_bound == 4
+        for r in reports:
+            assert r.panes_live <= 4
+            assert r.window_end - r.window_start <= 128
+        last = reports[-1]
+        assert (last.window_start, last.window_end) == (128, 256)
+        # the window's estimate is the mean of exactly the last 128 rows
+        tail = log.store.read_all()[128:]
+        np.testing.assert_allclose(np.asarray(last.estimate),
+                                   tail.mean(axis=0), rtol=1e-5)
+
+    def test_cumulative_matches_streaming_bootstrap(self):
+        """Cross-layer contract: a cumulative LiveSession over the log is
+        the same estimator as ``bootstrap_streaming`` over the log's
+        store with chunk == batch size — bitwise."""
+        log = _fill_log(Var(), n=N_BATCHES)
+        s = LiveSession(log, Var(), B=B, key=KEY)
+        s.poll()
+        rep = s.report()
+        ref = bootstrap_streaming(log.store, Var(), B=B, key=KEY,
+                                  chunk=ROWS)
+        _tree_bitwise(rep.thetas, ref.thetas)
+        _tree_bitwise(rep.estimate, ref.estimate)
