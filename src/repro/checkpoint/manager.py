@@ -19,6 +19,7 @@ import json
 import os
 import shutil
 import threading
+import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Dict, List, Optional
 
@@ -26,6 +27,12 @@ import jax
 import numpy as np
 
 SEP = "/"
+
+#: a staging dir older than this is reaped even if its pid LOOKS alive —
+#: an in-flight _write is seconds old, so a "live" owner this stale is a
+#: recycled pid, not a peer mid-write (pid reuse would otherwise pin a
+#: crashed writer's garbage forever).
+STALE_TMP_S = 3600.0
 
 
 def _flatten(tree: Any) -> Dict[str, np.ndarray]:
@@ -80,31 +87,56 @@ class CheckpointManager:
         return cls(os.path.join(root, f"run_{fingerprint[:16]}"),
                    keep_last=keep_last, async_save=async_save)
 
-    def _gc_orphans(self) -> None:
-        """Remove ``.tmp_ckpt_*`` staging directories left by a crash during
-        ``_write`` — they were never renamed into place, so they hold no
-        committed checkpoint and would otherwise accumulate forever.
+    @staticmethod
+    def _pid_alive(pid_s: str) -> bool:
+        """Liveness of a pid string from a staging-dir name.  Anything
+        unparseable or out of range has no live owner claim — treating it
+        as dead is what lets GC make progress instead of skipping forever
+        (a huge bogus pid used to raise OverflowError out of listdir)."""
+        try:
+            pid = int(pid_s)
+        except ValueError:
+            return False
+        if pid <= 0:
+            return False
+        try:
+            os.kill(pid, 0)
+        except ProcessLookupError:
+            return False        # owner is gone: orphaned
+        except PermissionError:
+            return True         # pid exists under another uid: assume live
+        except (OverflowError, ValueError):
+            return False        # absurd pid: no live owner claim
+        return True
 
-        Staging names carry the writer's pid (``.tmp_ckpt_<step>.<pid>``);
-        a tmp dir whose writer is still ALIVE belongs to a concurrent peer
-        mid-``_write`` and must not be reaped out from under it.  Suffixless
-        names (the pre-pid format) have no live owner claim and are reaped.
+    def _gc_orphans(self) -> None:
+        """Remove stale write debris: ``.tmp_ckpt_*`` staging directories
+        (a crash during ``_write``) and ``ckpt_*.old.*`` backup directories
+        (a crash during the commit swap).  Neither holds a committed
+        checkpoint, so leftovers would otherwise accumulate forever.
+
+        Both name forms carry the writer's pid; a dir whose writer is
+        still ALIVE belongs to a concurrent peer mid-write and is spared —
+        unless it is older than ``STALE_TMP_S``: an in-flight write is
+        seconds old, so a stale "live" owner is a recycled pid and the dir
+        is reaped (the stale-pid regression, tests/test_checkpoint_ft.py).
+        Suffixless/unparseable names have no live owner claim and are
+        reaped.
         """
         for name in os.listdir(self.root):
-            if not name.startswith(".tmp_ckpt_"):
+            staging = name.startswith(".tmp_ckpt_")
+            backup = name.startswith("ckpt_") and ".old." in name
+            if not (staging or backup):
                 continue
-            pid_s = name.rpartition(".")[2]
-            if pid_s.isdigit():
+            path = os.path.join(self.root, name)
+            if self._pid_alive(name.rpartition(".")[2]):
                 try:
-                    os.kill(int(pid_s), 0)
-                except ProcessLookupError:
-                    pass        # owner is gone: orphaned
-                except PermissionError:
-                    continue    # pid exists under another uid: assume live
-                else:
-                    continue    # owner alive: a live peer's staging dir
-            shutil.rmtree(os.path.join(self.root, name),
-                          ignore_errors=True)
+                    age = time.time() - os.path.getmtime(path)
+                except OSError:
+                    continue    # raced with its owner's rename/cleanup
+                if age < STALE_TMP_S:
+                    continue    # a live peer's in-flight write
+            shutil.rmtree(path, ignore_errors=True)
 
     # -- lifecycle --------------------------------------------------------
     def close(self) -> None:
@@ -134,12 +166,34 @@ class CheckpointManager:
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
         os.makedirs(tmp)
-        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
-        with open(os.path.join(tmp, "meta.json"), "w") as f:
-            json.dump({"step": step, "extra": extra}, f)
+        try:
+            with open(os.path.join(tmp, "arrays.npz"), "wb") as f:
+                np.savez(f, **flat)
+                f.flush()
+                os.fsync(f.fileno())
+            with open(os.path.join(tmp, "meta.json"), "w") as f:
+                json.dump({"step": step, "extra": extra}, f)
+                f.flush()
+                os.fsync(f.fileno())
+        except BaseException:
+            # ENOSPC / partial write: remove the half-written staging dir
+            # and raise loudly.  ``final`` was never touched, so whatever
+            # checkpoint existed before this save is still loadable.
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+        # commit by swap, never by delete-then-rename: if this process
+        # dies between the renames, the old snapshot survives in the
+        # pid-suffixed backup (reaped by _gc_orphans once we are dead)
+        # instead of having been rmtree'd before the new one landed.
+        backup = None
         if os.path.exists(final):
-            shutil.rmtree(final)
+            backup = f"{final}.old.{os.getpid()}"
+            if os.path.exists(backup):
+                shutil.rmtree(backup)
+            os.rename(final, backup)
         os.rename(tmp, final)           # atomic commit
+        if backup is not None:
+            shutil.rmtree(backup, ignore_errors=True)
         self._gc()
         return final
 

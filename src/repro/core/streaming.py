@@ -144,7 +144,8 @@ def _put_until(out_q, item, stop) -> bool:
 
 
 def _stage_batches(store, chunk: int, out_q, timings: dict, stop,
-                   start_row: int = 0) -> None:
+                   start_row: int = 0,
+                   stop_row: Optional[int] = None) -> None:
     """Prefetch-thread body: read → pad → mask → ``device_put`` → enqueue.
 
     ``device_put`` returns as soon as the H2D copy is enqueued, so the
@@ -159,15 +160,25 @@ def _stage_batches(store, chunk: int, out_q, timings: dict, stop,
     padded tail and for rows of splits the resilient read path declared
     lost (``invalid_row_ranges`` — known by yield time, because every
     split feeding a batch is read before the batch is assembled).
+
+    ``stop_row`` bounds the pass to the store's first ``stop_row`` rows
+    (the pinned-extent path over a growing durable log): the stream it
+    yields — chunk boundaries, ragged tail, masks — is exactly what a
+    store holding only those rows would yield, so every bitwise contract
+    downstream is preserved.
     """
     stage_s = 0.0
     try:
         row0 = start_row
         for batch in store.iter_batches(chunk, start_row=start_row):
+            if stop_row is not None and row0 >= stop_row:
+                break
             t0 = time.perf_counter()
             xb = np.asarray(batch, np.float32)
             if xb.ndim == 1:
                 xb = xb[:, None]
+            if stop_row is not None and row0 + len(xb) > stop_row:
+                xb = xb[:stop_row - row0]
             nb = len(xb)
             mask = np.zeros((chunk,), np.float32)
             mask[:nb] = 1.0
@@ -218,7 +229,7 @@ def run_fingerprint(spec, params, *extra: int,
     return h.hexdigest()
 
 
-def store_content_digest(store) -> int:
+def store_content_digest(store, upto_row: Optional[int] = None) -> int:
     """Order-sensitive combination of every split's cached crc32 — the
     opt-in CONTENT half of the resume fingerprint.
 
@@ -226,9 +237,16 @@ def store_content_digest(store) -> int:
     first computation), so this costs one pass over the store the first
     time and nothing after — which is exactly why it is opt-in
     (``fingerprint_content=True``) rather than default: hashing a
-    bigger-than-memory store on every run would defeat streaming."""
+    bigger-than-memory store on every run would defeat streaming.
+
+    ``upto_row`` restricts the digest to the splits that overlap the
+    first ``upto_row`` rows — the pinned-extent path: over an append-only
+    log those splits are immutable, so the digest of a prefix stays
+    stable while the log grows."""
     h = 0
     for s in range(len(store.splits)):
+        if upto_row is not None and int(store.offsets[s]) >= upto_row:
+            break
         h = zlib.crc32(int(store.split_checksum(s)).to_bytes(4, "little"),
                        h)
     return h
@@ -242,7 +260,8 @@ def bootstrap_streaming(store, stat: Statistic, B: int, key: jax.Array,
                         checkpoint=None, checkpoint_every: int = 1,
                         resume: bool = False,
                         retry=None, policy=None,
-                        fingerprint_content: bool = False
+                        fingerprint_content: bool = False,
+                        n_rows: Optional[int] = None
                         ) -> StreamingBootstrapResult:
     """Streamed bootstrap over ``store`` (module docstring for the how).
 
@@ -269,6 +288,15 @@ def bootstrap_streaming(store, stat: Statistic, B: int, key: jax.Array,
     old carry.  Off by default — it costs one full read of the store the
     first time (checksums are cached after that), and both the save and
     the resume must opt in for the fingerprints to match.
+
+    ``n_rows=`` pins the pass to the store's first ``n_rows`` rows — the
+    stable-extent contract over a GROWING log (``IngestLog`` /
+    ``DurableIngestLog``): the result, the fingerprint, the checkpoints
+    and the ``p_eff`` denominator are all those of a store holding
+    exactly those rows, so a resumed run keeps working (bitwise) even if
+    a producer appended more batches in between.  Over an append-only
+    log the pinned prefix is immutable, so ``fingerprint_content=True``
+    composes with it (the digest covers only that prefix).
     """
     if not isinstance(stat, Statistic):
         raise TypeError("stat must be a reduce_api.Statistic")
@@ -288,6 +316,13 @@ def bootstrap_streaming(store, stat: Statistic, B: int, key: jax.Array,
             "(backend='fused_rng') on the materialized sample instead")
     if store.N == 0:
         raise ValueError("bootstrap_streaming needs a non-empty store")
+    if n_rows is None:
+        n_rows = int(store.N)
+    elif not 0 < n_rows <= store.N:
+        raise ValueError(f"n_rows must be in [1, {store.N}] "
+                         f"(the store's current extent), got {n_rows}")
+    else:
+        n_rows = int(n_rows)
     if queue_depth < 1:
         raise ValueError(f"queue_depth must be >= 1, got {queue_depth}")
     if checkpoint_every < 1:
@@ -320,8 +355,9 @@ def bootstrap_streaming(store, stat: Statistic, B: int, key: jax.Array,
     spec, params = split_params(stat)
     base_seed = seed_from_key(key)
     seed_int = int(base_seed)
-    fp = run_fingerprint(spec, params, B, chunk, seed_int, store.N, dim,
-                         content=(store_content_digest(store)
+    fp = run_fingerprint(spec, params, B, chunk, seed_int, n_rows, dim,
+                         content=(store_content_digest(store,
+                                                       upto_row=n_rows)
                                   if fingerprint_content else None))
 
     # Fresh, UNALIASED device buffers for the donated carry: jnp's constant
@@ -366,7 +402,7 @@ def bootstrap_streaming(store, stat: Statistic, B: int, key: jax.Array,
     stop = threading.Event()
     producer = threading.Thread(target=_stage_batches,
                                 args=(reader, chunk, q, timings, stop,
-                                      rows_done),
+                                      rows_done, n_rows),
                                 name="earl-stream-prefetch", daemon=True)
     t_start = time.perf_counter()
     producer.start()
@@ -384,7 +420,7 @@ def bootstrap_streaming(store, stat: Statistic, B: int, key: jax.Array,
             "next_chunk": i, "rows_done": rows_done,
             "valid_rows": valid_rows, "lost_splits": list(lost_now),
             "fingerprint": fp, "B": int(B), "chunk": int(chunk),
-            "base_seed": seed_int, "N": int(store.N)}})
+            "base_seed": seed_int, "N": int(n_rows)}})
 
     try:
         while True:
@@ -438,7 +474,7 @@ def bootstrap_streaming(store, stat: Statistic, B: int, key: jax.Array,
                         | set(getattr(reader, "lost_splits", ()))))
     # the survivors represent p·(valid/N) of the population; with no loss
     # valid == N exactly and this is the plain p (ratio is exactly 1.0).
-    p_eff = p * (valid_rows / store.N)
+    p_eff = p * (valid_rows / n_rows)
     stat = bind_params(spec, params)
     thetas = stat.correct(jax.vmap(stat.finalize)(states), p_eff)
     estimate = stat.correct(stat.finalize(est), p_eff)
@@ -451,7 +487,7 @@ def bootstrap_streaming(store, stat: Statistic, B: int, key: jax.Array,
         stream=StreamReport(wall_s=wall_s,
                             stage_s=timings.get("stage_s", 0.0),
                             wait_s=wait_s, dispatch_s=dispatch_s,
-                            n_chunks=i - start_chunk, rows=int(store.N),
+                            n_chunks=i - start_chunk, rows=int(n_rows),
                             checkpoint_s=ckpt_s, n_checkpoints=n_ckpts,
                             resumed_from_chunk=resumed_from,
                             faults=counters, lost_splits=lost,

@@ -62,11 +62,20 @@ class ShardedStore:
         This is the per-batch integrity oracle the fault-tolerant read path
         (ft/inject.py) validates against: a wrapper that corrupts or
         truncates a read cannot also forge this checksum, because wrappers
-        delegate ``split_checksum`` to the underlying store."""
-        if i not in self._checksums:
-            s = np.ascontiguousarray(self.splits[i])
-            self._checksums[i] = zlib.crc32(s.tobytes())
-        return self._checksums[i]
+        delegate ``split_checksum`` to the underlying store.
+
+        The cache is keyed by split IDENTITY, not index: when
+        ``replace_split`` swaps in a recovered/rewritten segment's bytes,
+        the stale crc must not survive the swap (the cached entry holds a
+        reference to the array it hashed, so the identity check is safe
+        against id() reuse)."""
+        s = self.splits[i]
+        cached = self._checksums.get(i)
+        if cached is not None and cached[0] is s:
+            return cached[1]
+        crc = zlib.crc32(np.ascontiguousarray(s).tobytes())
+        self._checksums[i] = (s, crc)
+        return crc
 
     # -- construction --------------------------------------------------
     @staticmethod
@@ -107,6 +116,24 @@ class ShardedStore:
         self.offsets = np.append(self.offsets, self.N + len(data))
         self.N = int(self.offsets[-1])
         return i
+
+    def replace_split(self, i: int, data: np.ndarray) -> None:
+        """Swap split ``i``'s bytes in place — the repaired-segment path
+        (a batch the durable log degraded to zeros is re-read after its
+        file is restored from a replica).  The geometry is immutable:
+        the replacement must match the split's shape exactly, so offsets
+        and every downstream row placement stay valid.  The checksum
+        cache is identity-keyed, so the new bytes get a fresh crc."""
+        data = np.asarray(data)
+        if data.shape != self.splits[i].shape:
+            raise ValueError(
+                f"replace_split must preserve the split's shape "
+                f"{self.splits[i].shape}, got {data.shape}")
+        if data.dtype != self.splits[i].dtype:
+            raise ValueError(
+                f"replace_split must preserve the split's dtype "
+                f"{self.splits[i].dtype}, got {data.dtype}")
+        self.splits[i] = data
 
     # -- counted reads ---------------------------------------------------
     def read_split(self, i: int) -> np.ndarray:

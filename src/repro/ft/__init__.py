@@ -14,7 +14,8 @@ from repro.ft.recovery import (ShardLossReport, estimate_with_failures,
 from repro.ft.elastic import elastic_restore, mesh_for_devices
 from repro.ft.straggler import DeadlineReducer, StragglerReport
 from repro.ft.inject import (Fault, FaultCounters, FaultExhaustedError,
-                             FaultyStore, ResilientStore, RetryPolicy)
+                             FaultyStore, ResilientStore, RetryPolicy,
+                             bit_flip, enospc_after, torn_write)
 from repro.ft.policy import (CONTINUE, RESTART, ElasticReport,
                              FailurePolicy, LagPolicy, ShardEvents,
                              elastic_estimate)
@@ -23,5 +24,6 @@ __all__ = ["ShardLossReport", "estimate_with_failures", "failure_mask",
            "elastic_restore", "mesh_for_devices", "DeadlineReducer",
            "StragglerReport", "Fault", "FaultCounters",
            "FaultExhaustedError", "FaultyStore", "ResilientStore",
-           "RetryPolicy", "CONTINUE", "RESTART", "ElasticReport",
+           "RetryPolicy", "bit_flip", "enospc_after", "torn_write",
+           "CONTINUE", "RESTART", "ElasticReport",
            "FailurePolicy", "LagPolicy", "ShardEvents", "elastic_estimate"]

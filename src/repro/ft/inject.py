@@ -30,7 +30,10 @@ streaming driver surfaces in its ``StreamReport``.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import errno
+import os
 import time
 import zlib
 from typing import List, Optional, Sequence, Tuple
@@ -239,6 +242,75 @@ class FaultyStore(ShardedStore):
         with delivery faults."""
         for s in self.delivery_plan(seed, p_duplicate, max_reorder):
             yield s, self.read_split(s)
+
+
+# -- disk faults (durable-log path) ---------------------------------------
+# The read-time injectors above corrupt what a SPLIT returns; a durable
+# segment log additionally fails at the FILE layer.  These three injectors
+# produce, deterministically, the exact on-disk images the recovery
+# scanner (live/durable_log.py) must survive.  They damage files — the
+# counters accrue where the damage is *observed*: torn tails count as
+# ``short_reads``, flipped bits as ``checksum_failures`` (caught by the
+# per-record CRC), ENOSPC as ``io_errors``, and a batch degraded to an
+# invalid split as ``splits_lost``.
+
+def torn_write(path: str, keep_bytes: int) -> None:
+    """Truncate ``path`` to its first ``keep_bytes`` bytes — the on-disk
+    image of a producer killed mid-write (or an OS crash dropping the
+    un-fsynced tail of a sealed segment)."""
+    size = os.path.getsize(path)
+    if not 0 <= keep_bytes <= size:
+        raise ValueError(f"keep_bytes must be in [0, {size}], "
+                         f"got {keep_bytes}")
+    with open(path, "r+b") as f:
+        f.truncate(keep_bytes)
+
+
+def bit_flip(path: str, offset: int, mask: int = 0x01) -> None:
+    """XOR one byte of ``path`` with ``mask`` — silent media corruption,
+    caught by the segment format's per-record CRC32 framing."""
+    if not mask & 0xFF:
+        raise ValueError(f"mask must flip at least one bit, got {mask:#x}")
+    size = os.path.getsize(path)
+    if not 0 <= offset < size:
+        raise ValueError(f"offset must be in [0, {size}), got {offset}")
+    with open(path, "r+b") as f:
+        f.seek(offset)
+        b = f.read(1)[0]
+        f.seek(offset)
+        f.write(bytes([b ^ (mask & 0xFF)]))
+
+
+@contextlib.contextmanager
+def enospc_after(nbytes: int):
+    """Within this context the 'disk' accepts ``nbytes`` more segment
+    bytes, then every further write raises ``ENOSPC`` — mid-record if the
+    budget runs out there.  Patches the single write seam all segment
+    bytes funnel through (``live.segment._write``), so the failure mode
+    is exactly a real full disk: a partial staging file (which the
+    writer unlinks — the sealed log stays readable) and a loud OSError.
+    """
+    from repro.live import segment as _segment
+
+    if nbytes < 0:
+        raise ValueError(f"nbytes must be >= 0, got {nbytes}")
+    budget = {"left": int(nbytes)}
+    orig = _segment._write
+
+    def _failing(f, data):
+        take = min(len(data), budget["left"])
+        if take:
+            orig(f, data[:take])
+            budget["left"] -= take
+        if take < len(data):
+            raise OSError(errno.ENOSPC,
+                          "No space left on device (injected)")
+
+    _segment._write = _failing
+    try:
+        yield budget
+    finally:
+        _segment._write = orig
 
 
 class ResilientStore(ShardedStore):

@@ -1,20 +1,31 @@
 """Live ingest: append-only log + standing windowed bootstrap sessions.
 
 The production shape of the paper's incremental-results claim: batches
-arrive continuously (``IngestLog``), one or more standing ``LiveSession``s
-fold each batch into mergeable per-pane states (O(Δn) per arrival, the
-``PoissonDelta`` discipline) and re-emit an accuracy report per batch —
-bounded memory, bounded lag, honest CIs under duplication, reordering,
-loss and load shedding.
+arrive continuously (``IngestLog``, or its crash-safe cross-process
+sibling ``DurableIngestLog`` over on-disk sealed segments), one or more
+standing ``LiveSession``s fold each batch into mergeable per-pane states
+(O(Δn) per arrival, the ``PoissonDelta`` discipline) and re-emit an
+accuracy report per batch — bounded memory, bounded lag, honest CIs
+under duplication, reordering, loss, torn writes and load shedding.
 """
+from repro.live.durable_log import (DurableIngestLog, LogLockedError,
+                                    RecoveryReport)
 from repro.live.log import BackpressureError, IngestLog, LogBatch
+from repro.live.segment import (CorruptSegmentError, SegmentError,
+                                TornSegmentError)
 from repro.live.session import LiveCounters, LiveReport, LiveSession
 
 __all__ = [
     "BackpressureError",
+    "CorruptSegmentError",
+    "DurableIngestLog",
     "IngestLog",
     "LiveCounters",
     "LiveReport",
     "LiveSession",
     "LogBatch",
+    "LogLockedError",
+    "RecoveryReport",
+    "SegmentError",
+    "TornSegmentError",
 ]

@@ -86,8 +86,13 @@ class IngestLog:
         ``timeout`` seconds of no progress raises ``BackpressureError``.
         With no registered consumers the log cannot measure lag and
         appends are never gated.
+
+        The log owns the sealed bytes: ``data`` is copied, so a producer
+        that reuses its staging buffer cannot mutate sealed history (or
+        invalidate cached split checksums) — and a durable log's writer
+        thread can seal the batch to disk after ``append`` returns.
         """
-        data = np.asarray(data, np.float32)
+        data = np.array(data, np.float32, copy=True)
         if data.ndim == 1:
             data = data[:, None]
         with self._cv:
@@ -100,7 +105,27 @@ class IngestLog:
                         f"backlog {self._backlog()} >= capacity "
                         f"{self.capacity} for {timeout}s — consumers are "
                         "not keeping up")
-            return self.store.append_split(data)
+            return self._seal(data)
+
+    def _seal(self, data: np.ndarray) -> int:
+        """Commit one normalized batch as the next split (called under
+        ``_cv``).  ``DurableIngestLog`` overrides this to also hand the
+        batch to its segment writer, keeping the on-disk sealing order
+        identical to the in-memory sequence order."""
+        return self.store.append_split(data)
+
+    def flush(self) -> None:
+        """Durability barrier — a no-op for the in-memory log."""
+
+    def close(self) -> None:
+        """Release producer-side resources — a no-op for the in-memory
+        log (kept so producer code is generic over log kinds)."""
+
+    def __enter__(self) -> "IngestLog":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # -- consumer side --------------------------------------------------
     def register(self, name: str) -> None:

@@ -2,6 +2,7 @@
 recovery with error bounds, straggler deadline, elastic mesh."""
 import os
 import subprocess
+import time
 
 import jax
 import jax.numpy as jnp
@@ -208,6 +209,8 @@ class TestConcurrentManagers:
                          name="var")
         s1.poll()
         s2.poll()
+        s1.checkpoint.wait()             # resume reads COMMITTED snapshots;
+        s2.checkpoint.wait()             # the last async save may be in flight
         assert s1.checkpoint.root != s2.checkpoint.root
         r1 = LiveSession(log, Mean(), B=8, key=key, checkpoint=root,
                          resume=True, name="mean")
@@ -218,6 +221,102 @@ class TestConcurrentManagers:
             a, b = s.report(), r.report()
             np.testing.assert_array_equal(np.asarray(a.estimate),
                                           np.asarray(b.estimate))
+
+
+class TestCheckpointCrashSafety:
+    """Crash-safety hardening: stale-pid orphan GC and ENOSPC-safe save
+    (a failed snapshot must leave the previous checkpoint loadable)."""
+
+    def _state(self, v=1.0):
+        return {"w": jnp.full(4, float(v))}
+
+    def test_stale_live_pid_tmp_dir_is_reaped(self, tmp_path):
+        """Pid recycling: a staging dir whose pid LOOKS alive but whose
+        mtime is hours old is a crashed writer's leftover under a reused
+        pid, not a peer mid-write — it must be reaped (in-flight writes
+        are seconds old)."""
+        from repro.checkpoint.manager import STALE_TMP_S
+
+        stale = tmp_path / f".tmp_ckpt_00000001.{os.getpid()}"
+        stale.mkdir()
+        old = time.time() - STALE_TMP_S - 60.0
+        os.utime(stale, (old, old))
+        fresh = tmp_path / f".tmp_ckpt_00000002.{os.getpid()}"
+        fresh.mkdir()
+        CheckpointManager(str(tmp_path), async_save=False)
+        assert not stale.exists(), "kept a recycled pid's stale staging dir"
+        assert fresh.exists(), "swept a live peer's in-flight save"
+        fresh.rmdir()
+
+    def test_absurd_pid_suffix_is_swept_not_fatal(self, tmp_path):
+        """A staging dir named with a huge bogus pid must be reaped, not
+        raise OverflowError out of the GC sweep."""
+        bogus = tmp_path / ".tmp_ckpt_00000001.99999999999999999999"
+        bogus.mkdir()
+        CheckpointManager(str(tmp_path), async_save=False)
+        assert not bogus.exists()
+
+    def test_crash_mid_swap_backup_is_reaped_and_invisible(self, tmp_path):
+        """A death between the two commit renames leaves the old snapshot
+        as ``ckpt_*.old.<pid>``: steps() must not see it, and a fresh
+        manager must reap it once the writer is dead."""
+        mgr = CheckpointManager(str(tmp_path), async_save=False)
+        mgr.save(1, self._state(1.0))
+        proc = subprocess.Popen(["sleep", "0"])
+        proc.wait()
+        backup = tmp_path / f"ckpt_00000001.old.{proc.pid}"
+        backup.mkdir()
+        (backup / "meta.json").write_text("{}")
+        assert mgr.steps() == [1]            # backups are not checkpoints
+        CheckpointManager(str(tmp_path), async_save=False)
+        assert not backup.exists(), "kept a dead writer's commit backup"
+        restored, _ = mgr.restore(jax.eval_shape(lambda: self._state(0)))
+        assert float(np.asarray(restored["w"])[0]) == 1.0
+
+    def test_enospc_save_raises_and_previous_checkpoint_survives(
+            self, tmp_path, monkeypatch):
+        """A save that dies mid-write (ENOSPC / partial write) must raise
+        loudly, leave no staging debris, and leave the PREVIOUS
+        checkpoint fully loadable."""
+        import errno
+
+        mgr = CheckpointManager(str(tmp_path), async_save=False)
+        mgr.save(1, self._state(1.0))
+
+        def _no_space(*a, **k):
+            raise OSError(errno.ENOSPC, "No space left on device")
+
+        monkeypatch.setattr(np, "savez", _no_space)
+        with pytest.raises(OSError):
+            mgr.save(2, self._state(2.0))
+        monkeypatch.undo()
+
+        assert not [d for d in os.listdir(tmp_path)
+                    if d.startswith(".tmp_ckpt_")], "staging debris left"
+        assert mgr.steps() == [1]
+        restored, _ = mgr.restore(jax.eval_shape(lambda: self._state(0)))
+        assert float(np.asarray(restored["w"])[0]) == 1.0
+        # and the manager is not wedged: the next save commits normally
+        mgr.save(3, self._state(3.0))
+        assert mgr.latest_step() == 3
+
+    def test_enospc_async_save_surfaces_on_wait(self, tmp_path,
+                                                monkeypatch):
+        import errno
+
+        mgr = CheckpointManager(str(tmp_path), async_save=True)
+        mgr.save(1, self._state(1.0))
+        mgr.wait()
+
+        def _no_space(*a, **k):
+            raise OSError(errno.ENOSPC, "No space left on device")
+
+        monkeypatch.setattr(np, "savez", _no_space)
+        mgr.save(2, self._state(2.0))
+        with pytest.raises(OSError):
+            mgr.wait()
+        monkeypatch.undo()
+        assert mgr.steps() == [1]
 
 
 class TestShardLossRecovery:

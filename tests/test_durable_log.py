@@ -1,0 +1,532 @@
+"""Durable segment log robustness (live/segment.py + live/durable_log.py).
+
+The contract under test, bitwise where the promise is bitwise:
+
+* a clean round trip through the on-disk segment format recovers a store
+  bitwise equal to the in-memory ``IngestLog`` fed the same batches,
+  under every fsync policy (which must not change the bytes);
+* producer kill-at-any-byte: truncating the tail segment at EVERY byte
+  offset recovers the surviving prefix bitwise, counts exactly one torn
+  read, and a ``LiveSession`` over the recovered log reproduces the
+  uninterrupted session's reports bitwise;
+* random mid-file bit flips are caught by the per-record CRC framing:
+  recovery truncates at the damaged segment with exact
+  ``FaultCounters`` accounting;
+* ENOSPC mid-append raises loudly, never corrupts the sealed prefix,
+  and the producer resumes after space frees up;
+* one writer per log (pid lock, stale locks reclaimed);
+* a tailing consumer in another process sees every sealed batch exactly
+  once through ``LiveSession``;
+* an unreadable segment under ``FailurePolicy(on_exhausted="degrade")``
+  becomes invalid rows (``p_eff`` drops, the CI widens) instead of
+  killing the session — and ``reload()`` after out-of-band repair swaps
+  the real bytes back in with a FRESH split checksum (the stale-crc
+  cache regression).
+"""
+import os
+import shutil
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.reduce_api import Mean
+from repro.core.streaming import bootstrap_streaming
+from repro.data.store import ShardedStore
+from repro.ft import (FailurePolicy, LagPolicy, bit_flip, enospc_after,
+                      torn_write)
+from repro.live import (CorruptSegmentError, DurableIngestLog, IngestLog,
+                        LiveSession, LogLockedError, SegmentError,
+                        TornSegmentError)
+from repro.live import segment as seg
+
+KEY = jax.random.PRNGKey(29)
+B = 4
+ROWS = 8
+DIM = 2
+N_BATCHES = 4
+
+
+def _batches(n=N_BATCHES, rows=ROWS, dim=DIM, seed=5):
+    rng = np.random.default_rng(seed)
+    return [rng.standard_normal((rows, dim)).astype(np.float32)
+            for _ in range(n)]
+
+
+def _mem_log(batches):
+    log = IngestLog()
+    for b in batches:
+        log.append(b)
+    return log
+
+
+def _write_log(root, batches, fsync="never"):
+    with DurableIngestLog(root, fsync=fsync) as log:
+        for b in batches:
+            log.append(b)
+        log.flush()
+
+
+def _assert_store_bitwise(a, b):
+    assert len(a.splits) == len(b.splits)
+    for i in range(len(a.splits)):
+        assert np.array_equal(np.asarray(a.splits[i]),
+                              np.asarray(b.splits[i])), f"split {i} differs"
+        assert a.split_checksum(i) == b.split_checksum(i)
+
+
+def _session_reports(log):
+    sess = LiveSession(log, Mean(), B=B, key=KEY)
+    return sess.poll()
+
+
+def _assert_reports_bitwise(got, want):
+    assert len(got) == len(want)
+    for g, w in zip(got, want):
+        assert g.seq == w.seq and g.p_eff == w.p_eff
+        assert np.array_equal(np.asarray(g.thetas), np.asarray(w.thetas))
+        assert np.array_equal(np.asarray(g.estimate),
+                              np.asarray(w.estimate))
+
+
+# -- format ------------------------------------------------------------
+
+
+def test_segment_round_trip(tmp_path):
+    data = _batches(1)[0]
+    path = seg.write_segment(str(tmp_path), 7, data, sync=True)
+    assert os.path.basename(path) == "seg_00000007.seg"
+    first_seq, dim, recs = seg.read_segment(path, expect_seq=7,
+                                            expect_dim=DIM)
+    assert (first_seq, dim) == (7, DIM) and len(recs) == 1
+    assert recs[0][0] == 7
+    assert np.array_equal(recs[0][1], data)
+    probe = seg.probe_segment(path)
+    assert probe.ok and probe.rows == ROWS and probe.dim == DIM
+
+
+def test_segment_name_parse():
+    assert seg.parse_segment_name("seg_00000042.seg") == 42
+    for bad in ("seg_.seg", "seg_0001.tmp", "ckpt_0001", "seg_x1.seg"):
+        assert seg.parse_segment_name(bad) is None
+
+
+def test_segment_validation_rejects_wrong_identity(tmp_path):
+    path = seg.write_segment(str(tmp_path), 3, _batches(1)[0])
+    with pytest.raises(CorruptSegmentError):
+        seg.read_segment(path, expect_seq=4)
+    with pytest.raises(CorruptSegmentError):
+        seg.read_segment(path, expect_dim=DIM + 1)
+
+
+# -- clean round trip --------------------------------------------------
+
+
+@pytest.mark.parametrize("fsync", ["never", "batch", "always"])
+def test_durable_append_recover_bitwise(tmp_path, fsync):
+    batches = _batches()
+    root = str(tmp_path / fsync)
+    _write_log(root, batches, fsync=fsync)
+
+    mem = _mem_log(batches)
+    log = DurableIngestLog(root)
+    assert log.recovery.batches == N_BATCHES
+    assert log.recovery.truncated_at is None
+    assert log.next_seq == N_BATCHES
+    assert log.total_rows == mem.total_rows
+    _assert_store_bitwise(log.store, mem.store)
+    # ... and recovery is append-ready: the resumed producer continues
+    # the same log the in-memory oracle would have
+    extra = _batches(1, seed=99)[0]
+    assert log.append(extra) == N_BATCHES
+    log.close()
+    mem.append(extra)
+    log2 = DurableIngestLog(root)
+    _assert_store_bitwise(log2.store, mem.store)
+    log2.close()
+
+
+def test_fsync_policy_does_not_change_bytes(tmp_path):
+    batches = _batches()
+    blobs = {}
+    for fsync in ("never", "batch", "always"):
+        root = str(tmp_path / fsync)
+        _write_log(root, batches, fsync=fsync)
+        blobs[fsync] = [open(os.path.join(root, seg.segment_name(i)),
+                             "rb").read() for i in range(N_BATCHES)]
+    assert blobs["never"] == blobs["batch"] == blobs["always"]
+
+
+def test_read_paths_work_unchanged_over_durable_log(tmp_path):
+    """The recovered log IS a ShardedStore: bootstrap_streaming over it
+    equals the same run over a plain store of the same rows."""
+    batches = _batches()
+    _write_log(str(tmp_path), batches)
+    log = DurableIngestLog(str(tmp_path))
+    r_log = bootstrap_streaming(log.store, Mean(), 16, KEY, chunk=8)
+    r_ref = bootstrap_streaming(ShardedStore([np.array(b) for b in batches]),
+                                Mean(), 16, KEY, chunk=8)
+    assert np.array_equal(np.asarray(r_log.thetas), np.asarray(r_ref.thetas))
+    log.close()
+
+
+def test_append_copies_callers_buffer():
+    """Seal = defensive copy: a producer reusing its staging buffer must
+    not mutate sealed history (or stale its cached checksum)."""
+    buf = np.ones((4, 2), np.float32)
+    mem = IngestLog()
+    mem.append(buf)
+    crc0 = mem.store.split_checksum(0)
+    buf[:] = 7.0
+    assert np.array_equal(mem.store.splits[0], np.ones((4, 2), np.float32))
+    assert mem.store.split_checksum(0) == crc0
+
+
+# -- single writer -----------------------------------------------------
+
+
+def test_writer_lock_exclusive(tmp_path):
+    log = DurableIngestLog(str(tmp_path))
+    with pytest.raises(LogLockedError):
+        DurableIngestLog(str(tmp_path))
+    log.close()
+    DurableIngestLog(str(tmp_path)).close()     # released on close
+
+
+def test_writer_lock_stale_pid_reclaimed(tmp_path):
+    proc = subprocess.Popen(["sleep", "0"])
+    proc.wait()                                  # a pid that is now dead
+    (tmp_path / "writer.lock").write_text(f"{proc.pid}\n")
+    DurableIngestLog(str(tmp_path)).close()
+    (tmp_path / "writer.lock").write_text("not-a-pid\n")
+    DurableIngestLog(str(tmp_path)).close()
+
+
+# -- torn writes: kill at any byte ------------------------------------
+
+
+def test_torn_write_recovery_at_every_byte_offset(tmp_path):
+    """Truncate the tail segment at EVERY byte offset: recovery always
+    truncates to the surviving prefix (bitwise equal to the in-memory
+    log fed the surviving batches, exactly one short_read counted), and
+    a LiveSession over the recovered log reproduces the uninterrupted
+    session's reports bitwise."""
+    batches = _batches()
+    pristine = str(tmp_path / "pristine")
+    _write_log(pristine, batches)
+
+    mem = _mem_log(batches[:-1])                 # the surviving prefix
+    want_reports = _session_reports(mem)
+    tail = seg.segment_name(N_BATCHES - 1)
+    size = os.path.getsize(os.path.join(pristine, tail))
+    assert size == (seg.HEADER_SIZE + seg.REC_HEADER_SIZE
+                    + ROWS * DIM * 4 + 4 + seg.FOOTER_SIZE)
+
+    work = str(tmp_path / "work")
+    for cut in range(size):
+        shutil.rmtree(work, ignore_errors=True)
+        shutil.copytree(pristine, work)
+        torn_write(os.path.join(work, tail), cut)
+        log = DurableIngestLog(work)
+        r = log.recovery
+        assert r.batches == N_BATCHES - 1, f"cut at byte {cut}: {r}"
+        assert r.truncated_at == N_BATCHES - 1 and r.files_dropped == 1
+        assert log.counters.short_reads == 1, f"cut at {cut}: {log.counters}"
+        assert log.counters.checksum_failures == 0
+        _assert_store_bitwise(log.store, mem.store)
+        _assert_reports_bitwise(_session_reports(log), want_reports)
+        # appending resumes at the truncation point, bitwise
+        assert log.append(batches[-1]) == N_BATCHES - 1
+        log.close()
+        full = DurableIngestLog(work)
+        _assert_store_bitwise(full.store, _mem_log(batches).store)
+        full.close()
+
+
+def test_bit_flip_recovery(tmp_path):
+    """Random mid-file bit flips anywhere in the log: recovery truncates
+    at the damaged segment with one checksum_failure counted (a flip
+    never shortens the file, so it must never read as torn)."""
+    batches = _batches()
+    pristine = str(tmp_path / "pristine")
+    _write_log(pristine, batches)
+    sizes = [os.path.getsize(os.path.join(pristine, seg.segment_name(i)))
+             for i in range(N_BATCHES)]
+
+    rng = np.random.default_rng(17)
+    work = str(tmp_path / "work")
+    for _ in range(40):
+        s = int(rng.integers(0, N_BATCHES))
+        off = int(rng.integers(0, sizes[s]))
+        mask = 1 << int(rng.integers(0, 8))
+        shutil.rmtree(work, ignore_errors=True)
+        shutil.copytree(pristine, work)
+        bit_flip(os.path.join(work, seg.segment_name(s)), off, mask)
+        log = DurableIngestLog(work)
+        where = f"seg {s} byte {off} mask {mask:#x}"
+        assert log.recovery.batches == s, where
+        assert log.recovery.truncated_at == s, where
+        assert log.recovery.files_dropped == N_BATCHES - s
+        assert log.counters.checksum_failures == 1, where
+        assert log.counters.short_reads == 0, where
+        _assert_store_bitwise(log.store, _mem_log(batches[:s]).store)
+        log.close()
+
+
+def test_hole_in_sequence_truncates(tmp_path):
+    batches = _batches()
+    _write_log(str(tmp_path), batches)
+    os.unlink(str(tmp_path / seg.segment_name(1)))
+    log = DurableIngestLog(str(tmp_path))
+    assert log.recovery.batches == 1
+    assert log.recovery.truncated_at == 2       # first file dropped
+    assert log.recovery.files_dropped == 2      # seqs 2, 3 unreachable
+    assert "hole at seq 1" in log.recovery.reason
+    _assert_store_bitwise(log.store, _mem_log(batches[:1]).store)
+    log.close()
+
+
+# -- ENOSPC ------------------------------------------------------------
+
+
+def test_enospc_mid_append_is_loud_and_leaves_log_readable(tmp_path):
+    batches = _batches()
+    root = str(tmp_path)
+    log = DurableIngestLog(root, fsync="never")
+    log.append(batches[0])
+    log.flush()
+    with enospc_after(30):                      # dies mid-record
+        log.append(batches[1])
+        with pytest.raises(OSError):
+            log.flush()
+    assert log.counters.io_errors == 1
+    with pytest.raises(OSError):
+        log.close()                             # still loud, but releases
+    # no staging debris, sealed prefix intact and readable
+    assert [n for n in os.listdir(root) if n.startswith(".tmp_seg_")] == []
+    log2 = DurableIngestLog(root)
+    assert log2.recovery.batches == 1
+    _assert_store_bitwise(log2.store, _mem_log(batches[:1]).store)
+    # space freed: the producer resumes where the disk image ends
+    for b in batches[1:]:
+        log2.append(b)
+    log2.close()
+    log3 = DurableIngestLog(root)
+    _assert_store_bitwise(log3.store, _mem_log(batches).store)
+    log3.close()
+
+
+def test_enospc_with_always_policy_raises_from_append(tmp_path):
+    log = DurableIngestLog(str(tmp_path), fsync="always")
+    log.append(_batches(1)[0])
+    with enospc_after(0):
+        with pytest.raises(OSError):
+            log.append(_batches(1, seed=6)[0])
+    with pytest.raises(OSError):
+        log.close()
+    log2 = DurableIngestLog(str(tmp_path))
+    assert log2.recovery.batches == 1
+    log2.close()
+
+
+# -- tailing consumers -------------------------------------------------
+
+
+def test_tail_same_process(tmp_path):
+    """A tail-mode log sees sealed batches as the producer flushes them —
+    and the session over it is bitwise equal to the in-memory one."""
+    batches = _batches(6)
+    root = str(tmp_path)
+    prod = DurableIngestLog(root, fsync="batch", group=2)
+    tail = DurableIngestLog(root, mode="tail")
+    sess = LiveSession(tail, Mean(), B=B, key=KEY)
+    got = []
+    for b in batches:
+        prod.append(b)
+        prod.flush()
+        got.extend(sess.poll())
+    prod.close()
+    assert [r.seq for r in got] == list(range(6))
+    assert sess.counters.folded == 6 and sess.counters.duplicates == 0
+    _assert_reports_bitwise(got, _session_reports(_mem_log(batches)))
+
+
+def test_tail_mode_cannot_append(tmp_path):
+    _write_log(str(tmp_path), _batches())
+    tail = DurableIngestLog(str(tmp_path), mode="tail")
+    with pytest.raises(RuntimeError, match="tail"):
+        tail.append(_batches(1)[0])
+    tail.close()                                 # no-op, no lock held
+
+
+def test_tail_degrade_then_reload(tmp_path):
+    """An unreadable segment under degrade policy becomes invalid rows —
+    p_eff drops by exactly its extent, the session lives — and reload()
+    after repair swaps the real bytes back with a FRESH checksum (the
+    corrupt-then-recover round trip of the split_checksum cache fix)."""
+    batches = _batches(6)
+    root = str(tmp_path)
+    _write_log(root, batches)
+    bad = os.path.join(root, seg.segment_name(2))
+    pristine_bytes = open(bad, "rb").read()
+    bit_flip(bad, seg.HEADER_SIZE + seg.REC_HEADER_SIZE + 5, 0x20)
+
+    tail = DurableIngestLog(root, mode="tail",
+                            policy=FailurePolicy(on_exhausted="degrade"))
+    sess = LiveSession(tail, Mean(), B=B, key=KEY,
+                       policy=LagPolicy(max_lag_batches=1))
+    reports = sess.poll()
+    assert [r.seq for r in reports] == [0, 1, 3, 4, 5]
+    assert tail.lost_seqs == {2}
+    assert tail.counters.checksum_failures == 1
+    assert tail.counters.splits_lost == 1
+    last = reports[-1]
+    assert last.counters.gap_rows == ROWS
+    assert last.p_eff == pytest.approx(5 * ROWS / (6 * ROWS))
+    # the placeholder split is zeros with its own (valid) checksum
+    assert not np.any(tail.store.splits[2])
+    crc_zero = tail.store.split_checksum(2)
+
+    # out-of-band repair: restore the pristine file, reload the batch
+    with open(bad, "wb") as f:
+        f.write(pristine_bytes)
+    tail.reload(2)
+    assert tail.lost_seqs == set()
+    assert np.array_equal(tail.store.splits[2], batches[2])
+    crc_repaired = tail.store.split_checksum(2)
+    assert crc_repaired != crc_zero              # stale-cache regression
+    assert crc_repaired == _mem_log(batches).store.split_checksum(2)
+
+
+def test_tail_raise_policy_is_loud(tmp_path):
+    _write_log(str(tmp_path), _batches())
+    bit_flip(str(tmp_path / seg.segment_name(1)), seg.HEADER_SIZE + 3, 0x01)
+    tail = DurableIngestLog(str(tmp_path), mode="tail")
+    with pytest.raises(SegmentError):
+        tail.next_seq
+
+
+def test_tail_degrade_unknown_extent_stalls(tmp_path):
+    """Damage that destroys the record header leaves the extent unknown:
+    the consumer stops at the batch (no guessing) instead of misplacing
+    every later row."""
+    _write_log(str(tmp_path), _batches())
+    torn_write(str(tmp_path / seg.segment_name(1)), 10)   # header gone
+    tail = DurableIngestLog(str(tmp_path), mode="tail",
+                            policy=FailurePolicy(on_exhausted="degrade"))
+    assert tail.next_seq == 1
+    assert tail.counters.short_reads == 1
+    assert tail.lost_seqs == set()
+
+
+# -- split_checksum identity cache (store-level regression) ------------
+
+
+def test_split_checksum_cache_keyed_by_identity():
+    store = ShardedStore([np.ones((4, 2), np.float32)])
+    crc_a = store.split_checksum(0)
+    assert store.split_checksum(0) == crc_a      # cached
+    store.replace_split(0, np.full((4, 2), 2.0, np.float32))
+    crc_b = store.split_checksum(0)
+    assert crc_b != crc_a                        # the pre-fix stale value
+    import zlib
+    assert crc_b == zlib.crc32(
+        np.ascontiguousarray(np.full((4, 2), 2.0, np.float32)).tobytes())
+
+
+def test_replace_split_preserves_geometry():
+    store = ShardedStore([np.ones((4, 2), np.float32)])
+    with pytest.raises(ValueError, match="shape"):
+        store.replace_split(0, np.ones((5, 2), np.float32))
+    with pytest.raises(ValueError, match="dtype"):
+        store.replace_split(0, np.ones((4, 2), np.float64))
+
+
+# -- cross-process -----------------------------------------------------
+
+_PRODUCER = """
+import sys, time
+import numpy as np
+from repro.live import DurableIngestLog
+
+root, n = sys.argv[1], int(sys.argv[2])
+rng = np.random.default_rng(23)
+with DurableIngestLog(root, fsync="never") as log:
+    for _ in range(n):
+        log.append(rng.standard_normal((16, 2)).astype(np.float32))
+        log.flush()                      # seal before the next sleep
+        time.sleep(0.05)
+print("producer done", log.next_seq)
+"""
+
+_CONSUMER = """
+import sys, time
+import numpy as np
+import jax
+from repro.core.reduce_api import Mean
+from repro.live import DurableIngestLog, LiveSession
+
+root, n, out = sys.argv[1], int(sys.argv[2]), sys.argv[3]
+tail = DurableIngestLog(root, mode="tail")
+sess = LiveSession(tail, Mean(), B=4, key=jax.random.PRNGKey(29))
+seqs = []
+deadline = time.monotonic() + 120.0
+last = None
+while len(seqs) < n:
+    for r in sess.poll():
+        seqs.append(r.seq)
+        last = r
+    if time.monotonic() > deadline:
+        raise SystemExit(f"timed out with {len(seqs)}/{n} batches")
+    time.sleep(0.01)
+np.savez(out, thetas=np.asarray(last.thetas),
+         estimate=np.asarray(last.estimate), seqs=np.asarray(seqs),
+         folded=sess.counters.folded, duplicates=sess.counters.duplicates)
+print("consumer done", seqs)
+"""
+
+
+def test_cross_process_producer_consumer(tmp_path):
+    """A producer process appends while a consumer process tails sealed
+    segments through LiveSession: the consumer folds every sealed batch
+    exactly once, and its final report is bitwise equal to an in-process
+    session over the same batches."""
+    n = 6
+    root = str(tmp_path / "log")
+    out = str(tmp_path / "consumer.npz")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    procs = [
+        subprocess.Popen([sys.executable, "-c", _PRODUCER, root, str(n)],
+                         env=env, stdout=subprocess.PIPE,
+                         stderr=subprocess.STDOUT),
+        subprocess.Popen([sys.executable, "-c", _CONSUMER, root, str(n),
+                          out], env=env, stdout=subprocess.PIPE,
+                         stderr=subprocess.STDOUT),
+    ]
+    logs = []
+    for p in procs:
+        stdout, _ = p.communicate(timeout=180)
+        logs.append(stdout.decode())
+        assert p.returncode == 0, "\n".join(logs)
+
+    got = np.load(out)
+    assert int(got["folded"]) == n
+    assert int(got["duplicates"]) == 0
+    assert list(got["seqs"]) == list(range(n))   # exactly once, in order
+
+    rng = np.random.default_rng(23)              # the producer's stream
+    mem = IngestLog()
+    for _ in range(n):
+        mem.append(rng.standard_normal((16, 2)).astype(np.float32))
+    want = _session_reports_b4(mem)
+    assert np.array_equal(got["thetas"], np.asarray(want[-1].thetas))
+    assert np.array_equal(got["estimate"], np.asarray(want[-1].estimate))
+
+
+def _session_reports_b4(log):
+    sess = LiveSession(log, Mean(), B=4, key=jax.random.PRNGKey(29))
+    return sess.poll()

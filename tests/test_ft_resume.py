@@ -359,3 +359,53 @@ class TestSessionKillResume:
     def test_session_resume_needs_checkpoint(self, store):
         with pytest.raises(ValueError, match="resume"):
             self._session(store).run(jax.random.PRNGKey(0), resume=True)
+
+
+class TestPinnedResumeOverGrowingStore:
+    """``n_rows=`` + ``fingerprint_content=True`` is the durable-ingest
+    resume contract: a pinned run checkpointed mid-stream must resume
+    BITWISE even after the log grew underneath it — the fingerprint binds
+    the pinned prefix (extent + prefix bytes), not the whole store."""
+
+    def test_resume_after_growth_is_bitwise(self, tmp_path):
+        rng = np.random.default_rng(9)
+        splits = [rng.normal(size=(250, 2)).astype(np.float32)
+                  for _ in range(6)]
+        n_rows = 250 * 4                        # pin to the first 4 batches
+
+        base_store = ShardedStore([s.copy() for s in splits[:4]])
+        base = bootstrap_streaming(base_store, Mean(), B=8, key=KEY,
+                                   chunk=CHUNK)
+
+        store = ShardedStore([s.copy() for s in splits[:4]])
+        root = str(tmp_path / "ckpt")
+        with pytest.raises(_Kill):
+            bootstrap_streaming(store, Mean(), B=8, key=KEY, chunk=CHUNK,
+                                n_rows=n_rows, fingerprint_content=True,
+                                checkpoint=_DyingManager(root, 2))
+        for s in splits[4:]:                    # the log grows meanwhile
+            store.append_split(s.copy())
+        r = bootstrap_streaming(store, Mean(), B=8, key=KEY, chunk=CHUNK,
+                                n_rows=n_rows, resume=True,
+                                fingerprint_content=True,
+                                checkpoint=CheckpointManager(
+                                    root, async_save=False))
+        assert r.stream.resumed_from_chunk == 2
+        _tree_bitwise(base.thetas, r.thetas)
+        _tree_bitwise(base.estimate, r.estimate)
+        assert base.n == r.n == n_rows
+
+    def test_fingerprint_binds_the_extent(self, tmp_path):
+        """Resuming with a DIFFERENT n_rows is a different run and must
+        refuse loudly, not silently re-scale the correction."""
+        store = _store_for(Mean())
+        root = str(tmp_path / "ckpt")
+        with pytest.raises(_Kill):
+            bootstrap_streaming(store, Mean(), B=8, key=KEY, chunk=CHUNK,
+                                n_rows=750,
+                                checkpoint=_DyingManager(root, 2))
+        with pytest.raises(ValueError, match="fingerprint mismatch"):
+            bootstrap_streaming(store, Mean(), B=8, key=KEY, chunk=CHUNK,
+                                n_rows=500, resume=True,
+                                checkpoint=CheckpointManager(
+                                    root, async_save=False))

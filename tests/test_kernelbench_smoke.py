@@ -28,7 +28,8 @@ def test_kernelbench_smoke_runs_and_writes_nothing():
               kernelbench._BENCH_QUANTILE_JSON,
               kernelbench._BENCH_MULTI_JSON, kernelbench._BENCH_STREAM_JSON,
               kernelbench._BENCH_GROUPED_JSON, kernelbench._BENCH_FT_JSON,
-              kernelbench._BENCH_LIVE_JSON):
+              kernelbench._BENCH_LIVE_JSON,
+              kernelbench._BENCH_DURABLE_JSON):
         stamps[p] = p.stat().st_mtime_ns if p.exists() else None
 
     kernelbench.run(smoke=True)
@@ -99,4 +100,21 @@ def test_check_regression_gate(tmp_path):
     d["batches_per_sec"] = 500.0
     d["shed_bitwise_equal_to_oracle"] = False
     (cur / "BENCH_live.json").write_text(json.dumps(d))
+    assert check_regression.check(base, cur, 0.5)
+
+    # ISSUE-10 durable-log gates: fsync tax ceiling + recovery invariants
+    shutil.copy(base / "BENCH_live.json", cur / "BENCH_live.json")
+    d = json.loads((cur / "BENCH_durable.json").read_text())
+    d["fsync_tax_batch"] = 1.8                  # above the 1.5 ceiling
+    (cur / "BENCH_durable.json").write_text(json.dumps(d))
+    assert check_regression.check(base, cur, 0.5)
+
+    d["fsync_tax_batch"] = 1.2
+    d["recovery_bitwise_equal"] = False
+    (cur / "BENCH_durable.json").write_text(json.dumps(d))
+    assert check_regression.check(base, cur, 0.5)
+
+    d["recovery_bitwise_equal"] = True
+    d["torn_recovery_ok"] = False
+    (cur / "BENCH_durable.json").write_text(json.dumps(d))
     assert check_regression.check(base, cur, 0.5)

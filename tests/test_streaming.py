@@ -296,3 +296,47 @@ class TestStreamingDeviceFootprint:
                 params, spec, B))(states, est, xi)
         shapes = _walk_shapes(jaxpr.jaxpr, [])
         assert max((max(s) for s in shapes if s), default=0) <= chunk
+
+
+class TestPinnedExtent:
+    """``n_rows=`` pins a pass to the store's first n_rows rows — the
+    stable-prefix contract a growing ingest log (live.DurableIngestLog)
+    needs: the result must be bitwise what a store holding ONLY those
+    rows would produce, and the extent must be validated."""
+
+    KEY = jax.random.PRNGKey(11)
+
+    def test_pinned_run_equals_prefix_store_bitwise(self):
+        rng = np.random.default_rng(4)
+        splits = [rng.normal(size=(64, 3)).astype(np.float32)
+                  for _ in range(6)]
+        grown = ShardedStore([s.copy() for s in splits])
+        n_rows = 64 * 4
+        prefix = ShardedStore([s.copy() for s in splits[:4]])
+        r_pin = bootstrap_streaming(grown, Mean(), B=16, key=self.KEY,
+                                    chunk=100, n_rows=n_rows)
+        r_ref = bootstrap_streaming(prefix, Mean(), B=16, key=self.KEY,
+                                    chunk=100)
+        _tree_bitwise(r_pin.thetas, r_ref.thetas)
+        _tree_bitwise(r_pin.estimate, r_ref.estimate)
+        assert r_pin.n == r_ref.n == n_rows
+        assert r_pin.stream.rows == n_rows
+
+    def test_pin_mid_split_trims_the_straddling_chunk(self):
+        rng = np.random.default_rng(5)
+        data = rng.normal(size=(300, 2)).astype(np.float32)
+        grown = ShardedStore.from_array(data, 128, interleave=False)
+        r_pin = bootstrap_streaming(grown, Mean(), B=8, key=self.KEY,
+                                    chunk=64, n_rows=200)
+        prefix = ShardedStore.from_array(data[:200], 128, interleave=False)
+        r_ref = bootstrap_streaming(prefix, Mean(), B=8, key=self.KEY,
+                                    chunk=64)
+        _tree_bitwise(r_pin.thetas, r_ref.thetas)
+        assert r_pin.n == 200
+
+    def test_n_rows_out_of_range_raises(self):
+        store = _store(n=100, split_size=40)
+        for bad in (0, -1, 101):
+            with pytest.raises(ValueError, match="n_rows"):
+                bootstrap_streaming(store, Mean(), B=8,
+                                    key=self.KEY, chunk=64, n_rows=bad)
